@@ -1,0 +1,29 @@
+"""ANTA architecture-level projection (paper §IV.L follow-on, DESIGN C6):
+every assigned arch mapped onto 1024x1024 analog crossbar tiles."""
+from __future__ import annotations
+
+import time
+
+from repro.configs import ASSIGNED, get_config
+from repro.hwmodel.arch_cost import analyze_arch
+
+
+def main():
+    print("name,us_per_call,derived")
+    for arch in ASSIGNED:
+        t0 = time.perf_counter()
+        c = analyze_arch(get_config(arch))
+        us = (time.perf_counter() - t0) * 1e6
+        print(f"anta/{arch},{us:.0f},"
+              f"tiles={c.tiles}|area_mm2={c.area_mm2:.0f}"
+              f"|util={c.util:.2f}"
+              f"|uJ_tok_inf={c.e_inference_token_uj:.1f}"
+              f"|uJ_tok_train={c.e_train_token_uj:.1f}"
+              f"|fJ_MAC_analog={c.fj_per_mac_analog_only:.1f}"
+              f"|fJ_MAC_total={c.fj_per_mac_inference:.1f}"
+              f"|digital_mac_pct={100 * c.digital_mac_frac:.1f}"
+              f"|x_vs_sram={c.e_sram_token_uj / c.e_inference_token_uj:.0f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""Micro-benchmarks of the crossbar simulation ops (CPU wall-time).
+
+These time the *simulation* throughput (how fast we can run analog-aware
+training on the host), not the modelled hardware — hardware numbers come
+from benchmarks.tables.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (IDEAL, TAOX, AdcConfig, CrossbarConfig,
+                        make_reference, weights_to_conductance)
+from repro.core.xbar_ops import mvm, outer_update, vmm
+
+
+def _time(fn, *args, n=5):
+    jax.block_until_ready(fn(*args))  # compile + warm
+    t0 = time.perf_counter()
+    for _ in range(n):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def main():
+    print("name,us_per_call,derived")
+    key = jax.random.PRNGKey(0)
+    for k, n, b in ((1024, 1024, 64), (2048, 2048, 64), (4096, 4096, 16)):
+        cfg = CrossbarConfig(rows=1024, cols=1024, device=IDEAL,
+                             adc=AdcConfig())
+        w = jax.random.normal(key, (k, n)) / np.sqrt(k)
+        g, ws = weights_to_conductance(w, cfg)
+        ref = make_reference((k, n), cfg)
+        x = jax.random.normal(key, (b, k))
+        d = jax.random.normal(key, (b, n))
+
+        f_vmm = jax.jit(lambda x: vmm(x, g, ref, ws, cfg))
+        us = _time(f_vmm, x)
+        macs = b * k * n
+        print(f"micro/vmm_{k}x{n}_b{b},{us:.0f},"
+              f"sim_gmacs={macs / us / 1e3:.2f}")
+
+        f_mvm = jax.jit(lambda d: mvm(d, g, ref, ws, cfg))
+        us = _time(f_mvm, d)
+        print(f"micro/mvm_{k}x{n}_b{b},{us:.0f},"
+              f"sim_gmacs={macs / us / 1e3:.2f}")
+
+        cfg_t = cfg.replace(device=TAOX)
+        f_upd = jax.jit(lambda g_, x_, d_, key_: outer_update(
+            g_, x_, d_, 0.01, ws, cfg_t, key=key_))
+        us = _time(f_upd, g, x, d, key)
+        print(f"micro/outer_update_{k}x{n}_b{b},{us:.0f},"
+              f"sim_gmacs={macs / us / 1e3:.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,127 @@
+"""Roofline table from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Per (arch x shape x mesh) cell, derive the three terms per device:
+
+    compute_s    = HLO_FLOPs / peak            (197 TFLOP/s bf16, v5e-class)
+    memory_s     = HLO_traffic_bytes / HBM_bw  (819 GB/s)
+    collective_s = link_bytes / ICI_bw         (50 GB/s/link)
+
+HLO quantities come from launch/hlo_analysis.py (loop-corrected, per
+device).  MODEL_FLOPS = 6·N·D (train, dense), 6·N_active·D (MoE), or
+2·N_active·B (decode) — the "useful" fraction of compiled compute.
+Roofline fraction = useful-compute time / bottleneck time.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+from pathlib import Path
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+
+def model_flops(rec: dict) -> float:
+    m = rec["model"]
+    n_act = m["params_active"]
+    tokens = m["seq_len"] * m["global_batch"]
+    if rec["kind"] == "train":
+        return 6.0 * n_act * tokens
+    if rec["kind"] == "prefill":
+        return 2.0 * n_act * tokens
+    return 2.0 * n_act * m["global_batch"]  # decode: one token per row
+
+
+def terms(rec: dict) -> dict:
+    d = rec["devices"]
+    h = rec["hlo"]
+    compute = h["flops"] / PEAK_FLOPS
+    memory = h["traffic_bytes"] / HBM_BW
+    coll = h["collective_bytes"] / ICI_BW
+    # XLA-CPU promotes bf16 matmul partial sums to f32 before their
+    # reduction collective; a TPU lowering keeps them bf16 — adjust.
+    coll_adj = (h["collective_bytes"]
+                - 0.5 * h.get("collective_f32_bytes", 0.0)) / ICI_BW
+    useful = model_flops(rec) / d / PEAK_FLOPS
+    bottleneck = max(compute, memory, coll_adj)
+    dom = ("compute" if bottleneck == compute
+           else "memory" if bottleneck == memory else "collective")
+    return {
+        "compute_s": compute, "memory_s": memory, "collective_s": coll,
+        "collective_adj_s": coll_adj,
+        "dominant": dom,
+        "useful_s": useful,
+        "useful_over_hlo": model_flops(rec) / d / max(h["flops"], 1),
+        "roofline_frac": useful / max(bottleneck, 1e-12),
+        "step_lower_bound_s": bottleneck,
+    }
+
+
+def load(results_dir: str, mesh: str = "single"):
+    out = []
+    for f in sorted(glob.glob(f"{results_dir}/*__{mesh}.json")):
+        rec = json.loads(Path(f).read_text())
+        if rec.get("ok"):
+            rec["terms"] = terms(rec)
+            out.append(rec)
+    return out
+
+
+def suggestion(rec: dict) -> str:
+    t = rec["terms"]
+    if t["dominant"] == "collective":
+        return ("cut TP all-reduce bytes: bf16 collectives + "
+                "Megatron-SP reduce-scatter/all-gather + remat policy that "
+                "does not replay collectives")
+    if t["dominant"] == "memory":
+        if rec["kind"] == "decode":
+            return ("decode is KV/weight-bandwidth bound: quantise cache "
+                    "to int8, widen batch, or shard sequence further")
+        return "fuse epilogues / reduce f32 temps to cut HBM traffic"
+    if t["useful_over_hlo"] < 0.7:
+        return ("compute-bound but inflated vs 6ND: relax remat "
+                "(recompute fraction) or cut attention overfactor")
+    return "near roofline: only kernel-level fusion left"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--results", default="results/dryrun")
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--csv", action="store_true")
+    args = ap.parse_args()
+    recs = load(args.results, args.mesh)
+    if args.csv:
+        print("name,us_per_call,derived")
+        for r in recs:
+            t = r["terms"]
+            name = f"roofline/{r['arch']}/{r['shape']}"
+            derived = (f"compute={t['compute_s']:.3f}s|"
+                       f"memory={t['memory_s']:.3f}s|"
+                       f"coll={t['collective_s']:.3f}s|"
+                       f"coll_bf16adj={t['collective_adj_s']:.3f}s|"
+                       f"dom={t['dominant']}|"
+                       f"frac={t['roofline_frac']:.3f}")
+            print(f"{name},{r.get('compile_s', 0) * 1e6},{derived}")
+        return
+    hdr = (f"{'arch':24s} {'shape':12s} {'compute_s':>10s} "
+           f"{'memory_s':>9s} {'coll_s':>8s} {'adj_s':>8s} "
+           f"{'dominant':>10s} {'useful/hlo':>10s} {'roofline':>9s}")
+    print(hdr)
+    print("-" * len(hdr))
+    for r in recs:
+        t = r["terms"]
+        print(f"{r['arch']:24s} {r['shape']:12s} {t['compute_s']:10.4f} "
+              f"{t['memory_s']:9.4f} {t['collective_s']:8.3f} "
+              f"{t['collective_adj_s']:8.3f} "
+              f"{t['dominant']:>10s} {t['useful_over_hlo']:10.3f} "
+              f"{t['roofline_frac']:9.4f}")
+    print("\nPer-cell 'what would move the dominant term':")
+    for r in recs:
+        print(f"  {r['arch']:24s} {r['shape']:12s} -> {suggestion(r)}")
+
+
+if __name__ == "__main__":
+    main()

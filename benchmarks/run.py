@@ -1,0 +1,64 @@
+"""Benchmark orchestrator: one section per paper table/figure + roofline.
+
+    PYTHONPATH=src python -m benchmarks.run [--fast]
+
+Sections:
+  tables     — paper Tables II-V + §VII headline ratios (hwmodel)
+  accuracy   — Fig. 14 device-model training accuracy (+ Fig. 15 carry)
+  anta       — architecture-level ANTA projection for the model zoo
+  micro      — crossbar-sim op throughput on this host
+  roofline   — dry-run-derived roofline terms (needs results/dryrun)
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import traceback
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--skip", default="",
+                    help="comma-separated sections to skip")
+    args = ap.parse_args(argv)
+    skip = set(args.skip.split(",")) if args.skip else set()
+
+    from . import accuracy, arch_report, micro, tables
+
+    sections = []
+    if "tables" not in skip:
+        sections.append(("tables", tables.main, ()))
+    if "anta" not in skip:
+        sections.append(("anta", arch_report.main, ()))
+    if "micro" not in skip:
+        sections.append(("micro", micro.main, ()))
+    if "accuracy" not in skip:
+        acc_args = ["--fast"] if args.fast else ["--carry"]
+        sections.append(("accuracy", accuracy.main, (acc_args,)))
+    if "roofline" not in skip and os.path.isdir("results/dryrun"):
+        from . import roofline
+        sections.append(
+            ("roofline", roofline.main_csv
+             if hasattr(roofline, "main_csv") else roofline.main, ()))
+
+    failures = 0
+    for name, fn, fargs in sections:
+        print(f"# ==== {name} ====", flush=True)
+        try:
+            if name == "roofline":
+                sys.argv = ["roofline", "--csv"]
+                fn()
+            else:
+                fn(*fargs)
+        except Exception:
+            failures += 1
+            print(f"# section {name} FAILED:")
+            traceback.print_exc()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

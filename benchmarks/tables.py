@@ -1,0 +1,117 @@
+"""Paper tables II-V as benchmarks: model values vs paper values, CSV."""
+from __future__ import annotations
+
+import time
+
+from repro.hwmodel import analog, compare, digital_reram, sram
+from repro.hwmodel.params import NJ, NS, UM
+
+# (name, getter, paper value) triples per table.
+PAPER_TABLE_II = [
+    ("analog/arrays_um2", lambda: analog.array_area() / UM**2, 8600),
+    ("analog/temporal_hv_um2",
+     lambda: analog.temporal_driver_analog_area() / UM**2, 7180),
+    ("analog/voltage_hv_um2",
+     lambda: analog.voltage_driver_analog_area(8) / UM**2, 26000),
+    ("analog/integrators_um2", lambda: analog.integrator_area() / UM**2,
+     6600),
+    ("analog/adcs_um2", lambda: analog.adc_area() / UM**2, 5850),
+    ("analog/routing_um2", lambda: analog.routing_area() / UM**2, 2900),
+    ("digital/reram_1mb_um2", lambda: digital_reram.array_area() / UM**2,
+     76000),
+    ("total/analog_8b_um2", lambda: analog.total_area(8) / UM**2, 75000),
+    ("total/digital_reram_8b_um2",
+     lambda: digital_reram.total_area(8) / UM**2, 137000),
+    ("total/sram_8b_um2", lambda: sram.total_area(8) / UM**2, 836000),
+]
+
+PAPER_TABLE_III = [
+    ("analog/read_temporal_ns",
+     lambda: analog.read_temporal_time(8) / NS, 128),
+    ("analog/read_adc_ns", lambda: analog.read_adc_time(8) / NS, 256),
+    ("analog/write_x4_ns", lambda: analog.write_time(8) / NS, 512),
+    ("sram/read_ns", lambda: sram.read_time() / NS, 4000),
+    ("sram/read_T_ns", lambda: sram.transpose_read_time() / NS, 32000),
+    ("reram/read_ns", lambda: digital_reram.read_time() / NS, 352000),
+    ("reram/write_ns", lambda: digital_reram.write_time() / NS, 328000),
+    ("total/analog_8b_us", lambda: analog.total_latency(8) / (1e3 * NS),
+     1.280),
+    ("total/reram_us", lambda: digital_reram.total_latency() / (1e3 * NS),
+     1335),
+    ("total/sram_us", lambda: sram.total_latency() / (1e3 * NS), 44),
+]
+
+PAPER_TABLE_IV = [
+    ("analog/read_array_nj", lambda: analog.read_array_energy(8) / NJ,
+     0.36),
+    ("analog/write_array_nj", lambda: analog.write_array_energy(8) / NJ,
+     1.66),
+    ("analog/integrator_nj", lambda: analog.integrator_energy(8) / NJ,
+     2.81),
+    ("analog/adc_nj", lambda: analog.adc_energy(8) / NJ, 9.4),
+    ("sram/read_nj", lambda: sram.read_energy() / NJ, 3.0),
+    ("reram/read_nj", lambda: digital_reram.read_energy() / NJ, 208),
+    ("reram/write_nj", lambda: digital_reram.write_energy() / NJ, 676),
+    ("mac_1m_nj", lambda: digital_reram.mac_energy_total(8) / NJ, 1500),
+    ("total/analog_8b_nj", lambda: analog.total_energy(8) / NJ, 28),
+    ("total/reram_8b_nj", lambda: digital_reram.total_energy(8) / NJ,
+     7520),
+    ("total/sram_8b_nj", lambda: sram.total_energy(8) / NJ, 8800),
+]
+
+
+def run_table(rows, table_name: str) -> list:
+    out = []
+    for name, fn, paper in rows:
+        t0 = time.perf_counter()
+        val = float(fn())
+        us = (time.perf_counter() - t0) * 1e6
+        ratio = val / paper if paper else float("nan")
+        out.append((f"{table_name}/{name}", us, f"{val:.4g}",
+                    f"{paper:.4g}", f"{ratio:.3f}"))
+    return out
+
+
+def run_table_v() -> list:
+    out = []
+    t0 = time.perf_counter()
+    t = compare.table_kernels()
+    h = compare.headline()
+    us = (time.perf_counter() - t0) * 1e6
+    paper_v = {
+        "analog/vmm/energy_nj": 12.8, "analog/mvm/energy_nj": 12.8,
+        "analog/opu/energy_nj": 2.2, "analog/vmm/latency_us": 0.384,
+        "analog/opu/latency_us": 0.512,
+        "digital_reram/vmm/energy_nj": 2140,
+        "digital_reram/opu/energy_nj": 3250,
+        "sram/vmm/energy_nj": 2570, "sram/mvm/energy_nj": 2590,
+        "sram/opu/energy_nj": 3640,
+    }
+    for k, paper in paper_v.items():
+        out.append((f"tableV/{k}", us / len(paper_v), f"{t[k]:.4g}",
+                    f"{paper:.4g}", f"{t[k] / paper:.3f}"))
+    paper_h = {
+        "energy_vs_digital_reram": 270, "energy_vs_sram": 310,
+        "latency_vs_digital_reram": 1040, "latency_vs_sram": 34,
+        "area_vs_digital_reram": 1.8, "area_vs_sram": 11,
+        "analog_fj_per_mac": 11,
+    }
+    for k, paper in paper_h.items():
+        out.append((f"headline/{k}", 0.0, f"{h[k]:.4g}", f"{paper:.4g}",
+                    f"{h[k] / paper:.3f}"))
+    return out
+
+
+def main():
+    print("name,us_per_call,derived,paper,model_over_paper")
+    for rows, nm in ((PAPER_TABLE_II, "tableII"),
+                     (PAPER_TABLE_III, "tableIII"),
+                     (PAPER_TABLE_IV, "tableIV")):
+        for row in run_table(rows, nm):
+            print(",".join(str(x) for x in row))
+    for row in run_table_v():
+        print(",".join(str(x) for x in row))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+#!/usr/bin/env python
+"""What would each assigned architecture cost on the paper's analog
+accelerator?  (paper §IV.L follow-on — DESIGN.md C6)
+
+    PYTHONPATH=src python examples/hw_report.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.configs import ASSIGNED, get_config  # noqa: E402
+from repro.hwmodel.arch_cost import analyze_arch  # noqa: E402
+
+
+def main():
+    hdr = (f"{'arch':24s} {'xbar tiles':>10s} {'area mm2':>9s} "
+           f"{'util':>5s} {'uJ/tok':>8s} {'fJ/MAC(analog)':>14s} "
+           f"{'fJ/MAC(total)':>13s} {'digital MACs':>12s} {'vs SRAM':>8s}")
+    print(hdr)
+    print("-" * len(hdr))
+    for arch in ASSIGNED:
+        c = analyze_arch(get_config(arch))
+        print(f"{c.arch:24s} {c.tiles:10d} {c.area_mm2:9.0f} "
+              f"{c.util:5.2f} {c.e_inference_token_uj:8.1f} "
+              f"{c.fj_per_mac_analog_only:14.1f} "
+              f"{c.fj_per_mac_inference:13.1f} "
+              f"{100 * c.digital_mac_frac:11.1f}% "
+              f"{c.e_sram_token_uj / c.e_inference_token_uj:7.0f}x")
+    print("""
+Findings (paper §IV.L extended to modern architectures):
+ * the kernel-level ~12 fJ/MAC holds at whole-model scale for the
+   weight-stationary projections of every architecture;
+ * total efficiency is Amdahl-limited by the non-weight-stationary MACs
+   (attention QK^T/PV at 1.46 pJ on the digital core): at 4k context they
+   are 8-40% of MACs but >90% of energy for attention-heavy models;
+ * state-space models (mamba2, zamba2) are the best analog hosts: <4%
+   digital MACs -> ~65 fJ/MAC end to end, 30-40x over an SRAM core.""")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+#!/usr/bin/env python
+"""Quickstart: the paper's experiment in 3 minutes.
+
+Trains the 784-300-10 MLP (paper §VI) three ways on the synthetic digit
+set: numeric fp32, analog TaOx crossbar (nonlinear+asymmetric+stochastic
+writes), and analog TaOx with periodic carry — reproducing the Fig. 14/15
+result that write nonlinearity destroys training and periodic carry
+restores it.
+
+    PYTHONPATH=src python examples/quickstart.py [--full]
+"""
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.train.mlp_analog import MLPRun, train_mlp  # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="full 4-epoch protocol (paper-grade, ~15 min)")
+    args = ap.parse_args()
+    kw = {} if args.full else dict(epochs=1, n_train=4000, n_test=1000)
+
+    print("=== numeric (fp32 SGD) ===")
+    numeric = train_mlp(MLPRun(mode="numeric", **kw))["final"]
+    print("=== analog TaOx (nonlinear + asymmetric + stochastic) ===")
+    taox = train_mlp(MLPRun(mode="analog", device="taox", **kw))["final"]
+    print("=== analog TaOx + periodic carry ===")
+    pc = train_mlp(MLPRun(mode="pc", device="taox", **kw))["final"]
+
+    print(f"\nnumeric {numeric:.3f} | analog TaOx {taox:.3f} "
+          f"| + periodic carry {pc:.3f}")
+    print("paper claim: TaOx nonlinearity degrades training badly; "
+          "periodic carry recovers to ~numeric.  "
+          f"{'REPRODUCED' if pc > taox + 0.1 and numeric > taox + 0.1 else 'inconclusive at this budget — rerun with --full'}")
+
+
+if __name__ == "__main__":
+    main()

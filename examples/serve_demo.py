@@ -1,0 +1,20 @@
+#!/usr/bin/env python
+"""Batched serving demo: prefill + KV-cache decode with the Engine.
+
+    PYTHONPATH=src python examples/serve_demo.py --arch gemma-2b
+(uses the reduced smoke config of the chosen arch so it runs on CPU;
+the full configs are exercised by the serve_step dry-run cells)
+"""
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.launch.serve import main as serve_main  # noqa: E402
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma-2b")
+    args, _ = ap.parse_known_args()
+    serve_main(["--arch", args.arch, "--smoke", "--batch", "4",
+                "--max-new", "24", "--temperature", "0.7"])

@@ -1,0 +1,45 @@
+#!/usr/bin/env python
+"""End-to-end driver: train a ~100M-parameter dense LM for a few hundred
+steps on the synthetic Markov token stream, with checkpointing and
+(optionally) analog-crossbar projection semantics.
+
+    PYTHONPATH=src python examples/train_lm.py               # ~15M, quick
+    PYTHONPATH=src python examples/train_lm.py --full-100m   # lm100m config
+    PYTHONPATH=src python examples/train_lm.py --analog      # crossbar mode
+
+Kill and rerun with --ckpt-dir to exercise restart; change --mesh between
+runs to exercise elastic re-sharding (needs host-device override).
+"""
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.launch.train import main as train_main  # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full-100m", action="store_true")
+    ap.add_argument("--analog", action="store_true")
+    ap.add_argument("--steps", type=int, default=None)
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args()
+
+    argv = ["--arch", "lm100m"]
+    if args.full_100m:
+        argv += ["--steps", str(args.steps or 200), "--seq-len", "128",
+                 "--global-batch", "4"]
+    else:
+        # ~15M-param reduction: fast on 1 CPU core
+        argv += ["--smoke", "--steps", str(args.steps or 300),
+                 "--seq-len", "128", "--global-batch", "8"]
+    if args.analog:
+        argv += ["--analog"]
+    if args.ckpt_dir:
+        argv += ["--ckpt-dir", args.ckpt_dir]
+    train_main(argv)
+
+
+if __name__ == "__main__":
+    main()

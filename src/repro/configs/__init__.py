@@ -1,0 +1,8 @@
+"""Architecture configs (--arch <id>)."""
+from .base import (SHAPE_BY_NAME, SHAPES, ModelConfig, ShapeSpec,
+                   applicable_shapes, make_smoke)
+from .registry import ARCHS, ASSIGNED, get_config
+
+__all__ = ["ModelConfig", "ShapeSpec", "SHAPES", "SHAPE_BY_NAME",
+           "applicable_shapes", "make_smoke", "ARCHS", "ASSIGNED",
+           "get_config"]

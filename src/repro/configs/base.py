@@ -1,0 +1,198 @@
+"""Model + shape configuration schema.
+
+One ``ModelConfig`` describes any architecture in the assigned pool (dense /
+MoE / MLA / VLM / enc-dec audio / SSM / hybrid).  Every config file exports
+``CONFIG`` (the full published architecture) and ``SMOKE`` (a reduced
+family-preserving config for CPU tests).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                    # dense | moe | vlm | audio | hybrid | ssm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0              # 0 -> d_model // n_heads
+    act: str = "silu"              # silu | gelu
+    gated: bool = True             # GLU-style FFN (SwiGLU/GeGLU)
+    norm_eps: float = 1e-5
+    rope_theta: float = 10000.0
+    tie_embeddings: bool = False
+    dtype: str = "bfloat16"
+
+    # --- MoE ---------------------------------------------------------------
+    n_experts: int = 0
+    top_k: int = 0
+    n_shared_experts: int = 0
+    d_ff_expert: int = 0
+    capacity_factor: float = 1.25
+
+    # --- MLA (DeepSeek-V2) ---------------------------------------------------
+    use_mla: bool = False
+    kv_lora_rank: int = 0
+    qk_rope_dim: int = 64
+    qk_nope_dim: int = 128
+    v_head_dim: int = 128
+
+    # --- cross-attention (VLM decoder) --------------------------------------
+    cross_attn_every: int = 0      # every Nth layer is a cross-attn layer
+    n_vision_tokens: int = 0       # stub frontend tokens per image
+
+    # --- encoder-decoder (audio) ---------------------------------------------
+    n_encoder_layers: int = 0
+    n_audio_frames: int = 0        # stub conv-frontend output frames
+
+    # --- SSM (Mamba-2 SSD) ---------------------------------------------------
+    ssm_state: int = 0
+    ssm_head_dim: int = 64
+    ssm_expand: int = 2
+    ssm_chunk: int = 128
+    ssm_conv: int = 4
+    ssm_groups: int = 1
+
+    # --- hybrid (Zamba-2): shared attention block every N ssm layers ---------
+    attn_every: int = 0
+
+    # --- analog-crossbar execution (the paper's technique) -------------------
+    analog: bool = False           # run projections through the crossbar sim
+    analog_rows: int = 1024
+    analog_cols: int = 1024
+    analog_in_bits: int = 8
+    analog_out_bits: int = 8
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """Eligible for the 500k-token long-context shape."""
+        return self.family in ("ssm", "hybrid")
+
+    @property
+    def has_encoder(self) -> bool:
+        return self.n_encoder_layers > 0
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    # Rough parameter count (embedding + layers), for roofline MODEL_FLOPS.
+    def param_count(self, active_only: bool = False) -> int:
+        d, ff, v = self.d_model, self.d_ff, self.vocab
+        hd = self.resolved_head_dim
+        emb = v * d * (1 if self.tie_embeddings else 2)
+        if self.family in ("ssm", "hybrid"):
+            d_in = self.ssm_expand * d
+            per = (d * (2 * d_in + 2 * self.ssm_groups * self.ssm_state
+                        + d_in // self.ssm_head_dim)
+                   + d_in * d)
+            n = emb + self.n_layers * per
+            if self.attn_every:  # zamba2 shared block (one weight set)
+                shared_attn = d * hd * (self.n_heads
+                                        + 2 * self.n_kv_heads) \
+                    + self.n_heads * hd * d
+                ffn_mult = 3 if self.gated else 2
+                n += 2 * d * d + shared_attn + ffn_mult * d * ff
+            return n
+        # attention projections
+        if self.use_mla:
+            q = d * self.n_heads * (self.qk_nope_dim + self.qk_rope_dim)
+            kv = (d * (self.kv_lora_rank + self.qk_rope_dim)
+                  + self.kv_lora_rank * self.n_heads
+                  * (self.qk_nope_dim + self.v_head_dim))
+            o = self.n_heads * self.v_head_dim * d
+            attn = q + kv + o
+        else:
+            attn = d * hd * (self.n_heads + 2 * self.n_kv_heads) \
+                + self.n_heads * hd * d
+        ffn_mult = 3 if self.gated else 2
+        if self.n_experts:
+            ffe = self.d_ff_expert or ff
+            n_ffn = (self.top_k if active_only else self.n_experts) \
+                + self.n_shared_experts
+            per = attn + n_ffn * ffn_mult * d * ffe \
+                + d * self.n_experts  # + router
+        else:
+            per = attn + ffn_mult * d * ff
+        n = self.n_layers * per
+        if self.cross_attn_every:
+            n_cross = self.n_layers // self.cross_attn_every
+            n += n_cross * (d * hd * (self.n_heads + 2 * self.n_kv_heads)
+                            + self.n_heads * hd * d)
+        if self.n_encoder_layers:
+            n += self.n_encoder_layers * (attn + ffn_mult * d * ff)
+        return emb + n
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    """One cell of the assigned (arch x shape) grid."""
+
+    name: str                      # train_4k | prefill_32k | decode_32k | ...
+    kind: str                      # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+SHAPES: Tuple[ShapeSpec, ...] = (
+    ShapeSpec("train_4k", "train", 4096, 256),
+    ShapeSpec("prefill_32k", "prefill", 32768, 32),
+    ShapeSpec("decode_32k", "decode", 32768, 128),
+    ShapeSpec("long_500k", "decode", 524288, 1),
+)
+
+SHAPE_BY_NAME = {s.name: s for s in SHAPES}
+
+
+def applicable_shapes(cfg: ModelConfig):
+    """The shape grid minus spec'd skips (full-attention archs skip 500k)."""
+    out = []
+    for s in SHAPES:
+        if s.name == "long_500k" and not cfg.sub_quadratic:
+            continue  # noted in DESIGN.md §5
+        out.append(s)
+    return out
+
+
+def make_smoke(cfg: ModelConfig, **overrides) -> ModelConfig:
+    """Family-preserving reduction for CPU smoke tests."""
+    kw = dict(
+        n_layers=min(cfg.n_layers, 4 if (cfg.cross_attn_every
+                                         or cfg.attn_every) else 2),
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=min(cfg.n_kv_heads, 4) if cfg.n_kv_heads > 1 else 1,
+        head_dim=16,
+        d_ff=128,
+        vocab=256,
+    )
+    if cfg.n_experts:
+        kw.update(n_experts=min(cfg.n_experts, 8),
+                  top_k=min(cfg.top_k, 2),
+                  d_ff_expert=64 if cfg.d_ff_expert else 0)
+    if cfg.use_mla:
+        kw.update(kv_lora_rank=32, qk_rope_dim=8, qk_nope_dim=16,
+                  v_head_dim=16)
+    if cfg.cross_attn_every:
+        kw.update(cross_attn_every=2, n_vision_tokens=16)
+    if cfg.n_encoder_layers:
+        kw.update(n_encoder_layers=2, n_audio_frames=32)
+    if cfg.ssm_state:
+        kw.update(ssm_state=16, ssm_head_dim=16, ssm_chunk=16)
+    if cfg.attn_every:
+        kw.update(attn_every=2)
+    kw.update(overrides)
+    return cfg.replace(**kw)

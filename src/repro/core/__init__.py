@@ -1,0 +1,25 @@
+"""Core analog-crossbar library: the paper's contribution as JAX modules."""
+from .adc import AdcConfig, adc_quantize, integrator_saturation, quantize_input
+from .analog_linear import (analog_linear_apply, analog_linear_init,
+                            analog_linear_readout)
+from .crossbar import (CrossbarConfig, conductance_to_weights, make_reference,
+                       pad_to_tiles, tile_grid, weights_to_conductance)
+from . import endurance
+from .device import (IDEAL, LINEARIZED, TAOX, TAOX_NONOISE, DeviceConfig,
+                     LutDevice, VoltageModel, apply_update,
+                     lut_from_analytic, lut_from_pulse_train)
+from .periodic_carry import (pc_backward, pc_carry, pc_effective_weights,
+                             pc_forward, pc_init, pc_update)
+from .xbar_ops import mvm, outer_update, quantize_update_operands, vmm
+
+__all__ = [
+    "endurance", "AdcConfig", "CrossbarConfig", "DeviceConfig", "LutDevice",
+    "VoltageModel", "IDEAL", "TAOX", "TAOX_NONOISE", "LINEARIZED",
+    "adc_quantize", "integrator_saturation", "quantize_input",
+    "analog_linear_apply", "analog_linear_init", "analog_linear_readout",
+    "conductance_to_weights", "weights_to_conductance", "make_reference",
+    "pad_to_tiles", "tile_grid", "apply_update", "lut_from_analytic",
+    "lut_from_pulse_train", "vmm", "mvm", "outer_update",
+    "quantize_update_operands", "pc_init", "pc_forward", "pc_backward",
+    "pc_update", "pc_carry", "pc_effective_weights",
+]

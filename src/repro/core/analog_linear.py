@@ -1,0 +1,103 @@
+"""AnalogLinear: a linear layer that *executes on the simulated crossbar*.
+
+Forward   = VMM through the analog array (quantised, saturated, ADC'd).
+Backward  = MVM (transpose read) through the SAME array — the defining
+            property of analog in-situ training: the backward pass sees the
+            identical (noisy, drifted) conductances as the forward pass.
+Gradient  = the outer-product the write drivers would apply, expressed in
+            conductance units, so that ``analog_sgd`` (train/optimizer.py)
+            can push it through the device model — or any standard JAX
+            optimizer can consume it for hybrid digital/analog schemes.
+
+The layer is a plain function + parameter pytree (no framework dependency):
+
+    params = analog_linear_init(key, k, n, cfg)
+    y      = analog_linear_apply(params, x, cfg, noise_key)
+
+``noise_key`` drives read noise / stochastic rounding; pass ``None`` for the
+deterministic configs.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .crossbar import CrossbarConfig, make_reference, weights_to_conductance
+from .xbar_ops import mvm, quantize_update_operands, vmm
+
+Array = jax.Array
+
+
+def analog_linear_init(key: Array, k: int, n: int, cfg: CrossbarConfig,
+                       w_init_scale: float = 1.0,
+                       w_max: Optional[float] = None) -> dict:
+    """Initialise weights digitally, then program the array.
+
+    ``w_max`` fixes the weight<->conductance scale; defaults to 8 sigma of
+    the init distribution — trained weights typically grow to several times
+    their initial scale, and the window must accommodate that without
+    rail-pinning.
+    """
+    wkey, rkey = jax.random.split(key)
+    std = w_init_scale / np.sqrt(k)
+    w = std * jax.random.normal(wkey, (k, n), dtype=jnp.float32)
+    if w_max is None:
+        w_max = 8.0 * std
+    g, w_scale = weights_to_conductance(w, cfg, w_max=w_max)
+    ref = make_reference((k, n), cfg,
+                         key=rkey if cfg.ref_sigma > 0 else None)
+    return {"g": g, "ref": ref, "w_scale": w_scale}
+
+
+from functools import partial
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(5,))
+def _analog_matmul(g: Array, ref: Array, w_scale: Array, x: Array,
+                   key: Array, cfg: CrossbarConfig) -> Array:
+    return vmm(x, g, ref, w_scale, cfg, key=key)
+
+
+def _fwd(g, ref, w_scale, x, key, cfg):
+    kf, kb = jax.random.split(key)
+    y = vmm(x, g, ref, w_scale, cfg, key=kf)
+    return y, (g, ref, w_scale, x, kb)
+
+
+def _bwd(cfg, res, dy):
+    g, ref, w_scale, x, kb = res
+    # Error backpropagation through the transpose read of the same array.
+    dx = mvm(dy, g, ref, w_scale, cfg, key=kb)
+    # The gradient the write drivers realise: quantised operands, outer
+    # product.  Reported in *weight* units (dL/dW = x^T dy) so learning
+    # rates are directly comparable with a digital baseline; the analog
+    # optimizer converts to a conductance request via dG_req = ΔW·w_scale.
+    x_q, d_q = quantize_update_operands(x.astype(jnp.float32),
+                                        dy.astype(jnp.float32), cfg)
+    dg = jnp.einsum("bk,bn->kn", x_q, d_q)
+    zero_key = np.zeros((2,), dtype=jax.dtypes.float0)
+    return (dg.astype(g.dtype), jnp.zeros_like(ref),
+            jnp.zeros_like(w_scale), dx.astype(x.dtype), zero_key)
+
+
+_analog_matmul.defvjp(_fwd, _bwd)
+
+
+def analog_linear_apply(params: dict, x: Array, cfg: CrossbarConfig,
+                        key: Optional[Array] = None) -> Array:
+    """Apply the analog layer to activations of shape (..., K)."""
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    lead = x.shape[:-1]
+    xb = x.reshape(-1, x.shape[-1])
+    y = _analog_matmul(params["g"], params["ref"], params["w_scale"], xb,
+                       key, cfg)
+    return y.reshape(*lead, -1)
+
+
+def analog_linear_readout(params: dict, cfg: CrossbarConfig) -> Array:
+    """Digital serial read of the programmed weights (paper §III.D)."""
+    return (params["g"] - params["ref"]) / params["w_scale"]

@@ -1,0 +1,110 @@
+"""Crossbar weight <-> conductance mapping and tiling (paper §III).
+
+Signed weights on unipolar conductances (paper §III.A.1, Fig. 4): the array
+of trained devices is paired with a *reference* array initialised to the
+midpoint of the conductance window; the read drives the reference with the
+opposite-polarity pulse so the integrator sees
+
+    q_j = sum_i x_i (G_ij - G_ref_ij).
+
+Weight w maps to G = G_mid + w * w_scale with the usable swing being half
+the window on each side.  Reference-array variability becomes a per-weight
+zero-point shift (paper: "can be ... considered part of the random
+initialization of the weights"), which we model with ``ref_sigma``.
+
+Matrices larger than the physical array are tiled onto a grid of
+``rows x cols`` crossbars; each tile has its own integrator/ADC, and tile
+partial sums are accumulated *digitally* — this per-tile quantisation
+boundary is what makes multi-tile analog matmul different from one big
+quantised GEMM, and it is modelled faithfully here.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .adc import AdcConfig
+from .device import DeviceConfig, TAOX
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class CrossbarConfig:
+    """Static description of the analog tile + its I/O path."""
+
+    rows: int = 1024
+    cols: int = 1024
+    adc: AdcConfig = dataclasses.field(default_factory=AdcConfig)
+    device: DeviceConfig = dataclasses.field(default_factory=lambda: TAOX)
+    # Std-dev of reference-array conductance around the midpoint (normalised
+    # units).  0 disables the zero-point offsets.
+    ref_sigma: float = 0.0
+    # Voltage-coding precision of the column write driver (paper §IV.C:
+    # 4 bits = 3 magnitude + 1 sign for the 8-bit variant; 2 bits for the
+    # 2/4-bit variants).
+    upd_col_bits: int = 4
+
+    def replace(self, **kw) -> "CrossbarConfig":
+        return dataclasses.replace(self, **kw)
+
+    @property
+    def g_mid(self) -> float:
+        return 0.5 * (self.device.gmin + self.device.gmax)
+
+    @property
+    def w_swing(self) -> float:
+        """Max |w| in conductance units (half window)."""
+        return 0.5 * (self.device.gmax - self.device.gmin)
+
+
+def weights_to_conductance(w: Array, cfg: CrossbarConfig,
+                           w_max: Optional[float] = None
+                           ) -> Tuple[Array, Array]:
+    """Map float weights onto the conductance window.
+
+    Returns ``(g, w_scale)`` with ``w ≈ (g - g_mid) / w_scale`` and
+    ``w_scale = w_swing / w_max``.  ``w_max`` defaults to ``max |w|`` —
+    a one-time digital calibration when the array is programmed.
+    """
+    if w_max is None:
+        w_max = jnp.maximum(jnp.max(jnp.abs(w)), 1e-12)
+    w_scale = cfg.w_swing / w_max
+    g = cfg.g_mid + jnp.clip(w * w_scale, -cfg.w_swing, cfg.w_swing)
+    return g, jnp.asarray(w_scale, dtype=w.dtype)
+
+
+def conductance_to_weights(g: Array, w_scale: Array,
+                           cfg: CrossbarConfig) -> Array:
+    return (g - cfg.g_mid) / w_scale
+
+
+def make_reference(shape: Tuple[int, ...], cfg: CrossbarConfig,
+                   key: Optional[Array] = None) -> Array:
+    """Reference array conductances (midpoint + optional variability)."""
+    ref = jnp.full(shape, cfg.g_mid, dtype=jnp.float32)
+    if cfg.ref_sigma > 0.0:
+        if key is None:
+            raise ValueError("ref_sigma > 0 requires a PRNG key")
+        ref = ref + cfg.ref_sigma * jax.random.normal(key, shape)
+    return ref
+
+
+def pad_to_tiles(m: Array, rows: int, cols: int) -> Array:
+    """Zero-pad a (K, N) matrix so both dims are tile multiples."""
+    k, n = m.shape
+    pk = (-k) % rows
+    pn = (-n) % cols
+    if pk or pn:
+        m = jnp.pad(m, ((0, pk), (0, pn)))
+    return m
+
+
+def tile_grid(k: int, n: int, cfg: CrossbarConfig) -> Tuple[int, int]:
+    """Number of crossbar tiles covering a (K, N) weight matrix."""
+    tk = -(-k // cfg.rows)
+    tn = -(-n // cfg.cols)
+    return tk, tn

@@ -1,0 +1,273 @@
+"""Analog resistive-memory device models (paper §V).
+
+The paper's co-design methodology feeds *measured* device behaviour into the
+training simulation.  Three write nonidealities dominate training accuracy
+(paper §V.A):
+
+  i)   nonlinearity  — ΔG depends on the starting conductance G0,
+  ii)  asymmetry     — the G0-dependence differs between SET (G up) and
+                       RESET (G down),
+  iii) stochasticity — ΔG fluctuates randomly around its mean.
+
+We implement the standard analytic CrossSim/NeuroSim exponential-saturation
+model plus an optional lookup-table (LUT) device that ingests binned
+(G0 -> ΔG distribution) data in exactly the format the paper extracts from
+pulse measurements (paper §V.C, Fig. 12).
+
+Conductances are kept *normalised*: g ∈ [0, 1] maps linearly onto the
+physical window [G_MIN, G_MAX] (Table I: Ron = 1 GΩ read / on-off ratio 10).
+All functions are pure, jit-safe and vectorised over arbitrary array shapes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceConfig:
+    """Static hyper-parameters of a resistive device model.
+
+    ``kind``:
+      * ``ideal``      — ΔG applied exactly (clipped to the window).
+      * ``taox``       — nonlinear + asymmetric + stochastic analytic model
+                         fit to the Sandia TaOx behaviour (paper Figs. 10-12).
+      * ``linearized`` — paper Fig. 14 "linearized" ablation: the state
+                         dependence is removed (as if serially written with
+                         state feedback) but stochasticity remains.
+      * ``lut``        — lookup-table device (see :class:`LutDevice`).
+    """
+
+    kind: str = "taox"
+    # Nonlinearity strength (dimensionless).  nu -> 0 recovers a linear
+    # state dependence; larger nu saturates faster.  Asymmetry = nu_set
+    # differing from nu_reset (TaOx RESET is notoriously more abrupt).
+    nu_set: float = 5.0
+    nu_reset: float = 5.0
+    # Effective gain of a unit update in each direction (asymmetry in
+    # magnitude): ΔG = gain * ΔG_req * f(g).
+    gain_set: float = 1.0
+    gain_reset: float = 1.0
+    # Write stochasticity: per-unit-pulse sigma as a fraction of the window.
+    # An update of magnitude |Δ| is n = |Δ|/pulse_dg pulses; total noise
+    # sigma = write_noise * sqrt(n) * pulse_dg  (random-walk accumulation).
+    write_noise: float = 0.3
+    pulse_dg: float = 1.0 / 256.0  # one "nudge" moves ~1/256 of the window
+    # Read noise: multiplicative current fluctuation (paper §V.A cites <5 %
+    # of current as negligible) — applied by the crossbar read path.
+    read_noise: float = 0.0
+    # Conductance window in normalised units.
+    gmin: float = 0.0
+    gmax: float = 1.0
+
+    def replace(self, **kw) -> "DeviceConfig":
+        return dataclasses.replace(self, **kw)
+
+
+IDEAL = DeviceConfig(kind="ideal", write_noise=0.0, read_noise=0.0)
+# Parameters chosen so the Fig. 14 qualitative ordering reproduces:
+# full TaOx << linearized < no-noise < numeric.
+TAOX = DeviceConfig(kind="taox", nu_set=5.0, nu_reset=5.0,
+                    gain_set=1.0, gain_reset=1.0, write_noise=0.3)
+TAOX_NONOISE = TAOX.replace(write_noise=0.0)
+LINEARIZED = DeviceConfig(kind="linearized", write_noise=0.3)
+
+
+def _norm_state(g: Array, cfg: DeviceConfig) -> Array:
+    """Position of g inside the window, in [0, 1]."""
+    return (g - cfg.gmin) / (cfg.gmax - cfg.gmin)
+
+
+def set_factor(x: Array, nu: float) -> Array:
+    """State-dependent SET (potentiation) slope.
+
+    Exponential-saturation shape (paper Fig. 10: ΔG is largest at low G0
+    and vanishes at the top of the window):
+
+        f_raw(x) = (exp(-nu x) - exp(-nu)) / (1 - exp(-nu));  f_raw(1) = 0.
+
+    Normalised so that f(1/2) = 1: a requested update is realised at face
+    value at the centre of the window (where devices are initialised /
+    reset to), amplified below it and attenuated above it.  nu -> 0
+    degenerates to the linear 2(1 - x).
+    """
+    if nu < 1e-6:
+        return 2.0 * (1.0 - x)
+    e = np.exp(-nu)
+    mid = (np.exp(-0.5 * nu) - e) / (1.0 - e)
+    return (jnp.exp(-nu * x) - e) / (1.0 - e) / mid
+
+
+def reset_factor(x: Array, nu: float) -> Array:
+    """State-dependent RESET (depression) slope: mirror image of SET."""
+    return set_factor(1.0 - x, nu)
+
+
+def _deterministic_dg(g: Array, dg_req: Array, cfg: DeviceConfig) -> Array:
+    """Mean conductance change for a requested update ``dg_req``."""
+    if cfg.kind in ("ideal", "linearized"):
+        return dg_req
+    x = _norm_state(g, cfg)
+    up = cfg.gain_set * set_factor(x, cfg.nu_set)
+    dn = cfg.gain_reset * reset_factor(x, cfg.nu_reset)
+    return jnp.where(dg_req >= 0, dg_req * up, dg_req * dn)
+
+
+def write_noise_sigma(dg_req: Array, cfg: DeviceConfig) -> Array:
+    """Random-walk noise sigma for an update of magnitude |dg_req|."""
+    if cfg.write_noise == 0.0:
+        return jnp.zeros_like(dg_req)
+    n_pulses = jnp.abs(dg_req) / cfg.pulse_dg
+    return cfg.write_noise * cfg.pulse_dg * jnp.sqrt(n_pulses)
+
+
+def apply_update(g: Array, dg_req: Array, cfg: DeviceConfig,
+                 key: Optional[Array] = None) -> Array:
+    """Apply a requested conductance update through the device model.
+
+    Args:
+      g:       current conductances (any shape).
+      dg_req:  requested change, same shape, in normalised units.
+      cfg:     device model config.
+      key:     PRNG key for write stochasticity (required unless noiseless).
+
+    Returns:
+      new conductances, clipped to [gmin, gmax].
+    """
+    dg = _deterministic_dg(g, dg_req, cfg)
+    if cfg.write_noise > 0.0:
+        if key is None:
+            raise ValueError("stochastic device model requires a PRNG key")
+        sigma = write_noise_sigma(dg_req, cfg)
+        dg = dg + sigma * jax.random.normal(key, g.shape, dtype=g.dtype)
+    return jnp.clip(g + dg, cfg.gmin, cfg.gmax)
+
+
+# ---------------------------------------------------------------------------
+# ΔG(V): pulse-voltage dependence, paper Eq. (6).
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class VoltageModel:
+    """ΔG(V) = exp(d1 (V - Vmin_p)) - 1 above threshold (SET) and the
+    mirrored expression below the negative threshold (RESET); 0 between.
+    Used by the write-encoding (hwmodel) to pick pulse voltages/lengths."""
+
+    d1: float = 4.0
+    d2: float = 4.0
+    vmin_p: float = 0.8
+    vmin_n: float = -0.8
+
+    def delta_g(self, v: Array) -> Array:
+        up = jnp.exp(self.d1 * (v - self.vmin_p)) - 1.0
+        dn = -(jnp.exp(self.d2 * (self.vmin_n - v)) - 1.0)
+        return jnp.where(v > self.vmin_p, up,
+                         jnp.where(v < self.vmin_n, dn, 0.0))
+
+    def voltage_for(self, dg: Array, direction: int) -> Array:
+        """Inverse of :meth:`delta_g` for a given write direction (+1/-1)."""
+        dg = jnp.abs(dg)
+        if direction >= 0:
+            return self.vmin_p + jnp.log1p(dg) / self.d1
+        return self.vmin_n - jnp.log1p(dg) / self.d2
+
+
+# ---------------------------------------------------------------------------
+# Lookup-table device (paper §V.C): binned G0 -> ΔG mean/std heat-map.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class LutDevice:
+    """Device model backed by binned pulse data.
+
+    ``centers`` are bin centres over the normalised window; ``mean_set`` /
+    ``std_set`` give the per-single-pulse ΔG distribution at each bin for a
+    SET pulse (likewise RESET).  This is the exact artefact the paper builds
+    from 1M-10M measured pulses (Fig. 12); :func:`lut_from_analytic` builds
+    one from the analytic model so the two paths are interchangeable.
+    """
+
+    centers: np.ndarray
+    mean_set: np.ndarray
+    std_set: np.ndarray
+    mean_reset: np.ndarray
+    std_reset: np.ndarray
+    gmin: float = 0.0
+    gmax: float = 1.0
+
+    def _interp(self, table: np.ndarray, g: Array) -> Array:
+        x = (g - self.gmin) / (self.gmax - self.gmin)
+        return jnp.interp(x, jnp.asarray(self.centers), jnp.asarray(table))
+
+    def apply_update(self, g: Array, dg_req: Array,
+                     key: Optional[Array] = None,
+                     pulse_dg: float = 1.0 / 256.0) -> Array:
+        """Apply ``dg_req`` as ``n = |dg_req|/pulse_dg`` effective pulses."""
+        n = jnp.abs(dg_req) / pulse_dg
+        mean_up = self._interp(self.mean_set, g)
+        mean_dn = self._interp(self.mean_reset, g)
+        dg = jnp.where(dg_req >= 0, n * mean_up, n * mean_dn)
+        if key is not None:
+            std_up = self._interp(self.std_set, g)
+            std_dn = self._interp(self.std_reset, g)
+            sigma = jnp.sqrt(n) * jnp.where(dg_req >= 0, std_up, std_dn)
+            dg = dg + sigma * jax.random.normal(key, g.shape, dtype=g.dtype)
+        return jnp.clip(g + dg, self.gmin, self.gmax)
+
+
+def lut_from_analytic(cfg: DeviceConfig, n_bins: int = 64) -> LutDevice:
+    """Bin the analytic model into a LUT (round-trip consistency testing)."""
+    centers = np.linspace(0.0, 1.0, n_bins)
+    pulse = cfg.pulse_dg
+    mean_set = pulse * cfg.gain_set * np.asarray(set_factor(centers, cfg.nu_set))
+    mean_reset = -pulse * cfg.gain_reset * np.asarray(
+        reset_factor(centers, cfg.nu_reset))
+    std = np.full_like(centers, cfg.write_noise * pulse)
+    return LutDevice(centers=centers, mean_set=mean_set, std_set=std,
+                     mean_reset=mean_reset, std_reset=std,
+                     gmin=cfg.gmin, gmax=cfg.gmax)
+
+
+def lut_from_pulse_train(g_trace: np.ndarray, n_bins: int = 64,
+                         gmin: float | None = None,
+                         gmax: float | None = None) -> LutDevice:
+    """Build a LUT from a measured conductance-vs-pulse trace.
+
+    ``g_trace``: (n_cycles, 2*n_pulses) — each row is one SET train followed
+    by one RESET train, the measurement protocol of paper §V.B.
+    """
+    g_trace = np.asarray(g_trace, dtype=np.float64)
+    gmin = float(g_trace.min()) if gmin is None else gmin
+    gmax = float(g_trace.max()) if gmax is None else gmax
+    half = g_trace.shape[1] // 2
+    edges = np.linspace(gmin, gmax, n_bins + 1)
+    centers01 = (0.5 * (edges[:-1] + edges[1:]) - gmin) / (gmax - gmin)
+
+    def _bin(seg_g0: np.ndarray, seg_dg: np.ndarray):
+        mean = np.zeros(n_bins)
+        std = np.zeros(n_bins)
+        idx = np.clip(np.digitize(seg_g0, edges) - 1, 0, n_bins - 1)
+        for b in range(n_bins):
+            sel = seg_dg[idx == b]
+            if sel.size:
+                mean[b] = sel.mean()
+                std[b] = sel.std()
+        return mean, std
+
+    g0 = g_trace[:, :-1].ravel()
+    dg = np.diff(g_trace, axis=1).ravel()
+    set_mask = np.tile(np.arange(g_trace.shape[1] - 1) < half,
+                       g_trace.shape[0])
+    m_s, s_s = _bin(g0[set_mask], dg[set_mask])
+    m_r, s_r = _bin(g0[~set_mask], dg[~set_mask])
+    scale = gmax - gmin
+    return LutDevice(centers=centers01, mean_set=m_s / scale,
+                     std_set=s_s / scale, mean_reset=m_r / scale,
+                     std_reset=s_r / scale, gmin=0.0, gmax=1.0)

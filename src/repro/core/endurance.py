@@ -1,0 +1,94 @@
+"""Device wearout and physical write-current constraints (paper §V.E-F).
+
+§V.E: training at ~100 kHz with the 8-bit scheme can apply up to 2^8 = 256
+pulses per update cycle; a year of continuous operation needs ~8e14 unit
+pulses worst-case, ~4e13 expected-case (128 pulses on 10 % of cycles) —
+against ~2e12 equivalent nudges demonstrated in the literature.
+
+§V.F: parallel updates of an N-row column must respect the M1
+electromigration limit (~33 µA at 14/16 nm): I_nudge <= I_limit / N, i.e.
+R_ON >= N * V_write / I_limit (~33 MΩ for a 1000-row array at 1.1 V
+effective write drive — the paper quotes ~33 nA / 33 MΩ).
+
+``pulse_stats`` measures the *actual* nudge distribution of a training run
+(mean pulses per update from requested ΔG), refining §V.E's assumed 128.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .device import DeviceConfig
+
+Array = jax.Array
+
+SECONDS_PER_YEAR = 3600 * 24 * 365
+
+
+@dataclasses.dataclass(frozen=True)
+class EnduranceSpec:
+    update_rate_hz: float = 100e3      # training cycle rate (§V.E)
+    bits: int = 8                      # temporal-coding precision
+    duty: float = 0.10                 # fraction of cycles touching a cell
+    mean_pulses: float = 128.0         # pulses per touched cycle
+    years: float = 1.0
+
+
+def pulses_required(spec: EnduranceSpec = EnduranceSpec(),
+                    worst_case: bool = False) -> float:
+    """Unit pulses a device must survive (paper §V.E arithmetic)."""
+    cycles = spec.update_rate_hz * SECONDS_PER_YEAR * spec.years
+    if worst_case:
+        return cycles * float(2 ** spec.bits)
+    return cycles * spec.duty * spec.mean_pulses
+
+
+def demonstrated_nudges(memory_cycles: float = 1e12) -> float:
+    """Literature endurance translated to nudges: one full G_MIN->G_MAX->
+    G_MIN memory cycle counts as two nudges (§V.E)."""
+    return 2.0 * memory_cycles
+
+
+def endurance_margin(spec: EnduranceSpec = EnduranceSpec(),
+                     memory_cycles: float = 1e12) -> float:
+    """>1 means demonstrated endurance covers the training requirement."""
+    return demonstrated_nudges(memory_cycles) / pulses_required(spec)
+
+
+def pulse_stats(dg_req: Array, dev: DeviceConfig) -> Dict[str, Array]:
+    """Nudge statistics of a requested conductance-update tensor."""
+    pulses = jnp.abs(dg_req) / dev.pulse_dg
+    touched = pulses > 0.5
+    return {
+        "mean_pulses_per_update": jnp.mean(pulses),
+        "mean_pulses_when_touched": jnp.sum(jnp.where(touched, pulses, 0.0))
+        / jnp.maximum(jnp.sum(touched), 1),
+        "duty": jnp.mean(touched.astype(jnp.float32)),
+        "max_pulses": jnp.max(pulses),
+    }
+
+
+# ---------------------------------------------------------------------------
+# §V.F electromigration / parallel-write current limits
+# ---------------------------------------------------------------------------
+
+def max_parallel_write_current(n_rows: int,
+                               i_limit: float = 33e-6) -> float:
+    """Max per-device nudge current so a full column write stays under the
+    M1 electromigration limit."""
+    return i_limit / n_rows
+
+
+def min_on_resistance(n_rows: int, v_write: float = 1.1,
+                      i_limit: float = 33e-6) -> float:
+    """R_ON floor implied by the current limit (paper: ~33 MΩ at N=1000)."""
+    return v_write / max_parallel_write_current(n_rows, i_limit)
+
+
+def check_write_current(write_current: float, n_rows: int,
+                        i_limit: float = 33e-6) -> bool:
+    """Does a device/write-current choice permit fully-parallel updates?"""
+    return write_current <= max_parallel_write_current(n_rows, i_limit)

@@ -1,0 +1,136 @@
+"""The paper's three computational kernels, as pure-JAX simulation ops.
+
+  1. ``vmm``          — parallel read        y = x @ W      (paper Fig. 3a)
+  2. ``mvm``          — transpose read       y = d @ W.T    (paper Fig. 3b)
+  3. ``outer_update`` — rank-k parallel write W += sum outer (paper Fig. 3c)
+
+Semantics per op (matching the circuit):
+  * inputs are DAC-quantised to ``in_bits`` (temporal coding),
+  * every 1024x1024 *tile* integrates its own column charge, saturates at the
+    integrator dynamic range and is ADC-quantised to ``out_bits``,
+  * tile partial sums are accumulated digitally,
+  * the update quantises rows to ``in_bits`` (temporal) and columns to
+    ``upd_col_bits`` (voltage coding, 4 bits in the paper's 8-bit variant)
+    and pushes the outer product through the nonlinear/stochastic device.
+
+These jnp implementations are the reference semantics; the Pallas kernels in
+``repro.kernels`` implement the identical math with explicit VMEM tiling and
+are validated against ``repro.kernels.ref`` (which re-exports these).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .adc import AdcConfig, adc_quantize, integrator_saturation, quantize_input
+from .crossbar import CrossbarConfig, pad_to_tiles
+from .device import DeviceConfig, apply_update
+
+Array = jax.Array
+
+
+def _read_conductance(g: Array, cfg: CrossbarConfig,
+                      key: Optional[Array]) -> Array:
+    """Apply multiplicative read noise (paper §V.A) if configured."""
+    if cfg.device.read_noise > 0.0:
+        if key is None:
+            raise ValueError("read_noise > 0 requires a PRNG key")
+        eps = jax.random.normal(key, g.shape, dtype=g.dtype)
+        g = g * (1.0 + cfg.device.read_noise * eps)
+    return g
+
+
+def _tiled_read(x_int: Array, diff: Array, cfg: CrossbarConfig,
+                transpose: bool) -> Array:
+    """Shared body of VMM / MVM: per-tile integrate + saturate + ADC.
+
+    ``x_int``: (B, K) integer drive levels; ``diff``: (K, N) signed
+    conductance (G - G_ref), padded to tile multiples.  ``transpose`` reads
+    the array column-driven (the MVM of Fig. 3b): reduction runs over N.
+    """
+    rows, cols = cfg.rows, cfg.cols
+    if transpose:
+        # Drive columns, integrate rows: reduction dim is the *column* count
+        # of the physical array; tile sizes swap roles.
+        rows, cols = cols, rows
+        diff = diff.T  # logical view; same storage in the kernel version
+    kp, np_ = diff.shape
+    b = x_int.shape[0]
+    tk, tn = kp // rows, np_ // cols
+    if x_int.shape[1] != kp:  # pad drive lines to the tile grid
+        x_int = jnp.pad(x_int, ((0, 0), (0, kp - x_int.shape[1])))
+    xt = x_int.reshape(b, tk, rows)
+    dt = diff.reshape(tk, rows, tn, cols)
+    # Per-tile analog column charge:  (B, tk, tn, cols)
+    q = jnp.einsum("btr,trnc->btnc", xt.astype(jnp.float32),
+                   dt.astype(jnp.float32))
+    # One integrator range per physical tile, shared over batch and columns.
+    q, sat = integrator_saturation(q, cfg.adc, n_rows=rows,
+                                   g_max=cfg.device.gmax,
+                                   reduce_axes=(0, 3))
+    q = adc_quantize(q, sat, cfg.adc)
+    # Digital accumulation across reduction tiles.
+    return q.sum(axis=1).reshape(b, np_)
+
+
+def vmm(x: Array, g: Array, g_ref: Array, w_scale: Array,
+        cfg: CrossbarConfig, key: Optional[Array] = None) -> Array:
+    """Analog vector-matrix multiply: y ≈ x @ W for W=(g-g_ref)/w_scale.
+
+    ``x``: (B, K) float activations; ``g``/``g_ref``: (K, N) conductances.
+    """
+    in_dtype = x.dtype
+    x = x.astype(jnp.float32)
+    x_int, x_scale = quantize_input(x, cfg.adc)
+    g = _read_conductance(g, cfg, key)
+    diff = pad_to_tiles(g - g_ref, cfg.rows, cfg.cols)
+    q = _tiled_read(x_int, diff, cfg, transpose=False)[:, : g.shape[1]]
+    return (q * (x_scale / w_scale)).astype(in_dtype)
+
+
+def mvm(d: Array, g: Array, g_ref: Array, w_scale: Array,
+        cfg: CrossbarConfig, key: Optional[Array] = None) -> Array:
+    """Analog transpose read: y ≈ d @ W.T  (same array, columns driven)."""
+    in_dtype = d.dtype
+    d = d.astype(jnp.float32)
+    d_int, d_scale = quantize_input(d, cfg.adc)
+    g = _read_conductance(g, cfg, key)
+    diff = pad_to_tiles(g - g_ref, cfg.rows, cfg.cols)
+    q = _tiled_read(d_int, diff, cfg, transpose=True)[:, : g.shape[0]]
+    return (q * (d_scale / w_scale)).astype(in_dtype)
+
+
+def quantize_update_operands(
+        x: Array, d: Array, cfg: CrossbarConfig
+) -> Tuple[Array, Array]:
+    """Quantise the outer-product operands as the write drivers do.
+
+    Rows (x) use the temporal coder (``in_bits``); columns (d) use the
+    voltage coder (``upd_col_bits``: 3 magnitude bits + sign in the paper).
+    Returns dequantised (x_q, d_q).
+    """
+    x_int, x_scale = quantize_input(x, cfg.adc)
+    col_cfg = AdcConfig(in_bits=cfg.upd_col_bits, out_bits=cfg.adc.out_bits)
+    d_int, d_scale = quantize_input(d, col_cfg)
+    return x_int * x_scale, d_int * d_scale
+
+
+def outer_update(g: Array, x: Array, d: Array, lr: float | Array,
+                 w_scale: Array, cfg: CrossbarConfig,
+                 key: Optional[Array] = None,
+                 device: Optional[DeviceConfig] = None) -> Array:
+    """Rank-k outer-product update: G <- device(G, -lr * x^T d * w_scale).
+
+    ``x``: (B, K) forward activations, ``d``: (B, N) backprop errors.
+    The requested weight change  ΔW = -lr * sum_b outer(x_b, d_b)  is scaled
+    into conductance units and pushed through the device model (nonlinearity,
+    asymmetry, stochasticity, window clipping).
+    """
+    device = device or cfg.device
+    x_q, d_q = quantize_update_operands(x.astype(jnp.float32),
+                                        d.astype(jnp.float32), cfg)
+    dw = -(lr) * jnp.einsum("bk,bn->kn", x_q, d_q)
+    dg_req = dw * w_scale
+    return apply_update(g, dg_req, device, key)

@@ -1,0 +1,1 @@
+"""Offline synthetic datasets + sharded resumable pipeline."""

@@ -1,0 +1,6 @@
+"""Energy/latency/area analytical model (paper §IV, Tables I-V)."""
+from . import analog, compare, digital_reram, sram
+from .params import SYNTH, TABLE_I, TableI
+
+__all__ = ["analog", "digital_reram", "sram", "compare", "TABLE_I",
+           "TableI", "SYNTH"]

@@ -1,0 +1,208 @@
+"""Whole-model projection onto the analog neural training accelerator.
+
+The paper's §IV.L closes with: "a full accelerator architecture must be
+developed to fully utilize the analog circuit-block advantages."  This
+module is that architecture-level study for the assigned model zoo: every
+weight-stationary projection (attention/FFN/MoE/SSM projections,
+embeddings excluded) maps onto 1024x1024 differential crossbar tiles;
+activation-activation compute (QK^T, PV, the SSD scan, softmax/norms)
+stays on the digital core and is charged at the synthesized MAC cost.
+
+Honest accounting included:
+  * tile padding waste (a 2560x6912 layer occupies 3x7 tiles),
+  * MoE: only active experts fire (energy) but all experts occupy area,
+  * attention/scan digital MACs at 1.46 pJ (paper §IV.J),
+  * training charges VMM + MVM + OPU per projection; inference VMM only.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Tuple
+
+from repro.configs.base import ModelConfig
+
+from .analog import AnalogCore
+from .params import TABLE_I
+from . import digital_reram, sram
+
+
+@dataclasses.dataclass(frozen=True)
+class Projection:
+    """One weight-stationary matmul of the model."""
+
+    name: str
+    k: int
+    n: int
+    count: int = 1          # instances per model (layers folded in)
+    active: float = 1.0     # fraction firing per token (MoE top-k)
+
+
+def model_projections(cfg: ModelConfig) -> List[Projection]:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    ps: List[Projection] = []
+    L = cfg.n_layers
+
+    def attn(prefix: str, count: int, d_in: int = None):
+        di = d_in or d
+        ps.append(Projection(f"{prefix}.wq", di, cfg.n_heads * hd, count))
+        ps.append(Projection(f"{prefix}.wk", di, cfg.n_kv_heads * hd,
+                             count))
+        ps.append(Projection(f"{prefix}.wv", di, cfg.n_kv_heads * hd,
+                             count))
+        ps.append(Projection(f"{prefix}.wo", cfg.n_heads * hd, d, count))
+
+    if cfg.family in ("ssm", "hybrid"):
+        d_in = cfg.ssm_expand * d
+        h = d_in // cfg.ssm_head_dim
+        proj_out = 2 * d_in + 2 * cfg.ssm_groups * cfg.ssm_state + h
+        ps.append(Projection("ssm.in_proj", d, proj_out, L))
+        ps.append(Projection("ssm.out_proj", d_in, d, L))
+        if cfg.attn_every:
+            n_groups = L // cfg.attn_every
+            ps.append(Projection("shared.in", 2 * d, d, 1))
+            attn("shared.attn", 1)
+            for nm, kk, nn in (("shared.ffn.up", d, cfg.d_ff),
+                               ("shared.ffn.gate", d, cfg.d_ff),
+                               ("shared.ffn.down", cfg.d_ff, d)):
+                ps.append(Projection(nm, kk, nn, 1))
+        return ps
+
+    n_self = L
+    if cfg.cross_attn_every:
+        n_cross = L // cfg.cross_attn_every
+        n_self = L - n_cross
+        attn("cross", n_cross)
+        for nm, kk, nn in (("cross.ffn.up", d, cfg.d_ff),
+                           ("cross.ffn.down", cfg.d_ff, d)):
+            ps.append(Projection(nm, kk, nn, n_cross))
+    if cfg.use_mla:
+        qk = cfg.qk_nope_dim + cfg.qk_rope_dim
+        ps.append(Projection("mla.wq", d, cfg.n_heads * qk, n_self))
+        ps.append(Projection("mla.wkv_a", d,
+                             cfg.kv_lora_rank + cfg.qk_rope_dim, n_self))
+        ps.append(Projection("mla.wkv_b", cfg.kv_lora_rank,
+                             cfg.n_heads * (cfg.qk_nope_dim
+                                            + cfg.v_head_dim), n_self))
+        ps.append(Projection("mla.wo", cfg.n_heads * cfg.v_head_dim, d,
+                             n_self))
+    else:
+        attn("attn", n_self)
+    if cfg.n_encoder_layers:
+        attn("enc.attn", cfg.n_encoder_layers)
+        for nm, kk, nn in (("enc.ffn.up", d, cfg.d_ff),
+                           ("enc.ffn.down", cfg.d_ff, d)):
+            ps.append(Projection(nm, kk, nn, cfg.n_encoder_layers))
+
+    ffn_names = (("up", cfg.d_ff), ("gate", cfg.d_ff)) if cfg.gated \
+        else (("up", cfg.d_ff),)
+    if cfg.n_experts:
+        ffe = cfg.d_ff_expert or cfg.d_ff
+        act_frac = cfg.top_k / cfg.n_experts
+        for nm, nn in (("up", ffe), ("gate", ffe)):
+            ps.append(Projection(f"moe.{nm}", d, nn,
+                                 n_self * cfg.n_experts, active=act_frac))
+        ps.append(Projection("moe.down", ffe, d, n_self * cfg.n_experts,
+                             active=act_frac))
+        if cfg.n_shared_experts:
+            sff = cfg.n_shared_experts * ffe
+            for nm, nn in (("up", sff), ("gate", sff)):
+                ps.append(Projection(f"moe.shared.{nm}", d, nn, n_self))
+            ps.append(Projection("moe.shared.down", sff, d, n_self))
+    else:
+        for nm, nn in ffn_names:
+            ps.append(Projection(f"ffn.{nm}", d, nn, n_self))
+        ps.append(Projection("ffn.down", cfg.d_ff, d, n_self))
+    return ps
+
+
+def digital_macs_per_token(cfg: ModelConfig, ctx_len: int) -> float:
+    """Activation-activation MACs (attention QK^T + PV, SSD scan) that stay
+    on the digital core, per generated/processed token at context ctx_len."""
+    if cfg.family in ("ssm", "hybrid"):
+        d_in = cfg.ssm_expand * cfg.d_model
+        h = d_in // cfg.ssm_head_dim
+        macs = cfg.n_layers * (h * cfg.ssm_state * cfg.ssm_head_dim * 2)
+        if cfg.attn_every:
+            hd = cfg.resolved_head_dim
+            macs += 2 * cfg.n_heads * hd * ctx_len
+        return float(macs)
+    hd = cfg.resolved_head_dim
+    layers = cfg.n_layers + cfg.n_encoder_layers
+    return float(layers * 2 * cfg.n_heads * hd * ctx_len)
+
+
+@dataclasses.dataclass
+class ArchCost:
+    arch: str
+    tiles: int
+    tiles_active: float
+    area_mm2: float
+    util: float                     # weight fill fraction of the tiles
+    e_inference_token_uj: float     # VMM energy per token (incl. digital)
+    e_analog_token_uj: float        # analog-projection share of the above
+    e_train_token_uj: float         # VMM+MVM+OPU per token
+    fj_per_mac_analog_only: float   # kernel-level figure at arch scale
+    t_layer_serial_us: float        # pipelined per-token latency
+    fj_per_mac_inference: float
+    digital_mac_frac: float         # share of MACs left on the digital core
+    e_digital_reram_token_uj: float
+    e_sram_token_uj: float
+
+
+def analyze_arch(cfg: ModelConfig, bits: int = 8,
+                 ctx_len: int = 4096) -> ArchCost:
+    core = AnalogCore(bits=bits)
+    rows, cols = TABLE_I.rows, TABLE_I.cols
+    e = core.energy
+    lat = core.latency
+
+    tiles = 0
+    tiles_active = 0.0
+    weights = 0
+    macs_token = 0.0
+    serial_depth = 0
+    for p in model_projections(cfg):
+        tk, tn = math.ceil(p.k / rows), math.ceil(p.n / cols)
+        tiles += tk * tn * p.count
+        tiles_active += tk * tn * p.count * p.active
+        weights += p.k * p.n * p.count
+        macs_token += p.k * p.n * p.count * p.active
+        serial_depth += p.count * p.active  # sequential layer ops
+
+    # Energy: a VMM activates every tile of a projection once per token.
+    # Per-tile energies are for full 1024-row drive; scale by utilisation.
+    util = weights / (tiles * rows * cols)
+    e_vmm_tok = tiles_active * e["vmm"] * util
+    e_train_tok = tiles_active * (e["vmm"] + e["mvm"] + e["opu"]) * util
+    d_macs = digital_macs_per_token(cfg, ctx_len)
+    e_dig = d_macs * 1.46e-12  # synthesized MAC, paper §IV.J
+    t_serial = serial_depth * (lat["vmm"])
+
+    # digital comparisons: same MACs through the digital ReRAM / SRAM cores
+    dr = digital_reram.kernel_energy(bits)
+    sr = sram.kernel_energy(bits)
+    per_mac_dr = dr["vmm"] / (rows * cols)
+    per_mac_sr = sr["vmm"] / (rows * cols)
+
+    return ArchCost(
+        arch=cfg.name,
+        tiles=tiles,
+        tiles_active=tiles_active,
+        area_mm2=tiles * core.area * 1e6,   # m^2 -> mm^2
+        util=util,
+        e_inference_token_uj=(e_vmm_tok + e_dig) * 1e6,
+        e_analog_token_uj=e_vmm_tok * 1e6,
+        e_train_token_uj=(e_train_tok + 3 * e_dig) * 1e6,
+        fj_per_mac_analog_only=e_vmm_tok / max(macs_token, 1) / 1e-15,
+        t_layer_serial_us=t_serial * 1e6,
+        fj_per_mac_inference=(e_vmm_tok + e_dig)
+        / max(macs_token + d_macs, 1) / 1e-15,
+        digital_mac_frac=d_macs / (macs_token + d_macs),
+        e_digital_reram_token_uj=(macs_token * per_mac_dr + e_dig) * 1e6,
+        e_sram_token_uj=(macs_token * per_mac_sr + e_dig) * 1e6,
+    )
+
+
+def report(cfgs: List[ModelConfig], bits: int = 8) -> List[ArchCost]:
+    return [analyze_arch(cfg, bits=bits) for cfg in cfgs]

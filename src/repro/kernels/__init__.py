@@ -1,0 +1,6 @@
+"""Pallas TPU kernels for the crossbar hot paths (+ jnp oracles in ref.py)."""
+from . import ops, ref
+from .xbar_update import xbar_outer_update
+from .xbar_vmm import xbar_mvm, xbar_vmm
+
+__all__ = ["ops", "ref", "xbar_vmm", "xbar_mvm", "xbar_outer_update"]

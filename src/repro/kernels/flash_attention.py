@@ -1,0 +1,130 @@
+"""Pallas TPU kernel: flash attention (fwd) with causal masking + GQA.
+
+Beyond-paper extension: the serving/prefill hot path of the LM zoo.  The
+paper's crossbar covers weight-stationary projections; attention stays on
+the digital datapath (DESIGN.md C6) — this kernel is that datapath's
+IO-aware implementation: online-softmax accumulation so the (Sq, Skv)
+score matrix never leaves VMEM.
+
+Grid: (batch*heads, Sq/bq, Skv/bk), kv innermost; running max / sum /
+accumulator live in VMEM scratch across kv steps.  Causal blocks above the
+diagonal are masked (compute is still issued — Pallas grids are static;
+a production kernel would use a lower-triangular grid).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
+
+NEG_INF = -1e30
+
+
+def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_sc, l_sc, acc_sc, *,
+               scale: float, causal: bool, bq: int, bk: int, n_kv: int):
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_sc[:, :] = jnp.full_like(m_sc, NEG_INF)
+        l_sc[:, :] = jnp.zeros_like(l_sc)
+        acc_sc[:, :] = jnp.zeros_like(acc_sc)
+
+    q = q_ref[0, :, :].astype(jnp.float32)
+    k = k_ref[0, :, :].astype(jnp.float32)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    if causal:
+        qi = pl.program_id(1)
+        q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        k_pos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        s = jnp.where(q_pos >= k_pos, s, NEG_INF)
+
+    m_prev = m_sc[:, :]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_sc[:, :] = corr * l_sc[:, :] + jnp.sum(p, axis=-1, keepdims=True)
+    acc_sc[:, :] = acc_sc[:, :] * corr + jax.lax.dot_general(
+        p, v_ref[0, :, :].astype(jnp.float32), (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_sc[:, :] = m_new
+
+    @pl.when(ki == n_kv - 1)
+    def _finish():
+        o_ref[0, :, :] = (acc_sc[:, :]
+                          / jnp.maximum(l_sc[:, :], 1e-30)
+                          ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q",
+                                             "block_k", "interpret"))
+def flash_attention(q: Array, k: Array, v: Array, *, causal: bool = True,
+                    block_q: int = 512, block_k: int = 512,
+                    interpret: bool = False) -> Array:
+    """q: (B, Sq, H, hd); k/v: (B, Skv, KVH, hd) with H % KVH == 0.
+
+    Returns (B, Sq, H, hd).  Online-softmax flash attention; VMEM use is
+    O(block_q * block_k + block_q * hd) per grid step.
+    """
+    b, sq, h, hd = q.shape
+    skv, kvh = k.shape[1], k.shape[2]
+    group = h // kvh
+    scale = 1.0 / np.sqrt(hd)
+    bq = min(block_q, sq)
+    bk = min(block_k, skv)
+    if sq % bq or skv % bk:
+        raise ValueError("sequence lengths must divide the block sizes")
+    nq, nk = sq // bq, skv // bk
+
+    qf = jnp.moveaxis(q, 2, 1).reshape(b * h, sq, hd)
+    kf = jnp.moveaxis(k, 2, 1).reshape(b * kvh, skv, hd)
+    vf = jnp.moveaxis(v, 2, 1).reshape(b * kvh, skv, hd)
+
+    def kv_index(bh, qi, ki):
+        return (bh // h) * kvh + (bh % h) // group, ki, 0
+
+    out = pl.pallas_call(
+        functools.partial(_fa_kernel, scale=scale, causal=causal,
+                          bq=bq, bk=bk, n_kv=nk),
+        grid=(b * h, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, hd), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, bk, hd), kv_index),
+            pl.BlockSpec((1, bk, hd), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, bq, hd), lambda bh, qi, ki: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, sq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return jnp.moveaxis(out.reshape(b, h, sq, hd), 1, 2)
+
+
+def flash_attention_ref(q: Array, k: Array, v: Array,
+                        causal: bool = True) -> Array:
+    """Pure-jnp oracle (naive full-matrix softmax attention with GQA)."""
+    b, sq, h, hd = q.shape
+    kvh = k.shape[2]
+    group = h // kvh
+    scale = 1.0 / np.sqrt(hd)
+    qg = q.reshape(b, sq, kvh, group, hd).astype(jnp.float32)
+    s = jnp.einsum("bqkgd,bskd->bqkgs", qg,
+                   k.astype(jnp.float32)) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((sq, k.shape[1]), dtype=bool))
+        s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bqkgs,bskd->bqkgd", p, v.astype(jnp.float32))
+    return o.reshape(b, sq, h, hd).astype(q.dtype)

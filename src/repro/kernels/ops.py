@@ -1,0 +1,69 @@
+"""Jit'd high-level wrappers dispatching to the Pallas kernels.
+
+These mirror the ``repro.core.xbar_ops`` API (float activations/weights in,
+float out) but run the tiled read / fused update on the Pallas kernels.
+On non-TPU backends the kernels execute in interpret mode (the kernel body
+runs in Python via the Pallas interpreter), which is how this repo's tests
+validate them; on TPU they compile to Mosaic.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.adc import quantize_input
+from repro.core.crossbar import CrossbarConfig
+from repro.core.xbar_ops import quantize_update_operands
+
+from .xbar_update import xbar_outer_update
+from .xbar_vmm import xbar_mvm, xbar_vmm
+
+Array = jax.Array
+
+
+def default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def vmm(x: Array, g: Array, g_ref: Array, w_scale: Array,
+        cfg: CrossbarConfig, block_b: Optional[int] = None,
+        interpret: Optional[bool] = None) -> Array:
+    """Kernelised counterpart of ``repro.core.xbar_ops.vmm``."""
+    interpret = default_interpret() if interpret is None else interpret
+    x = x.astype(jnp.float32)
+    x_int, x_scale = quantize_input(x, cfg.adc)
+    q = xbar_vmm(x_int, g - g_ref, cfg, block_b=block_b,
+                 interpret=interpret)
+    return q * (x_scale / w_scale)
+
+
+def mvm(d: Array, g: Array, g_ref: Array, w_scale: Array,
+        cfg: CrossbarConfig, block_b: Optional[int] = None,
+        interpret: Optional[bool] = None) -> Array:
+    """Kernelised counterpart of ``repro.core.xbar_ops.mvm``."""
+    interpret = default_interpret() if interpret is None else interpret
+    d = d.astype(jnp.float32)
+    d_int, d_scale = quantize_input(d, cfg.adc)
+    q = xbar_mvm(d_int, g - g_ref, cfg, block_b=block_b,
+                 interpret=interpret)
+    return q * (d_scale / w_scale)
+
+
+def outer_update(g: Array, x: Array, d: Array, lr, w_scale: Array,
+                 cfg: CrossbarConfig, key: Optional[Array] = None,
+                 block_b: Optional[int] = None,
+                 interpret: Optional[bool] = None) -> Array:
+    """Kernelised counterpart of ``repro.core.xbar_ops.outer_update``."""
+    interpret = default_interpret() if interpret is None else interpret
+    x_q, d_q = quantize_update_operands(x.astype(jnp.float32),
+                                        d.astype(jnp.float32), cfg)
+    noise = None
+    if cfg.device.write_noise > 0.0:
+        if key is None:
+            raise ValueError("stochastic device model requires a PRNG key")
+        noise = jax.random.normal(key, g.shape, dtype=jnp.float32)
+    scale = jnp.asarray(-lr, jnp.float32) * w_scale
+    return xbar_outer_update(g, x_q, d_q, scale, cfg, noise=noise,
+                             block_b=block_b, interpret=interpret)

@@ -1,0 +1,69 @@
+"""Pure-jnp oracles for the Pallas crossbar kernels.
+
+The reference semantics live in ``repro.core.xbar_ops`` (they are the
+simulation the paper's accuracy analysis depends on); this module re-exports
+them at kernel granularity — integer drive levels in, charge out — plus an
+explicit *bit-plane temporal-coding* oracle that executes the pulse trains
+bit by bit exactly as the hardware drivers do (paper Fig. 5), proving the
+integer-matmul shortcut used by the fast paths.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.adc import AdcConfig, adc_quantize, integrator_saturation
+from repro.core.crossbar import CrossbarConfig
+from repro.core.device import DeviceConfig, write_noise_sigma
+from repro.core.xbar_ops import _tiled_read  # reference tile pipeline
+
+Array = jax.Array
+
+
+def vmm_ref(x_int: Array, diff: Array, cfg: CrossbarConfig) -> Array:
+    """(B, Kp) int drive levels x (Kp, Np) signed conductance -> (B, Np)."""
+    return _tiled_read(x_int, diff, cfg, transpose=False)
+
+
+def mvm_ref(d_int: Array, diff: Array, cfg: CrossbarConfig) -> Array:
+    """(B, Np) int drive levels x (Kp, Np) -> (B, Kp) transpose read."""
+    return _tiled_read(d_int, diff, cfg, transpose=True)
+
+
+def outer_update_ref(g: Array, x_q: Array, d_q: Array, scale: Array,
+                     cfg: CrossbarConfig,
+                     noise: Optional[Array] = None) -> Array:
+    """Fused rank-k outer product + device model, noise supplied as N(0,1).
+
+    ``scale`` folds ``-lr * w_scale``: the conductance request is
+    ``dg_req = scale * sum_b outer(x_q_b, d_q_b)``.
+    """
+    dev = cfg.device
+    dg_req = scale * jnp.einsum("bk,bn->kn", x_q.astype(jnp.float32),
+                                d_q.astype(jnp.float32))
+    from repro.core.device import _deterministic_dg  # shared math
+    dg = _deterministic_dg(g, dg_req, dev)
+    if noise is not None and dev.write_noise > 0.0:
+        dg = dg + write_noise_sigma(dg_req, dev) * noise
+    return jnp.clip(g + dg, dev.gmin, dev.gmax)
+
+
+def vmm_bitplanes(x_int: Array, diff: Array, cfg: CrossbarConfig) -> Array:
+    """Temporal-coding oracle: drive the array one bit-plane at a time.
+
+    Each magnitude bit b of |x| drives a pulse train of length 2^b (paper
+    Fig. 5); the column integrates the charge of every pulse.  The total
+    charge is identical to the single integer product — this function is
+    the executable proof, used by the kernel tests.
+    """
+    sign = jnp.sign(x_int)
+    mag = jnp.abs(x_int).astype(jnp.int32)
+    n_bits = cfg.adc.in_bits - 1  # magnitude bits
+    q = jnp.zeros((x_int.shape[0], diff.shape[1]), dtype=jnp.float32)
+    for b in range(n_bits):
+        plane = ((mag >> b) & 1).astype(jnp.float32) * sign
+        # 2^b unit pulses for this bit of every input line
+        q = q + (2 ** b) * (plane @ diff.astype(jnp.float32))
+    return q

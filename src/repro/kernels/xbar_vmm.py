@@ -1,0 +1,150 @@
+"""Pallas TPU kernel: analog crossbar parallel read (VMM) and transpose
+read (MVM).
+
+TPU adaptation of the paper's temporal-coded analog read (DESIGN.md §2):
+the bit-plane pulse train sums to an exact integer dot product, so the
+kernel performs an MXU matmul over one physical crossbar tile per grid step
+and applies the integrator-saturation + ramp-ADC epilogue *per tile* before
+the digital accumulation across reduction tiles — the same quantisation
+boundary the hardware has.
+
+Grid layout (VMM):  (B/blk_b, N/cols, K/rows) — reduction innermost so the
+output block stays resident in VMEM while partial ADC results accumulate.
+Block shapes are the physical crossbar tile (default 1024x1024, MXU-aligned:
+1024 = 8 x 128 lanes) and a batch slab.
+
+VMEM budget at defaults (f32): x 512 KB + G 4 MB + out 512 KB ≈ 5 MB < 16 MB.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.core.crossbar import CrossbarConfig
+
+Array = jax.Array
+
+
+def _adc_epilogue(q: Array, cfg: CrossbarConfig, n_rows: int) -> Array:
+    """Integrator saturation + ramp-ADC quantisation of a tile's charge."""
+    adc = cfg.adc
+    if adc.range_mode == "fixed":
+        sat = jnp.float32(adc.sat_frac * adc.in_levels * n_rows
+                          * cfg.device.gmax)
+    else:
+        sumsq = jnp.sum(q * q)
+        nz = jnp.sum((q != 0.0).astype(jnp.float32))
+        rms = jnp.sqrt(sumsq / jnp.maximum(nz, 1.0))
+        sat = jnp.maximum(adc.sat_sigmas * rms, 1e-6)
+    qc = jnp.clip(q, -sat, sat)
+    lsb = sat / adc.out_levels
+    code = jnp.clip(jnp.round(qc / lsb), -adc.out_levels, adc.out_levels)
+    return code * lsb
+
+
+def _vmm_kernel(x_ref, d_ref, o_ref, *, cfg: CrossbarConfig):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[:, :] = jnp.zeros_like(o_ref)
+
+    q = jnp.dot(x_ref[:, :], d_ref[:, :],
+                preferred_element_type=jnp.float32)
+    o_ref[:, :] += _adc_epilogue(q, cfg, n_rows=cfg.rows)
+
+
+def _mvm_kernel(d_ref, g_ref, o_ref, *, cfg: CrossbarConfig):
+    n = pl.program_id(2)
+
+    @pl.when(n == 0)
+    def _init():
+        o_ref[:, :] = jnp.zeros_like(o_ref)
+
+    # Transpose read: drive columns, integrate rows — contract the column
+    # dimension of the same stored G tile (no materialised transpose).
+    q = jax.lax.dot_general(
+        d_ref[:, :], g_ref[:, :],
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    o_ref[:, :] += _adc_epilogue(q, cfg, n_rows=cfg.cols)
+
+
+def _pad_axis(a: Array, axis: int, mult: int) -> Array:
+    pad = (-a.shape[axis]) % mult
+    if pad:
+        width = [(0, 0)] * a.ndim
+        width[axis] = (0, pad)
+        a = jnp.pad(a, width)
+    return a
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("cfg", "block_b", "interpret"))
+def xbar_vmm(x_int: Array, diff: Array, cfg: CrossbarConfig,
+             block_b: Optional[int] = None,
+             interpret: bool = False) -> Array:
+    """(B, K) integer drive levels x (K, N) signed conductances -> (B, N).
+
+    Output is per-tile-ADC-quantised charge, digitally accumulated over
+    reduction tiles — identical semantics to ``kernels.ref.vmm_ref``
+    (when ``block_b >= B``, the dynamic-ADC calibration population matches
+    the reference exactly).
+    """
+    b, k = x_int.shape
+    n = diff.shape[1]
+    x_int = _pad_axis(_pad_axis(x_int.astype(jnp.float32), 1, cfg.rows),
+                      0, block_b or b)
+    diff = _pad_axis(_pad_axis(diff.astype(jnp.float32), 0, cfg.rows),
+                     1, cfg.cols)
+    bb = block_b or b
+    bp, kp = x_int.shape
+    np_ = diff.shape[1]
+    grid = (bp // bb, np_ // cfg.cols, kp // cfg.rows)
+    out = pl.pallas_call(
+        functools.partial(_vmm_kernel, cfg=cfg),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, cfg.rows), lambda b_, n_, k_: (b_, k_)),
+            pl.BlockSpec((cfg.rows, cfg.cols), lambda b_, n_, k_: (k_, n_)),
+        ],
+        out_specs=pl.BlockSpec((bb, cfg.cols), lambda b_, n_, k_: (b_, n_)),
+        out_shape=jax.ShapeDtypeStruct((bp, np_), jnp.float32),
+        interpret=interpret,
+    )(x_int, diff)
+    return out[:b, :n]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("cfg", "block_b", "interpret"))
+def xbar_mvm(d_int: Array, diff: Array, cfg: CrossbarConfig,
+             block_b: Optional[int] = None,
+             interpret: bool = False) -> Array:
+    """(B, N) integer drive levels x (K, N) conductances -> (B, K)."""
+    b, n = d_int.shape
+    k = diff.shape[0]
+    d_int = _pad_axis(_pad_axis(d_int.astype(jnp.float32), 1, cfg.cols),
+                      0, block_b or b)
+    diff = _pad_axis(_pad_axis(diff.astype(jnp.float32), 0, cfg.rows),
+                     1, cfg.cols)
+    bb = block_b or b
+    bp = d_int.shape[0]
+    kp, np_ = diff.shape
+    grid = (bp // bb, kp // cfg.rows, np_ // cfg.cols)
+    out = pl.pallas_call(
+        functools.partial(_mvm_kernel, cfg=cfg),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, cfg.cols), lambda b_, k_, n_: (b_, n_)),
+            pl.BlockSpec((cfg.rows, cfg.cols), lambda b_, k_, n_: (k_, n_)),
+        ],
+        out_specs=pl.BlockSpec((bb, cfg.rows), lambda b_, k_, n_: (b_, k_)),
+        out_shape=jax.ShapeDtypeStruct((bp, kp), jnp.float32),
+        interpret=interpret,
+    )(d_int, diff)
+    return out[:b, :k]

@@ -1,0 +1,178 @@
+"""Sharding policy: parameters, optimizer state, batches and caches.
+
+Baseline policy (EXPERIMENTS.md §Perf iterates on this):
+  * TP (Megatron): attention/FFN projections column/row-split over
+    ``model``; embeddings vocab-split.
+  * FSDP: the non-TP dimension of every large weight shards over the
+    data-parallel axes (pod x data) — required to fit the 90B/107B configs.
+  * EP: MoE expert dim shards over ``model``.
+  * SP: decode caches shard sequence over ``model`` when the KV-head count
+    cannot cover it (flash-decoding partial-softmax combine makes this
+    exact); SSD/hybrid states shard heads.
+  * DP: batch over (pod, data).
+
+Every rule degrades to replication when divisibility fails (e.g. whisper's
+51865 vocab), so any (arch x mesh) pair lowers.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+import os
+
+from repro.configs.base import ModelConfig
+
+from .mesh import dp_axes
+
+
+def _axis_size(mesh, names) -> int:
+    if names is None:
+        return 1
+    if isinstance(names, str):
+        names = (names,)
+    n = 1
+    for a in names:
+        n *= mesh.shape[a]
+    return n
+
+
+def _fit(mesh, dim: int, names):
+    """names if they divide dim, else None (replicate)."""
+    if names is None:
+        return None
+    size = _axis_size(mesh, names)
+    if size > 1 and dim % size == 0:
+        return names if isinstance(names, str) or len(names) > 1 \
+            else names[0]
+    return None
+
+
+def param_pspec(path: Tuple, leaf, cfg: ModelConfig, mesh) -> P:
+    """PartitionSpec for one parameter leaf (path from tree_map_with_path)."""
+    keys = [getattr(k, "key", getattr(k, "idx", "")) for k in path]
+    sp = list(keys)
+    shape = leaf.shape
+    dp = dp_axes(mesh)
+
+    def spec2d(d0_axes, d1_axes):
+        """Spec for the trailing 2 dims; leading dims (layer/expert stacks)
+        handled here."""
+        lead = len(shape) - 2
+        out = [None] * lead
+        if "experts" in sp and lead >= 1:
+            # EP: the expert dim takes the model axis; the inner matmul dims
+            # only FSDP-shard (model is already consumed by the expert dim).
+            out[lead - 1] = _fit(mesh, shape[lead - 1], "model")
+            out.append(_fit(mesh, shape[-2], dp))
+            out.append(None)
+            return P(*out)
+        out.append(_fit(mesh, shape[-2], d0_axes))
+        out.append(_fit(mesh, shape[-1], d1_axes))
+        return P(*out)
+
+    # K6 (perf): pure ZeRO-3 — shard the largest divisible dim over the
+    # flattened mesh; no tensor parallelism anywhere.
+    if os.environ.get("REPRO_FLAT_DP"):
+        out = [None] * len(shape)
+        for i in sorted(range(len(shape)), key=lambda i: -shape[i]):
+            ax = _fit(mesh, shape[i], dp)
+            if ax is not None:
+                out[i] = ax
+                break
+        return P(*out)
+
+    last = str(sp[-1])
+    if last == "embed":
+        return P(_fit(mesh, shape[0], "model"), _fit(mesh, shape[1], dp))
+    if "lm_head" in sp:
+        return spec2d(dp, "model")
+    if last == "enc_pos":
+        return P(None, None)
+    if len(shape) < 2:
+        return P(*([None] * len(shape)))
+    # K2 (perf): the SSD in_proj output is split at segment boundaries that
+    # do not align with a model-axis shard; TP forces a per-layer activation
+    # all-gather.  REPRO_SSM_FSDP=1 switches SSM projections to ZeRO-3 style
+    # sharding (per-layer *weight* gathers, ~100x smaller at batch 16x4096).
+    if os.environ.get("REPRO_SSM_FSDP") and \
+            any(k in sp for k in ("in_proj", "out_proj")):
+        return spec2d(dp, None)
+    # column-parallel producers
+    if any(k in sp for k in ("wq", "wk", "wv", "w_up", "w_gate", "wkv_b",
+                             "in_proj", "xattn")):
+        if "wo" in sp:  # xattn/wo handled below
+            return spec2d("model", dp)
+        return spec2d(dp, "model")
+    # row-parallel consumers
+    if any(k in sp for k in ("wo", "w_down", "out_proj")):
+        return spec2d("model", dp)
+    if "shared_in" in sp:
+        return spec2d(dp, None)
+    if "router" in sp or "wkv_a" in sp:
+        return P(*([None] * len(shape)))
+    if last in ("conv_w", "conv_b", "a_log", "d_skip", "dt_bias"):
+        return P(*([None] * len(shape)))
+    return P(*([None] * len(shape)))
+
+
+def params_shardings(abstract_params, cfg: ModelConfig, mesh):
+    def spec(path, leaf):
+        # resolve nested attn dicts: path keys include the projection name
+        return NamedSharding(mesh, param_pspec(path, leaf, cfg, mesh))
+    return jax.tree_util.tree_map_with_path(spec, abstract_params)
+
+
+def batch_shardings(abstract_batch, mesh):
+    dp = dp_axes(mesh)
+
+    def spec(path, leaf):
+        if leaf.ndim == 0:
+            return NamedSharding(mesh, P())
+        parts = [_fit(mesh, leaf.shape[0], dp)] + \
+            [None] * (leaf.ndim - 1)
+        return NamedSharding(mesh, P(*parts))
+    return jax.tree_util.tree_map_with_path(spec, abstract_batch)
+
+
+def cache_shardings(abstract_cache, cfg: ModelConfig, mesh):
+    """KV caches / SSD states (stacked layouts with leading layer dims)."""
+    dp = dp_axes(mesh)
+
+    def spec(path, leaf):
+        keys = [str(getattr(k, "key", "")) for k in path]
+        shape = leaf.shape
+        last = keys[-1] if keys else ""
+        if last == "len":
+            return NamedSharding(mesh, P(*([None] * (leaf.ndim - 1)),
+                                         _fit(mesh, shape[-1], dp)))
+        if last in ("k", "v", "ck", "cv"):          # (..., B, S, KVH, hd)
+            lead = leaf.ndim - 4
+            b, s, kvh = shape[lead], shape[lead + 1], shape[lead + 2]
+            head_ax = _fit(mesh, kvh, "model")
+            seq_ax = None if head_ax else _fit(mesh, s, "model")
+            return NamedSharding(mesh, P(*([None] * lead),
+                                         _fit(mesh, b, dp), seq_ax,
+                                         head_ax, None))
+        if last in ("c_kv", "k_rope"):              # (L, B, S, r)
+            return NamedSharding(mesh, P(
+                None, _fit(mesh, shape[1], dp), None,
+                _fit(mesh, shape[-1], "model")))
+        if last == "h":                             # (L, B, H, N, P)
+            return NamedSharding(mesh, P(
+                None, _fit(mesh, shape[1], dp),
+                _fit(mesh, shape[2], "model"), None, None))
+        if last == "conv":                          # (L, B, K-1, C)
+            return NamedSharding(mesh, P(
+                None, _fit(mesh, shape[1], dp), None,
+                _fit(mesh, shape[-1], "model")))
+        parts = [None] * leaf.ndim
+        return NamedSharding(mesh, P(*parts))
+    return jax.tree_util.tree_map_with_path(spec, abstract_cache)
+
+
+def replicated(mesh):
+    return NamedSharding(mesh, P())

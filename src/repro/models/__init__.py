@@ -1,0 +1,4 @@
+"""Model zoo: layers, MoE, SSD, stacks, unified API."""
+from . import layers, model, moe, ssm, transformer
+
+__all__ = ["layers", "model", "moe", "ssm", "transformer"]

@@ -1,0 +1,474 @@
+"""Transformer building blocks (pure-functional JAX).
+
+Conventions:
+  * params are nested dicts of fp32 arrays; compute casts to cfg dtype,
+  * every function takes (params, inputs, cfg) and is shard_map/pjit
+    agnostic — sharding is applied by launch/sharding.py constraints,
+  * attention is q-chunked (flash-style memory behaviour without a custom
+    kernel) for long-context prefill; decode uses a kv-chunked formulation
+    whose chunk axis is shardable across the model axis (sequence-parallel
+    cache reads).
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import CrossbarConfig, AdcConfig
+from repro.core.adc import quantize_dequantize
+
+Array = jax.Array
+
+# Number of kv chunks used by the sequence-parallel decode attention; must
+# be divisible by the model-axis size (16 in production, 1 in tests).
+DECODE_KV_CHUNKS = 16
+# Query chunk for flash-style prefill attention.
+Q_CHUNK = 512
+
+
+def cdtype(cfg: ModelConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+# --------------------------------------------------------------------------
+# Activation-sharding hints.  XLA's SPMD propagation loses the batch
+# sharding inside long scans; drivers install a context (mesh + DP axes)
+# before tracing and the stacks re-constrain activations at block
+# boundaries.  No-op when no context is installed (tests, single device).
+# --------------------------------------------------------------------------
+
+_SHARD_CTX: dict = {"mesh": None, "dp": None, "tp": None}
+
+
+def set_shard_context(mesh, dp_axes, tp_axis="model") -> None:
+    _SHARD_CTX.update(mesh=mesh, dp=dp_axes, tp=tp_axis)
+
+
+def clear_shard_context() -> None:
+    _SHARD_CTX.update(mesh=None, dp=None, tp=None)
+
+
+def shard_batch_dim(x: Array) -> Array:
+    """Constrain dim0 (batch) to the data-parallel axes.
+
+    K5 (perf): REPRO_SEQ_SHARD=1 additionally shards the sequence dim over
+    the model axis at block boundaries (Megatron-SP): the TP boundary then
+    carries reduce-scatter + all-gather instead of all-reduce — half the
+    link bytes — and norms/elementwise run on 1/TP of the tokens."""
+    import os
+    mesh, dp = _SHARD_CTX["mesh"], _SHARD_CTX["dp"]
+    if mesh is None or x.ndim < 2:
+        return x
+    size = 1
+    for a in (dp if isinstance(dp, tuple) else (dp,)):
+        size *= mesh.shape[a]
+    if x.shape[0] % size != 0:
+        return x
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    rest = [None] * (x.ndim - 1)
+    if (os.environ.get("REPRO_SEQ_SHARD") and x.ndim >= 3
+            and x.shape[1] % mesh.shape[_SHARD_CTX["tp"]] == 0):
+        rest[0] = _SHARD_CTX["tp"]
+    spec = P(dp, *rest)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+# --------------------------------------------------------------------------
+# Initialisers
+# --------------------------------------------------------------------------
+
+def dense_init(key: Array, d_in: int, d_out: int) -> Array:
+    scale = 1.0 / np.sqrt(d_in)
+    return scale * jax.random.truncated_normal(
+        key, -2.0, 2.0, (d_in, d_out), dtype=jnp.float32)
+
+
+def embed_init(key: Array, vocab: int, d: int) -> Array:
+    return jax.random.truncated_normal(key, -2.0, 2.0, (vocab, d),
+                                       dtype=jnp.float32)
+
+
+# --------------------------------------------------------------------------
+# Norms
+# --------------------------------------------------------------------------
+
+def rmsnorm_init(d: int) -> dict:
+    return {"scale": jnp.ones((d,), dtype=jnp.float32)}
+
+
+def rmsnorm(p: dict, x: Array, eps: float = 1e-5) -> Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps) * p["scale"]).astype(dt)
+
+
+# --------------------------------------------------------------------------
+# Analog-aware projection
+# --------------------------------------------------------------------------
+
+def project(p: dict, x: Array, cfg: ModelConfig) -> Array:
+    """Linear layer; in analog mode the matmul carries the crossbar I/O
+    fake-quantisation (per-token input DAC + per-K-tile output ADC),
+    keeping the HLO a single fused matmul + cheap elementwise epilogues.
+
+    Full device-nonideality simulation (noise, update nonlinearity) runs
+    through repro.core.AnalogLinear in the dedicated analog training path;
+    this fake-quant mode is the scalable LM integration (QAT semantics).
+    """
+    w = p["w"].astype(x.dtype)
+    if not cfg.analog:
+        return x @ w
+    adc = AdcConfig(in_bits=cfg.analog_in_bits,
+                    out_bits=cfg.analog_out_bits)
+    xq = quantize_dequantize(x.astype(jnp.float32), adc)
+    k = w.shape[0]
+    n_tiles = max(1, -(-k // cfg.analog_rows))
+    if n_tiles == 1:
+        y = xq @ w.astype(jnp.float32)
+        y = _adc_fake_quant(y, adc)
+    else:
+        pad = (-k) % cfg.analog_rows
+        xp = jnp.pad(xq, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+        wp = jnp.pad(w.astype(jnp.float32), [(0, pad), (0, 0)])
+        xt = xp.reshape(*x.shape[:-1], n_tiles, cfg.analog_rows)
+        wt = wp.reshape(n_tiles, cfg.analog_rows, w.shape[1])
+        q = jnp.einsum("...tk,tkn->...tn", xt, wt)
+        y = _adc_fake_quant(q, adc).sum(axis=-2)
+    return y.astype(x.dtype)
+
+
+def _adc_fake_quant(q: Array, adc: AdcConfig) -> Array:
+    sat = adc.sat_sigmas * jnp.sqrt(
+        jnp.mean(jnp.square(q), axis=-1, keepdims=True) + 1e-12)
+    lsb = sat / adc.out_levels
+    return jnp.clip(jnp.round(q / lsb), -adc.out_levels,
+                    adc.out_levels) * lsb
+
+
+# --------------------------------------------------------------------------
+# Rotary embeddings
+# --------------------------------------------------------------------------
+
+def rope_freqs(dim: int, theta: float) -> Array:
+    return 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+
+
+def apply_rope(x: Array, positions: Array, theta: float) -> Array:
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    dt = x.dtype
+    dim = x.shape[-1]
+    freqs = rope_freqs(dim, theta)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (.., s, d/2)
+    cos = jnp.cos(angles)[..., :, None, :]
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin,
+                            x2 * cos + x1 * sin], axis=-1).astype(dt)
+
+
+# --------------------------------------------------------------------------
+# Attention
+# --------------------------------------------------------------------------
+
+def attn_init(key: Array, cfg: ModelConfig, d_in: Optional[int] = None) -> dict:
+    d = d_in or cfg.d_model
+    hd = cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": {"w": dense_init(ks[0], d, cfg.n_heads * hd)},
+        "wk": {"w": dense_init(ks[1], d, cfg.n_kv_heads * hd)},
+        "wv": {"w": dense_init(ks[2], d, cfg.n_kv_heads * hd)},
+        "wo": {"w": dense_init(ks[3], cfg.n_heads * hd, cfg.d_model)},
+    }
+
+
+def _split_heads(x: Array, n: int) -> Array:
+    return x.reshape(*x.shape[:-1], n, x.shape[-1] // n)
+
+
+def _chunked_sdpa(q: Array, k: Array, v: Array, causal: bool,
+                  q_offset: int = 0) -> Array:
+    """Softmax attention, scanning over query chunks.
+
+    q: (B, Sq, H, hd);  k/v: (B, Skv, KVH, hd).  GQA folds the head group
+    into the einsum.  Peak memory ~ B * H * Q_CHUNK * Skv.
+    """
+    b, sq, h, hd = q.shape
+    skv, kvh = k.shape[1], k.shape[2]
+    group = h // kvh
+    scale = 1.0 / np.sqrt(hd)
+    qg = q.reshape(b, sq, kvh, group, hd)
+
+    n_chunks = max(1, sq // Q_CHUNK) if sq % Q_CHUNK == 0 else 1
+    qc = qg.reshape(b, n_chunks, sq // n_chunks, kvh, group, hd)
+    kv_pos = jnp.arange(skv)
+
+    def chunk(carry, xs):
+        qi, idx = xs
+        # (b, cq, kvh, g, skv)
+        s = jnp.einsum("bqkgd,bskd->bqkgs", qi.astype(jnp.float32),
+                       k.astype(jnp.float32)) * scale
+        if causal:
+            q_pos = q_offset + idx * (sq // n_chunks) \
+                + jnp.arange(sq // n_chunks)
+            mask = kv_pos[None, :] <= q_pos[:, None]
+            s = jnp.where(mask[None, :, None, None, :], s, -1e30)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bqkgs,bskd->bqkgd", p, v.astype(jnp.float32))
+        return carry, o
+
+    _, out = jax.lax.scan(
+        chunk, None, (jnp.moveaxis(qc, 1, 0), jnp.arange(n_chunks)))
+    # output head dim follows V (MLA uses asymmetric qk / v dims)
+    out = jnp.moveaxis(out, 0, 1).reshape(b, sq, h, v.shape[-1])
+    return out.astype(q.dtype)
+
+
+def _decode_sdpa(q: Array, k: Array, v: Array, kv_len: Array) -> Array:
+    """Single-token attention against a (possibly sequence-sharded) cache.
+
+    q: (B, 1, H, hd); k/v: (B, S, KVH, hd).  The cache sequence is viewed as
+    DECODE_KV_CHUNKS chunks; per-chunk partial softmax stats combine exactly
+    (flash-decoding) so the chunk axis can shard across the model axis.
+    """
+    b, _, h, hd = q.shape
+    s, kvh = k.shape[1], k.shape[2]
+    group = h // kvh
+    scale = 1.0 / np.sqrt(hd)
+    c = DECODE_KV_CHUNKS if s % DECODE_KV_CHUNKS == 0 else 1
+    sl = s // c
+    kc = k.reshape(b, c, sl, kvh, hd)
+    vc = v.reshape(b, c, sl, kvh, v.shape[-1])
+    qg = q.reshape(b, kvh, group, hd)
+    scores = jnp.einsum("bkgd,bcskd->bckgs", qg.astype(jnp.float32),
+                        kc.astype(jnp.float32)) * scale
+    pos = jnp.arange(s).reshape(c, sl)
+    valid = pos[None, :, :] < kv_len[:, None, None]          # (b, c, sl)
+    scores = jnp.where(valid[:, :, None, None, :], scores, -1e30)
+    m_c = jnp.max(scores, axis=-1)                            # (b,c,kvh,g)
+    l_c = jnp.sum(jnp.exp(scores - m_c[..., None]), axis=-1)
+    o_c = jnp.einsum("bckgs,bcskd->bckgd",
+                     jnp.exp(scores - m_c[..., None]),
+                     vc.astype(jnp.float32))
+    m = jnp.max(m_c, axis=1, keepdims=True)                  # (b,1,kvh,g)
+    w = jnp.exp(m_c - m) * l_c                               # (b,c,kvh,g)
+    o = jnp.sum(o_c * jnp.exp(m_c - m)[..., None], axis=1) \
+        / jnp.maximum(jnp.sum(w, axis=1), 1e-30)[..., None]
+    return o.reshape(b, 1, h, v.shape[-1]).astype(q.dtype)
+
+
+def attention(p: dict, x: Array, cfg: ModelConfig, *, causal: bool = True,
+              positions: Optional[Array] = None,
+              cache: Optional[dict] = None,
+              x_kv: Optional[Array] = None,
+              use_rope: bool = True) -> Tuple[Array, Optional[dict]]:
+    """Self- or cross-attention with optional KV cache.
+
+    cache = {"k": (B, S, KVH, hd), "v": ..., "len": (B,)} — decode appends
+    at position ``len`` and attends to the full cache.
+    """
+    hd = cfg.resolved_head_dim
+    b, sq = x.shape[0], x.shape[1]
+    q = _split_heads(project(p["wq"], x, cfg), cfg.n_heads)
+    kv_src = x if x_kv is None else x_kv
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(sq), (b, sq))
+    if cache is not None and x_kv is None and sq == 1:
+        # --- decode: append one token to the cache --------------------------
+        k_new = _split_heads(project(p["wk"], x, cfg), cfg.n_kv_heads)
+        v_new = _split_heads(project(p["wv"], x, cfg), cfg.n_kv_heads)
+        if use_rope:
+            q = apply_rope(q, positions, cfg.rope_theta)
+            k_new = apply_rope(k_new, positions, cfg.rope_theta)
+        idx = cache["len"]  # (B,)
+        k = jax.vmap(lambda c, n, i: jax.lax.dynamic_update_slice(
+            c, n, (i, 0, 0)))(cache["k"], k_new.astype(cache["k"].dtype),
+                              idx)
+        v = jax.vmap(lambda c, n, i: jax.lax.dynamic_update_slice(
+            c, n, (i, 0, 0)))(cache["v"], v_new.astype(cache["v"].dtype),
+                              idx)
+        o = _decode_sdpa(q, k, v, idx + 1)
+        new_cache = {"k": k, "v": v, "len": idx + 1}
+    else:
+        k = _split_heads(project(p["wk"], kv_src, cfg), cfg.n_kv_heads)
+        v = _split_heads(project(p["wv"], kv_src, cfg), cfg.n_kv_heads)
+        if use_rope and x_kv is None:
+            q = apply_rope(q, positions, cfg.rope_theta)
+            k = apply_rope(k, positions, cfg.rope_theta)
+        o = _chunked_sdpa(q, k, v, causal=causal and x_kv is None)
+        new_cache = None
+        if cache is not None and x_kv is None:
+            # prefill fills the cache
+            pad = cache["k"].shape[1] - k.shape[1]
+            new_cache = {
+                "k": jnp.pad(k.astype(cache["k"].dtype),
+                             ((0, 0), (0, pad), (0, 0), (0, 0))),
+                "v": jnp.pad(v.astype(cache["v"].dtype),
+                             ((0, 0), (0, pad), (0, 0), (0, 0))),
+                "len": jnp.full((b,), k.shape[1], dtype=jnp.int32),
+            }
+    out = project(p["wo"], o.reshape(b, sq, -1), cfg)
+    return out, new_cache
+
+
+def make_cache(cfg: ModelConfig, batch: int, max_len: int,
+               d_kv: Optional[int] = None) -> dict:
+    hd = cfg.resolved_head_dim
+    return {
+        "k": jnp.zeros((batch, max_len, cfg.n_kv_heads, hd),
+                       dtype=cdtype(cfg)),
+        "v": jnp.zeros((batch, max_len, cfg.n_kv_heads, hd),
+                       dtype=cdtype(cfg)),
+        "len": jnp.zeros((batch,), dtype=jnp.int32),
+    }
+
+
+# --------------------------------------------------------------------------
+# MLA (DeepSeek-V2 multi-head latent attention)
+# --------------------------------------------------------------------------
+
+def mla_init(key: Array, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    ks = jax.random.split(key, 5)
+    qk_dim = cfg.qk_nope_dim + cfg.qk_rope_dim
+    return {
+        "wq": {"w": dense_init(ks[0], d, cfg.n_heads * qk_dim)},
+        "wkv_a": {"w": dense_init(ks[1], d,
+                                  cfg.kv_lora_rank + cfg.qk_rope_dim)},
+        "kv_norm": rmsnorm_init(cfg.kv_lora_rank),
+        "wkv_b": {"w": dense_init(
+            ks[2], cfg.kv_lora_rank,
+            cfg.n_heads * (cfg.qk_nope_dim + cfg.v_head_dim))},
+        "wo": {"w": dense_init(ks[3], cfg.n_heads * cfg.v_head_dim, d)},
+    }
+
+
+def mla_attention(p: dict, x: Array, cfg: ModelConfig, *,
+                  positions: Optional[Array] = None,
+                  cache: Optional[dict] = None
+                  ) -> Tuple[Array, Optional[dict]]:
+    """Multi-head latent attention.  The cache stores the compressed
+    latent (kv_lora_rank) + shared rope key — MLA's memory saving."""
+    b, sq, d = x.shape
+    h = cfg.n_heads
+    qk_dim = cfg.qk_nope_dim + cfg.qk_rope_dim
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(sq), (b, sq))
+    q = _split_heads(project(p["wq"], x, cfg), h)  # (b,s,h,qk_dim)
+    q_nope, q_rope = jnp.split(q, [cfg.qk_nope_dim], axis=-1)
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    kv_a = project(p["wkv_a"], x, cfg)
+    c_kv, k_rope = jnp.split(kv_a, [cfg.kv_lora_rank], axis=-1)
+    c_kv = rmsnorm(p["kv_norm"], c_kv, cfg.norm_eps)
+    k_rope = apply_rope(k_rope[:, :, None, :], positions,
+                        cfg.rope_theta)  # single shared rope head
+
+    if cache is not None and sq == 1:
+        idx = cache["len"]
+        c_all = jax.vmap(lambda c, n, i: jax.lax.dynamic_update_slice(
+            c, n, (i, 0)))(cache["c_kv"], c_kv.astype(cache["c_kv"].dtype),
+                           idx)
+        kr_all = jax.vmap(lambda c, n, i: jax.lax.dynamic_update_slice(
+            c, n, (i, 0)))(cache["k_rope"],
+                           k_rope[:, :, 0, :].astype(cache["k_rope"].dtype),
+                           idx)
+        new_cache = {"c_kv": c_all, "k_rope": kr_all, "len": idx + 1}
+        kv_len = idx + 1
+    else:
+        c_all, kr_all = c_kv, k_rope[:, :, 0, :]
+        new_cache = None
+        if cache is not None:
+            pad = cache["c_kv"].shape[1] - sq
+            new_cache = {
+                "c_kv": jnp.pad(c_all.astype(cache["c_kv"].dtype),
+                                ((0, 0), (0, pad), (0, 0))),
+                "k_rope": jnp.pad(kr_all.astype(cache["k_rope"].dtype),
+                                  ((0, 0), (0, pad), (0, 0))),
+                "len": jnp.full((b,), sq, dtype=jnp.int32),
+            }
+        kv_len = None
+
+    if cache is not None and sq == 1 and os.environ.get("REPRO_MLA_ABSORB"):
+        # K8 (perf, beyond-paper): absorbed MLA decode (DeepSeek-V2 §2.1.2).
+        # Fold wkv_b's K-block into the query and its V-block into the
+        # output so attention runs in the latent space — O(B·H·S·r) per
+        # step instead of re-expanding per-head K/V over the whole cache,
+        # O(B·S·r·H·(dn+dv)): a (dn+dv) ≈ 256x FLOP cut at 32k context.
+        r = cfg.kv_lora_rank
+        dn, dv = cfg.qk_nope_dim, cfg.v_head_dim
+        wkv = p["wkv_b"]["w"].astype(jnp.float32).reshape(r, h, dn + dv)
+        wkb, wvb = wkv[..., :dn], wkv[..., dn:]
+        scale = 1.0 / np.sqrt(dn + cfg.qk_rope_dim)
+        q_abs = jnp.einsum("bhd,rhd->bhr",
+                           q_nope[:, 0].astype(jnp.float32), wkb)
+        c32 = c_all.astype(jnp.float32)
+        scores = (jnp.einsum("bhr,btr->bht", q_abs, c32)
+                  + jnp.einsum("bhd,btd->bht",
+                               q_rope[:, 0].astype(jnp.float32),
+                               kr_all.astype(jnp.float32))) * scale
+        valid = jnp.arange(c_all.shape[1])[None, :] < kv_len[:, None]
+        scores = jnp.where(valid[:, None, :], scores, -1e30)
+        probs = jax.nn.softmax(scores, axis=-1)
+        ctx = jnp.einsum("bht,btr->bhr", probs, c32)
+        o = jnp.einsum("bhr,rhd->bhd", ctx, wvb)[:, None].astype(x.dtype)
+        out = project(p["wo"], o.reshape(b, sq, -1), cfg)
+        return out, new_cache
+
+    # expand latent to per-head keys/values
+    kv = project(p["wkv_b"], c_all.astype(x.dtype), cfg)
+    kv = kv.reshape(b, -1, h, cfg.qk_nope_dim + cfg.v_head_dim)
+    k_nope, v = jnp.split(kv, [cfg.qk_nope_dim], axis=-1)
+    k_rope_b = jnp.broadcast_to(kr_all[:, :, None, :].astype(x.dtype),
+                                (b, k_nope.shape[1], h, cfg.qk_rope_dim))
+    k_full = jnp.concatenate([k_nope, k_rope_b], axis=-1)
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+
+    if cache is not None and sq == 1:
+        o = _decode_sdpa(q_full, k_full, v, kv_len)
+    else:
+        o = _chunked_sdpa(q_full, k_full, v, causal=True)
+    out = project(p["wo"], o.reshape(b, sq, -1), cfg)
+    return out, new_cache
+
+
+def make_mla_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    return {
+        "c_kv": jnp.zeros((batch, max_len, cfg.kv_lora_rank),
+                          dtype=cdtype(cfg)),
+        "k_rope": jnp.zeros((batch, max_len, cfg.qk_rope_dim),
+                            dtype=cdtype(cfg)),
+        "len": jnp.zeros((batch,), dtype=jnp.int32),
+    }
+
+
+# --------------------------------------------------------------------------
+# FFN
+# --------------------------------------------------------------------------
+
+def ffn_init(key: Array, cfg: ModelConfig, d_ff: Optional[int] = None) -> dict:
+    d, ff = cfg.d_model, d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    p = {"w_up": {"w": dense_init(ks[0], d, ff)},
+         "w_down": {"w": dense_init(ks[1], ff, d)}}
+    if cfg.gated:
+        p["w_gate"] = {"w": dense_init(ks[2], d, ff)}
+    return p
+
+
+def ffn(p: dict, x: Array, cfg: ModelConfig) -> Array:
+    act = jax.nn.gelu if cfg.act == "gelu" else jax.nn.silu
+    up = project(p["w_up"], x, cfg)
+    if cfg.gated:
+        up = act(project(p["w_gate"], x, cfg)) * up
+    else:
+        up = act(up)
+    return project(p["w_down"], up, cfg)

@@ -1,0 +1,209 @@
+"""Unified model API over every architecture family.
+
+    params                 = init_params(key, cfg)
+    loss, aux              = loss_fn(params, batch, cfg)
+    logits, cache          = prefill(params, batch, cfg)
+    logits, cache          = decode_step(params, cache, tokens, cfg)
+    cache                  = init_cache(cfg, batch, max_len)
+    batch                  = input_specs(cfg, shape)   # ShapeDtypeStructs
+
+``batch`` dicts: {"tokens", "labels"} plus modality stubs
+({"vision": (B, n_vis, d)} / {"audio": (B, T_a, d)}) per DESIGN.md — the
+frontends are stubs that supply precomputed patch/frame embeddings.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeSpec
+
+from . import transformer as tf
+from .layers import cdtype, make_cache, make_mla_cache
+from .ssm import make_ssm_state
+
+Array = jax.Array
+
+
+# --------------------------------------------------------------------------
+# init / forward
+# --------------------------------------------------------------------------
+
+def init_params(key: Array, cfg: ModelConfig) -> dict:
+    if cfg.family == "vlm":
+        return tf.vlm_init(key, cfg)
+    if cfg.family == "audio":
+        return tf.audio_init(key, cfg)
+    if cfg.family in ("ssm", "hybrid"):
+        return tf.ssm_stack_init(key, cfg)
+    return tf.decoder_init(key, cfg)
+
+
+def forward(params: dict, batch: Dict[str, Array], cfg: ModelConfig,
+            caches=None, shared_caches=None, positions=None):
+    """Returns (logits, new_caches, new_shared_caches, aux)."""
+    tokens = batch["tokens"]
+    if cfg.family == "vlm":
+        logits, nc, aux = tf.vlm_apply(params, tokens, batch["vision"],
+                                       cfg, caches=caches,
+                                       positions=positions)
+        return logits, nc, None, aux
+    if cfg.family == "audio":
+        # decode steps (one token, caches carry cross-KV) skip the encoder
+        if caches is not None and tokens.shape[1] == 1:
+            enc = None
+        else:
+            enc = tf.audio_encode(params, batch["audio"], cfg)
+        logits, nc, aux = tf.audio_decode(params, tokens, enc, cfg,
+                                          caches=caches,
+                                          positions=positions)
+        return logits, nc, None, aux
+    if cfg.family in ("ssm", "hybrid"):
+        logits, ns, nsh, aux = tf.ssm_stack_apply(
+            params, tokens, cfg, states=caches,
+            shared_caches=shared_caches, positions=positions)
+        return logits, ns, nsh, aux
+    logits, nc, aux = tf.decoder_apply(params, tokens, cfg, caches=caches,
+                                       positions=positions)
+    return logits, nc, None, aux
+
+
+def loss_fn(params: dict, batch: Dict[str, Array], cfg: ModelConfig
+            ) -> Tuple[Array, Dict[str, Array]]:
+    logits, _, _, aux = forward(params, batch, cfg)
+    labels = batch["labels"]
+    # Sharding-friendly CE: one-hot contraction instead of take_along_axis
+    # (a gather over the vocab-sharded dim would force an all-gather of the
+    # full logits tensor).
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    true_logit = jnp.sum(
+        logits * jax.nn.one_hot(labels, cfg.vocab, dtype=jnp.float32),
+        axis=-1)
+    loss = jnp.mean(lse - true_logit)
+    total = loss + 0.01 * aux
+    return total, {"ce": loss, "aux": aux}
+
+
+# --------------------------------------------------------------------------
+# caches / serving
+# --------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    """Returns (caches, shared_caches) in the stacked layout each family's
+    scan expects."""
+    def stack(make, n):
+        one = make()
+        return jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (n, *a.shape)), one)
+
+    if cfg.family == "vlm":
+        g = cfg.cross_attn_every
+        n_groups = cfg.n_layers // g
+        inner = g - 1
+        one = make_cache(cfg, batch, max_len)
+        caches = jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None, None],
+                                       (n_groups, inner, *a.shape)), one)
+        return caches, None
+    if cfg.family == "audio":
+        hd = cfg.resolved_head_dim
+
+        def make_audio():
+            return {"self": make_cache(cfg, batch, max_len),
+                    "ck": jnp.zeros((batch, cfg.n_audio_frames,
+                                     cfg.n_kv_heads, hd), cdtype(cfg)),
+                    "cv": jnp.zeros((batch, cfg.n_audio_frames,
+                                     cfg.n_kv_heads, hd), cdtype(cfg))}
+        return stack(make_audio, cfg.n_layers), None
+    if cfg.family == "ssm":
+        return stack(lambda: make_ssm_state(cfg, batch), cfg.n_layers), None
+    if cfg.family == "hybrid":
+        states = stack(lambda: make_ssm_state(cfg, batch), cfg.n_layers)
+        n_groups = cfg.n_layers // cfg.attn_every
+        shared = stack(lambda: make_cache(cfg, batch, max_len), n_groups)
+        return states, shared
+    if cfg.use_mla:
+        return stack(lambda: make_mla_cache(cfg, batch, max_len),
+                     cfg.n_layers), None
+    return stack(lambda: make_cache(cfg, batch, max_len),
+                 cfg.n_layers), None
+
+
+def prefill(params: dict, batch: Dict[str, Array], cfg: ModelConfig,
+            max_len: int):
+    """Run the prompt through the model, returning last-token logits and a
+    cache sized ``max_len``."""
+    b, s = batch["tokens"].shape
+    caches, shared = init_cache(cfg, b, max_len)
+    logits, nc, nsh, _ = forward(params, batch, cfg, caches=caches,
+                                 shared_caches=shared)
+    return logits[:, -1], (nc, nsh)
+
+
+def decode_step(params: dict, cache, tokens: Array, cfg: ModelConfig,
+                batch_extras: Optional[Dict[str, Array]] = None):
+    """One decode step.  tokens: (B,) int32.  Returns (logits, new_cache)."""
+    caches, shared = cache
+    # position = current cache length (uniform across batch by construction)
+    positions = None
+    lens = _cache_lens(cache, cfg)
+    if lens is not None:
+        positions = lens[:, None]
+    batch = {"tokens": tokens[:, None]}
+    if batch_extras:
+        batch.update(batch_extras)
+    logits, nc, nsh, _ = forward(params, batch, cfg, caches=caches,
+                                 shared_caches=shared, positions=positions)
+    return logits[:, -1], (nc, nsh)
+
+
+def _cache_lens(cache, cfg: ModelConfig) -> Optional[Array]:
+    caches, shared = cache
+    if cfg.family in ("ssm",):
+        return None  # positionless (no rope in SSD path)
+    if cfg.family == "hybrid":
+        return shared["len"][0] if shared is not None else None
+    if cfg.family == "vlm":
+        return caches["len"][0, 0]
+    if cfg.family == "audio":
+        return caches["self"]["len"][0]
+    return caches["len"][0]
+
+
+# --------------------------------------------------------------------------
+# Abstract input specs for the dry-run (no allocation)
+# --------------------------------------------------------------------------
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of a given cell."""
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    sds = jax.ShapeDtypeStruct
+    if shape.kind in ("train", "prefill"):
+        batch = {"tokens": sds((b, s), i32)}
+        if shape.kind == "train":
+            batch["labels"] = sds((b, s), i32)
+        if cfg.family == "vlm":
+            batch["vision"] = sds((b, cfg.n_vision_tokens, cfg.d_model),
+                                  jnp.bfloat16)
+        if cfg.family == "audio":
+            batch["audio"] = sds((b, cfg.n_audio_frames, cfg.d_model),
+                                 jnp.bfloat16)
+        return batch
+    # decode: one token against a cache of size seq_len
+    batch = {"tokens": sds((b,), i32)}
+    if cfg.family == "vlm":
+        batch["vision"] = sds((b, cfg.n_vision_tokens, cfg.d_model),
+                              jnp.bfloat16)
+    if cfg.family == "audio":
+        batch["audio"] = sds((b, cfg.n_audio_frames, cfg.d_model),
+                             jnp.bfloat16)
+    return batch
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_len: int):
+    """ShapeDtypeStructs of the cache pytree (eval_shape, no allocation)."""
+    return jax.eval_shape(lambda: init_cache(cfg, batch, max_len))

@@ -1,0 +1,239 @@
+"""Mixture-of-Experts FFN with sort-based token dispatch.
+
+Dispatch uses the argsort-to-expert-order + capacity-bounded scatter
+formulation (static shapes, no (T, E, C) one-hot tensor), which keeps the
+HLO compact and lets the expert dimension shard across the ``model`` axis
+(expert parallelism) — the scatter/gather become the EP all-to-alls.
+
+Supports top-k routing with renormalised gates, shared (always-on) experts
+(DeepSeek-V2), and a capacity factor; overflowing tokens fall back to the
+shared path / residual only.
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+from .layers import dense_init, ffn, ffn_init, project
+
+Array = jax.Array
+
+
+def moe_init(key: Array, cfg: ModelConfig) -> dict:
+    ffe = cfg.d_ff_expert or cfg.d_ff
+    ks = jax.random.split(key, 4)
+    e_keys = jax.random.split(ks[0], 3)
+    p = {
+        "router": {"w": dense_init(ks[1], cfg.d_model, cfg.n_experts)},
+        "experts": {
+            "w_up": jax.vmap(
+                lambda k: dense_init(k, cfg.d_model, ffe))(
+                jax.random.split(e_keys[0], cfg.n_experts)),
+            "w_gate": jax.vmap(
+                lambda k: dense_init(k, cfg.d_model, ffe))(
+                jax.random.split(e_keys[1], cfg.n_experts)),
+            "w_down": jax.vmap(
+                lambda k: dense_init(k, ffe, cfg.d_model))(
+                jax.random.split(e_keys[2], cfg.n_experts)),
+        },
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = ffn_init(ks[2], cfg,
+                               d_ff=cfg.n_shared_experts * ffe)
+    return p
+
+
+def _capacity(n_tokens: int, cfg: ModelConfig) -> int:
+    c = int(np.ceil(cfg.capacity_factor * n_tokens * cfg.top_k
+                    / cfg.n_experts))
+    return max(8, -(-c // 8) * 8)  # pad to a lane-friendly multiple
+
+
+def moe_apply(p: dict, x: Array, cfg: ModelConfig
+              ) -> Tuple[Array, Array]:
+    """Returns (output, aux_loss) — aux is the switch load-balancing loss.
+
+    K4 (perf): REPRO_MOE_GROUPS=G dispatches within G independent batch
+    groups (vmap) instead of one global sort.  With G = the data-parallel
+    degree, routing/sort/scatter stay shard-local and the only cross-device
+    movement is the expert-dim resharding (the true EP all-to-all), instead
+    of global gathers of the (T·k, d) dispatch tensors."""
+    groups = int(os.environ.get("REPRO_MOE_GROUPS", "1"))
+    if groups > 1 and x.shape[0] % groups == 0:
+        if os.environ.get("REPRO_MOE_EXPLICIT"):
+            return _moe_apply_grouped(p, x, cfg, groups)
+        bg = x.shape[0] // groups
+        xg = x.reshape(groups, bg, *x.shape[1:])
+        yg, auxg = jax.vmap(lambda xx: _moe_apply_flat(p, xx, cfg))(xg)
+        return yg.reshape(x.shape), jnp.mean(auxg)
+    return _moe_apply_flat(p, x, cfg)
+
+
+def _shard_ge(buf: Array) -> Array:
+    """Constrain a (G, E, ...) dispatch buffer to (dp, model, ...) so the
+    expert einsum and its backward stay shard-local (K4-explicit)."""
+    from .layers import _SHARD_CTX
+    mesh, dp = _SHARD_CTX["mesh"], _SHARD_CTX["dp"]
+    if mesh is None:
+        return buf
+    import numpy as _np
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    dp_t = dp if isinstance(dp, tuple) else (dp,)
+    dp_size = int(_np.prod([mesh.shape[a] for a in dp_t]))
+    tp = _SHARD_CTX["tp"]
+    spec = [None] * buf.ndim
+    if buf.shape[0] % dp_size == 0:
+        spec[0] = dp
+    if buf.shape[1] % mesh.shape[tp] == 0:
+        spec[1] = tp
+    return jax.lax.with_sharding_constraint(
+        buf, NamedSharding(mesh, P(*spec)))
+
+
+def _moe_apply_grouped(p: dict, x: Array, cfg: ModelConfig, groups: int
+                       ) -> Tuple[Array, Array]:
+    """K4-explicit: grouped dispatch with a first-class group axis so the
+    (G, E, C, d) buffers can carry (data, model) sharding constraints —
+    the vmap formulation cannot express them, and XLA otherwise gathers
+    the buffers across the mesh in the expert-einsum backward."""
+    b, s, d = x.shape
+    t_all = b * s
+    tg = t_all // groups
+    k, e = cfg.top_k, cfg.n_experts
+    xt = x.reshape(groups, tg, d)
+
+    logits = jnp.einsum("gtd,de->gte", xt.astype(jnp.float32),
+                        p["router"]["w"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_i = jax.lax.top_k(probs, k)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+    me = jnp.mean(probs, axis=1)
+    ce = jnp.mean(jax.nn.one_hot(top_i[..., 0], e, dtype=jnp.float32),
+                  axis=1)
+    aux = e * jnp.mean(jnp.sum(me * ce, axis=-1))
+
+    flat_e = top_i.reshape(groups, tg * k)
+    flat_w = top_p.reshape(groups, tg * k).astype(x.dtype)
+    flat_t = jnp.broadcast_to(
+        jnp.repeat(jnp.arange(tg), k)[None], (groups, tg * k))
+    order = jnp.argsort(flat_e, axis=-1, stable=True)
+    se = jnp.take_along_axis(flat_e, order, axis=-1)
+    st = jnp.take_along_axis(flat_t, order, axis=-1)
+    sw = jnp.take_along_axis(flat_w, order, axis=-1)
+    g_idx = jnp.broadcast_to(jnp.arange(groups)[:, None],
+                             (groups, tg * k))
+    counts = jnp.zeros((groups, e), jnp.int32).at[g_idx, flat_e].add(1)
+    offsets = jnp.concatenate(
+        [jnp.zeros((groups, 1), jnp.int32),
+         jnp.cumsum(counts, axis=-1)[:, :-1]], axis=-1)
+    pos = jnp.arange(tg * k)[None] - jnp.take_along_axis(offsets, se,
+                                                         axis=-1)
+    cap = _capacity(tg, cfg)
+    keep = pos < cap
+    pos_w = jnp.where(keep, pos, cap)
+
+    buf = jnp.zeros((groups, e, cap, d), dtype=x.dtype)
+    xt_rows = jnp.take_along_axis(xt, st[..., None], axis=1)
+    buf = buf.at[g_idx, se, pos_w].set(xt_rows, mode="drop")
+    buf = _shard_ge(buf)
+
+    ew = p["experts"]
+    act = jax.nn.gelu if cfg.act == "gelu" else jax.nn.silu
+    up = jnp.einsum("gecd,edf->gecf", buf, ew["w_up"].astype(x.dtype))
+    gate = jnp.einsum("gecd,edf->gecf", buf,
+                      ew["w_gate"].astype(x.dtype))
+    out_buf = jnp.einsum("gecf,efd->gecd", act(gate) * up,
+                         ew["w_down"].astype(x.dtype))
+    out_buf = _shard_ge(out_buf)
+
+    gathered = out_buf[g_idx, se, pos_w] \
+        * (sw * keep.astype(x.dtype))[..., None]
+    y = jnp.zeros((groups, tg, d), dtype=x.dtype).at[g_idx, st].add(
+        gathered)
+    if "shared" in p:
+        from .layers import ffn as _ffn
+        y = y + _ffn(p["shared"], xt, cfg)
+    return y.reshape(b, s, d), aux
+
+
+def _moe_apply_flat(p: dict, x: Array, cfg: ModelConfig
+                    ) -> Tuple[Array, Array]:
+    b, s, d = x.shape
+    t = b * s
+    k = cfg.top_k
+    e = cfg.n_experts
+    xt = x.reshape(t, d)
+
+    logits = project(p["router"], xt.astype(jnp.float32),
+                     cfg.replace(analog=False))
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_i = jax.lax.top_k(probs, k)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    # --- load-balance aux (Switch): e * <f_i * p_i> -------------------------
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.mean(
+        jax.nn.one_hot(top_i[:, 0], e, dtype=jnp.float32), axis=0)
+    aux = e * jnp.sum(me * ce)
+
+    # --- sort-based dispatch -------------------------------------------------
+    flat_e = top_i.reshape(-1)                       # (t*k,)
+    flat_w = top_p.reshape(-1).astype(x.dtype)
+    flat_t = jnp.repeat(jnp.arange(t), k)
+    order = jnp.argsort(flat_e, stable=True)
+    se, st, sw = flat_e[order], flat_t[order], flat_w[order]
+    counts = jnp.bincount(flat_e, length=e)
+    offsets = jnp.concatenate([jnp.zeros((1,), counts.dtype),
+                               jnp.cumsum(counts)[:-1]])
+    pos = jnp.arange(t * k) - offsets[se]
+    cap = _capacity(t, cfg)
+    keep = pos < cap
+    pos_w = jnp.where(keep, pos, cap)                # cap index -> dropped
+
+    buf = jnp.zeros((e, cap, d), dtype=x.dtype)
+    buf = buf.at[se, pos_w].set(xt[st], mode="drop")
+
+    # --- expert FFN, batched over the (shardable) expert dim -----------------
+    ew = p["experts"]
+    up = jnp.einsum("ecd,edf->ecf", buf, ew["w_up"].astype(x.dtype))
+    gate = jnp.einsum("ecd,edf->ecf", buf, ew["w_gate"].astype(x.dtype))
+    act = jax.nn.gelu if cfg.act == "gelu" else jax.nn.silu
+    hidden = act(gate) * up
+    out_buf = jnp.einsum("ecf,efd->ecd", hidden,
+                         ew["w_down"].astype(x.dtype))
+
+    # --- combine -------------------------------------------------------------
+    gathered = out_buf[se, pos_w] * (sw * keep.astype(x.dtype))[:, None]
+    y = jnp.zeros((t, d), dtype=x.dtype).at[st].add(gathered)
+
+    if "shared" in p:
+        y = y + ffn(p["shared"], xt, cfg)
+    return y.reshape(b, s, d), aux
+
+
+def moe_dense_reference(p: dict, x: Array, cfg: ModelConfig) -> Array:
+    """Oracle: compute every expert densely and mask by top-k (tests)."""
+    b, s, d = x.shape
+    xt = x.reshape(b * s, d)
+    logits = xt.astype(jnp.float32) @ p["router"]["w"]
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_i = jax.lax.top_k(probs, cfg.top_k)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+    gates = jnp.zeros_like(probs)
+    gates = jax.vmap(lambda g, i, v: g.at[i].set(v))(gates, top_i, top_p)
+    ew = p["experts"]
+    act = jax.nn.gelu if cfg.act == "gelu" else jax.nn.silu
+    up = jnp.einsum("td,edf->etf", xt, ew["w_up"].astype(xt.dtype))
+    gate = jnp.einsum("td,edf->etf", xt, ew["w_gate"].astype(xt.dtype))
+    out = jnp.einsum("etf,efd->etd", act(gate) * up,
+                     ew["w_down"].astype(xt.dtype))
+    y = jnp.einsum("etd,te->td", out, gates.astype(xt.dtype))
+    if "shared" in p:
+        y = y + ffn(p["shared"], xt, cfg)
+    return y.reshape(b, s, d)

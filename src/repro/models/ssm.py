@@ -1,0 +1,202 @@
+"""Mamba-2 SSD (state-space duality) layer — arXiv:2405.21060.
+
+Implements the chunked SSD algorithm: within-chunk interactions are a
+masked (decay-weighted) attention-like quadratic form; across chunks a
+linear recurrence carries the (H, N, P) state.  Decode is the O(1)
+recurrent step.  Multi-head: scalar A per head, shared (grouped) B/C.
+
+Shapes: x (B, S, D); internally (B, S, H, P) with P = ssm_head_dim,
+H = expand * D / P; state N = ssm_state; chunk L = ssm_chunk.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+from .layers import dense_init, project, rmsnorm, rmsnorm_init
+
+Array = jax.Array
+
+
+def _dims(cfg: ModelConfig):
+    d_in = cfg.ssm_expand * cfg.d_model
+    h = d_in // cfg.ssm_head_dim
+    return d_in, h, cfg.ssm_state, cfg.ssm_groups
+
+
+def ssm_init(key: Array, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    d_in, h, n, g = _dims(cfg)
+    ks = jax.random.split(key, 6)
+    conv_dim = d_in + 2 * g * n
+    return {
+        "in_proj": {"w": dense_init(
+            ks[0], d, 2 * d_in + 2 * g * n + h)},
+        "conv_w": 0.1 * jax.random.normal(
+            ks[1], (cfg.ssm_conv, conv_dim), dtype=jnp.float32),
+        "conv_b": jnp.zeros((conv_dim,), dtype=jnp.float32),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, h, dtype=jnp.float32)),
+        "d_skip": jnp.ones((h,), dtype=jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.exp(jax.random.uniform(
+                ks[2], (h,), minval=np.log(1e-3), maxval=np.log(1e-1))))),
+        "norm": rmsnorm_init(d_in),
+        "out_proj": {"w": dense_init(ks[3], d_in, d)},
+    }
+
+
+def _causal_conv(x: Array, w: Array, b: Array,
+                 state: Optional[Array] = None
+                 ) -> Tuple[Array, Array]:
+    """Depthwise causal conv along sequence.  x: (B, S, C); w: (K, C).
+
+    Returns (y, new_state) with state = last K-1 inputs for decode."""
+    k = w.shape[0]
+    if state is None:
+        x_pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    else:
+        x_pad = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    y = sum(x_pad[:, i:i + x.shape[1], :] * w[i] for i in range(k))
+    new_state = x_pad[:, -(k - 1):, :] if k > 1 else None
+    return jax.nn.silu(y + b.astype(x.dtype)), new_state
+
+
+def _split_proj(zxbcdt: Array, cfg: ModelConfig):
+    d_in, h, n, g = _dims(cfg)
+    z, xbc, dt = jnp.split(zxbcdt, [d_in, 2 * d_in + 2 * g * n], axis=-1)
+    return z, xbc, dt
+
+
+def _ssd_chunked(xh: Array, dt: Array, a_log: Array, bmat: Array,
+                 cmat: Array, chunk: int,
+                 h0: Optional[Array] = None) -> Tuple[Array, Array]:
+    """Chunked SSD scan.
+
+    xh: (B, S, H, P); dt: (B, S, H) (post-softplus); bmat/cmat: (B, S, G, N).
+    Returns (y (B,S,H,P), final_state (B,H,N,P)).
+    """
+    b, s, h, p = xh.shape
+    g, n = bmat.shape[2], bmat.shape[3]
+    nc = s // chunk
+    rep = h // g
+
+    lam = -jnp.exp(a_log)[None, None, :] * dt          # (B,S,H) log-decay <0
+    xc = xh.reshape(b, nc, chunk, h, p)
+    dtc = dt.reshape(b, nc, chunk, h)
+    lamc = lam.reshape(b, nc, chunk, h)
+    bc = jnp.repeat(bmat.reshape(b, nc, chunk, g, n), rep, axis=3)
+    cc = jnp.repeat(cmat.reshape(b, nc, chunk, g, n), rep, axis=3)
+
+    cs = jnp.cumsum(lamc, axis=2)                      # (B,nc,L,H)
+    total = cs[:, :, -1, :]                            # (B,nc,H)
+
+    # ---- intra-chunk (quadratic, decay-masked) ------------------------------
+    # decay(i>=j) = exp(cs_i - cs_j); scores_ij = C_i.B_j dt_j decay_ij
+    dmat = cs[:, :, :, None, :] - cs[:, :, None, :, :]   # (B,nc,L,L,H)
+    tri = jnp.tril(jnp.ones((chunk, chunk), dtype=bool))
+    dmat = jnp.where(tri[None, None, :, :, None], dmat, -jnp.inf)
+    cb = jnp.einsum("bnihd,bnjhd->bnijh", cc, bc)        # (B,nc,L,L,H)
+    w_ij = cb * jnp.exp(dmat) * dtc[:, :, None, :, :]
+    y_intra = jnp.einsum("bnijh,bnjhp->bnihp", w_ij, xc)
+
+    # ---- chunk states --------------------------------------------------------
+    # state_c = sum_j exp(total - cs_j) dt_j B_j (x) x_j   (B,nc,H,N,P)
+    wj = jnp.exp(total[:, :, None, :] - cs) * dtc        # (B,nc,L,H)
+    states = jnp.einsum("bnjh,bnjhd,bnjhp->bnhdp", wj, bc, xc)
+
+    # ---- inter-chunk recurrence ----------------------------------------------
+    def step(hprev, xs):
+        st, tot = xs                                   # (B,H,N,P), (B,H)
+        hnew = hprev * jnp.exp(tot)[..., None, None] + st
+        return hnew, hprev
+
+    if h0 is None:
+        h0 = jnp.zeros((b, h, n, p), dtype=xh.dtype)
+    h_last, h_befores = jax.lax.scan(
+        step, h0,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(total, 1, 0)))
+    h_before = jnp.moveaxis(h_befores, 0, 1)           # (B,nc,H,N,P)
+
+    # ---- inter-chunk contribution --------------------------------------------
+    y_inter = jnp.einsum("bnihd,bnhdp->bnihp",
+                         cc * jnp.exp(cs)[..., None], h_before)
+    y = (y_intra + y_inter).reshape(b, s, h, p)
+    return y, h_last
+
+
+def ssm_apply(p: dict, x: Array, cfg: ModelConfig, *,
+              state: Optional[dict] = None
+              ) -> Tuple[Array, Optional[dict]]:
+    """Full-sequence (train/prefill) or single-step (decode) SSD layer.
+
+    ``state`` = {"h": (B,H,N,P), "conv": (B,K-1,C)} for decode.
+    """
+    b, s, d = x.shape
+    d_in, h, n, g = _dims(cfg)
+    zxbcdt = project(p["in_proj"], x, cfg)
+    z, xbc, dt = _split_proj(zxbcdt, cfg)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"][None, None, :])
+
+    if state is None or s > 1:
+        # full-sequence path (train, or prefill starting from `state`)
+        conv_in = None if state is None else state["conv"]
+        h0 = None if state is None else state["h"].astype(jnp.float32)
+        xbc, conv_state = _causal_conv(xbc, p["conv_w"], p["conv_b"],
+                                       state=conv_in)
+        xh = xbc[..., :d_in].reshape(b, s, h, cfg.ssm_head_dim)
+        bmat = xbc[..., d_in:d_in + g * n].reshape(b, s, g, n)
+        cmat = xbc[..., d_in + g * n:].reshape(b, s, g, n)
+        pad = (-s) % cfg.ssm_chunk
+        if pad:
+            xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            dtp = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+            bmat = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            cmat = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        else:
+            dtp = dt
+        y, h_last = _ssd_chunked(
+            xh.astype(jnp.float32), dtp, p["a_log"],
+            bmat.astype(jnp.float32), cmat.astype(jnp.float32),
+            cfg.ssm_chunk, h0=h0)
+        y = y[:, :s]
+        xh = xh[:, :s]
+        new_state = None
+        if conv_state is not None:
+            new_state = {"h": h_last, "conv": conv_state}
+    else:
+        # ---- decode: recurrent step ----------------------------------------
+        xbc, conv_state = _causal_conv(xbc, p["conv_w"], p["conv_b"],
+                                       state=state["conv"])
+        xh = xbc[..., :d_in].reshape(b, 1, h, cfg.ssm_head_dim)
+        bmat = xbc[..., d_in:d_in + g * n].reshape(b, 1, g, n)
+        cmat = xbc[..., d_in + g * n:].reshape(b, 1, g, n)
+        rep = h // g
+        bh = jnp.repeat(bmat[:, 0], rep, axis=1).astype(jnp.float32)
+        ch = jnp.repeat(cmat[:, 0], rep, axis=1).astype(jnp.float32)
+        lam = jnp.exp(-jnp.exp(p["a_log"])[None, :] * dt[:, 0])  # (B,H)
+        hx = state["h"] * lam[..., None, None] + jnp.einsum(
+            "bh,bhd,bhp->bhdp", dt[:, 0], bh,
+            xh[:, 0].astype(jnp.float32))
+        y = jnp.einsum("bhd,bhdp->bhp", ch, hx)[:, None]
+        new_state = {"h": hx, "conv": conv_state}
+
+    y = y + p["d_skip"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(b, s, d_in).astype(x.dtype)
+    y = rmsnorm(p["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    return project(p["out_proj"], y, cfg), new_state
+
+
+def make_ssm_state(cfg: ModelConfig, batch: int) -> dict:
+    d_in, h, n, g = _dims(cfg)
+    conv_dim = d_in + 2 * g * n
+    return {
+        "h": jnp.zeros((batch, h, n, cfg.ssm_head_dim), dtype=jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim),
+                          dtype=jnp.float32),
+    }

@@ -1,0 +1,90 @@
+"""Batched serving engine: prefill + KV-cache decode with sampling.
+
+Static-batch engine (the production-scale path is exercised by the dry-run
+``serve_step`` cells; this engine is the runnable CPU/example path):
+
+    engine = Engine(cfg, params, max_len=512)
+    texts = engine.generate(prompts, max_new_tokens=64)
+
+Supports greedy and temperature sampling, per-sequence EOS stop, and
+left-padding-free ragged prompts via per-row prefill lengths.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import model as M
+
+Array = jax.Array
+
+
+@dataclasses.dataclass
+class SamplingParams:
+    temperature: float = 0.0      # 0 => greedy
+    max_new_tokens: int = 32
+    eos_id: Optional[int] = None
+
+
+class Engine:
+    def __init__(self, cfg: ModelConfig, params, max_len: int = 512,
+                 extras: Optional[dict] = None):
+        self.cfg = cfg
+        self.params = params
+        self.max_len = max_len
+        self.extras = extras or {}
+        self._decode = jax.jit(self._decode_impl)
+        self._prefill = jax.jit(self._prefill_impl)
+
+    def _prefill_impl(self, params, tokens):
+        batch = {"tokens": tokens, **self.extras}
+        return M.prefill(params, batch, self.cfg, max_len=self.max_len)
+
+    def _decode_impl(self, params, cache, tok, key, temperature):
+        logits, cache = M.decode_step(params, cache, tok, self.cfg,
+                                      batch_extras=self.extras or None)
+        greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        sampled = jax.random.categorical(
+            key, logits / jnp.maximum(temperature, 1e-6)).astype(jnp.int32)
+        nxt = jnp.where(temperature > 0, sampled, greedy)
+        return nxt, cache
+
+    def generate(self, prompts: Sequence[Sequence[int]],
+                 sp: SamplingParams = SamplingParams(),
+                 seed: int = 0) -> List[List[int]]:
+        """Greedy/temperature decoding for a batch of token prompts.
+
+        Ragged prompts are right-aligned to the longest one: shorter rows
+        prefill with their own content left-trimmed (the cache ``len``
+        bookkeeping keeps attention windows correct per row).
+        """
+        b = len(prompts)
+        plen = max(len(p) for p in prompts)
+        toks = np.zeros((b, plen), dtype=np.int32)
+        for i, p in enumerate(prompts):
+            toks[i, plen - len(p):] = p  # left-pad with 0s
+        logits, cache = self._prefill(self.params, jnp.asarray(toks))
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+        key = jax.random.PRNGKey(seed)
+        out = [[int(t)] for t in np.asarray(tok)]
+        done = np.zeros(b, dtype=bool)
+        for i in range(sp.max_new_tokens - 1):
+            key, k = jax.random.split(key)
+            tok, cache = self._decode(self.params, cache, tok, k,
+                                      jnp.float32(sp.temperature))
+            t_host = np.asarray(tok)
+            for j in range(b):
+                if not done[j]:
+                    out[j].append(int(t_host[j]))
+                    if sp.eos_id is not None and t_host[j] == sp.eos_id:
+                        done[j] = True
+            if done.all():
+                break
+        return out

@@ -1,0 +1,1 @@
+"""Training substrate: optimizers, train loop, compression, checkpoints."""

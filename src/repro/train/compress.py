@@ -1,0 +1,58 @@
+"""Int8 gradient compression with error feedback.
+
+Models the wire format of a compressed data-parallel reduction (1 byte per
+gradient element instead of 4) — the distributed-optimization trick for
+cross-pod DP at 512+ chips, where the pod-axis all-reduce rides the slow
+inter-pod links.  Error feedback (Seide et al., 2014; Karimireddy et al.,
+2019) accumulates the quantisation residual locally so SGD convergence is
+preserved; tests/test_train.py checks training still converges.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+LEVELS = 127.0
+
+
+def init_error_feedback(params) -> Any:
+    return jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+
+
+def _q8(g: Array) -> Tuple[Array, Array]:
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / LEVELS
+    q = jnp.clip(jnp.round(g / scale), -LEVELS, LEVELS).astype(jnp.int8)
+    return q, scale
+
+
+def _dq8(q: Array, scale: Array) -> Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_decompress(grads, err_fb) -> Tuple[Any, Any]:
+    """Quantise each gradient leaf to int8 (+ per-leaf scale), dequantise,
+    and carry the residual in the error-feedback buffer."""
+
+    def leaf(g, e):
+        g32 = g.astype(jnp.float32) + e
+        q, scale = _q8(g32)
+        deq = _dq8(q, scale)
+        return deq.astype(g.dtype), g32 - deq
+
+    flat = jax.tree.map(leaf, grads, err_fb,
+                        is_leaf=lambda x: isinstance(x, jax.Array))
+    new_grads = jax.tree.map(lambda t: t[0], flat,
+                             is_leaf=lambda x: isinstance(x, tuple))
+    new_err = jax.tree.map(lambda t: t[1], flat,
+                           is_leaf=lambda x: isinstance(x, tuple))
+    return new_grads, new_err
+
+
+def compression_ratio(grads) -> float:
+    """Wire-bytes ratio vs fp32 (int8 payload + one fp32 scale per leaf)."""
+    total = sum(g.size * 4 for g in jax.tree.leaves(grads))
+    wire = sum(g.size + 4 for g in jax.tree.leaves(grads))
+    return wire / total

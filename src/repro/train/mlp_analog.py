@@ -1,0 +1,186 @@
+"""The paper's workload: a 784-300-10 MLP trained by backprop ON the
+simulated crossbar (paper §VI, Figs. 14-15).
+
+Modes:
+  numeric    — fp32 SGD (the paper's "numeric" curve)
+  analog     — forward=VMM, backward=MVM, update=outer-product through a
+               device model (ideal / taox / no-noise / linearized)
+  pc         — periodic carry (paper Fig. 15)
+
+All analog modes share the same protocol: online SGD, mini-batch
+aggregation of the rank-1 updates, per-layer bias row inside the array.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from functools import partial
+from typing import Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (AdcConfig, CrossbarConfig, DeviceConfig, IDEAL,
+                        LINEARIZED, TAOX, analog_linear_apply,
+                        analog_linear_init, apply_update, pc_backward,
+                        pc_carry, pc_forward, pc_init, pc_update)
+from repro.data.synthetic import make_digits
+
+Array = jax.Array
+
+DEVICES: Dict[str, DeviceConfig] = {
+    "ideal": IDEAL,
+    "taox": TAOX.replace(write_noise=0.5),
+    "taox-nonoise": TAOX.replace(write_noise=0.0),
+    "linearized": LINEARIZED.replace(write_noise=0.5),
+}
+
+
+@dataclasses.dataclass
+class MLPRun:
+    mode: str = "analog"           # numeric | analog | pc
+    device: str = "taox"
+    hidden: int = 300
+    lr: float = 0.05
+    batch: int = 10
+    epochs: int = 4
+    n_train: int = 8000
+    n_test: int = 2000
+    in_bits: int = 8
+    out_bits: int = 8
+    n_cells: int = 3               # pc
+    base: float = 4.0              # pc
+    carry_every: int = 10          # pc
+    seed: int = 0
+
+    def crossbar(self) -> CrossbarConfig:
+        return CrossbarConfig(
+            rows=1024, cols=1024, device=DEVICES[self.device],
+            adc=AdcConfig(in_bits=self.in_bits, out_bits=self.out_bits))
+
+
+def _with_bias(x: Array) -> Array:
+    return jnp.concatenate([x, jnp.ones((x.shape[0], 1), x.dtype)], -1)
+
+
+def train_mlp(run: MLPRun, log: Optional[Callable[[str], None]] = print
+              ) -> Dict[str, List[float]]:
+    """Returns {"acc": per-epoch test accuracy, "final": last}."""
+    xtr, ytr = make_digits(run.n_train, seed=run.seed)
+    xte, yte = make_digits(run.n_test, seed=run.seed + 1)
+    h = run.hidden
+    key = jax.random.PRNGKey(run.seed)
+    k1, k2, ktr = jax.random.split(key, 3)
+    cfg = run.crossbar()
+    dev = cfg.device
+
+    if run.mode == "numeric":
+        w1 = jax.random.normal(k1, (785, h)) / np.sqrt(785)
+        w2 = jax.random.normal(k2, (h + 1, 10)) / np.sqrt(h + 1)
+        params = (w1, w2)
+
+        def fwd(params, x):
+            w1, w2 = params
+            hid = jax.nn.sigmoid(_with_bias(x) @ w1)
+            return _with_bias(hid) @ w2
+
+        @jax.jit
+        def step(params, x, y, key):
+            def loss(params):
+                lg = fwd(params, x)
+                return jnp.mean(-jax.nn.log_softmax(lg)[
+                    jnp.arange(x.shape[0]), y])
+            g = jax.grad(loss)(params)
+            return tuple(p - run.lr * gi for p, gi in zip(params, g))
+
+        @jax.jit
+        def acc(params, x, y):
+            return jnp.mean(jnp.argmax(fwd(params, x), -1) == y)
+
+    elif run.mode == "analog":
+        p1 = analog_linear_init(k1, 785, h, cfg)
+        p2 = analog_linear_init(k2, h + 1, 10, cfg)
+        params = (p1, p2)
+
+        def fwd(params, x, key=None):
+            p1, p2 = params
+            hid = jax.nn.sigmoid(analog_linear_apply(p1, _with_bias(x),
+                                                     cfg, key))
+            return analog_linear_apply(p2, _with_bias(hid), cfg, key)
+
+        @jax.jit
+        def step(params, x, y, key):
+            p1, p2 = params
+            kf, ku1, ku2 = jax.random.split(key, 3)
+
+            def loss(p1, p2):
+                lg = fwd((p1, p2), x, kf)
+                return jnp.mean(-jax.nn.log_softmax(lg)[
+                    jnp.arange(x.shape[0]), y])
+
+            g1, g2 = jax.grad(loss, (0, 1))(p1, p2)
+            nk1 = ku1 if dev.write_noise > 0 else None
+            nk2 = ku2 if dev.write_noise > 0 else None
+            g1n = apply_update(p1["g"], -run.lr * g1["g"] * p1["w_scale"],
+                               dev, nk1)
+            g2n = apply_update(p2["g"], -run.lr * g2["g"] * p2["w_scale"],
+                               dev, nk2)
+            return {**p1, "g": g1n}, {**p2, "g": g2n}
+
+        @jax.jit
+        def acc(params, x, y):
+            return jnp.mean(jnp.argmax(fwd(params, x), -1) == y)
+
+    elif run.mode == "pc":
+        p1 = pc_init(k1, 785, h, cfg, n_cells=run.n_cells, base=run.base)
+        p2 = pc_init(k2, h + 1, 10, cfg, n_cells=run.n_cells,
+                     base=run.base)
+        params = (p1, p2)
+
+        @jax.jit
+        def step(params, x, y, key):
+            p1, p2 = params
+            kf1, kf2, ku1, ku2, kb = jax.random.split(key, 5)
+            xb = _with_bias(x)
+            z1 = pc_forward(p1, xb, cfg, kf1)
+            hid = jax.nn.sigmoid(z1)
+            hb = _with_bias(hid)
+            logits = pc_forward(p2, hb, cfg, kf2)
+            prob = jax.nn.softmax(logits)
+            d2 = (prob - jax.nn.one_hot(y, 10)) / x.shape[0]
+            dh = pc_backward(p2, d2, cfg, kb)[:, :h] * hid * (1 - hid)
+            p2n = pc_update(p2, hb, d2, run.lr, cfg, ku2)
+            p1n = pc_update(p1, xb, dh, run.lr, cfg, ku1)
+            return p1n, p2n
+
+        carry = jax.jit(partial(pc_carry, cfg=cfg))
+
+        @jax.jit
+        def acc(params, x, y):
+            p1, p2 = params
+            hid = jax.nn.sigmoid(pc_forward(p1, _with_bias(x), cfg))
+            lg = pc_forward(p2, _with_bias(hid), cfg)
+            return jnp.mean(jnp.argmax(lg, -1) == y)
+
+    else:
+        raise ValueError(run.mode)
+
+    accs = []
+    n = 0
+    t0 = time.time()
+    for ep in range(run.epochs):
+        for i in range(run.n_train // run.batch):
+            ktr, ks = jax.random.split(ktr)
+            xb = xtr[i * run.batch:(i + 1) * run.batch]
+            yb = ytr[i * run.batch:(i + 1) * run.batch]
+            params = step(params, xb, yb, ks)
+            n += 1
+            if run.mode == "pc" and n % run.carry_every == 0:
+                params = (carry(params[0]), carry(params[1]))
+        a = float(acc(params, xte, yte))
+        accs.append(a)
+        if log:
+            log(f"  [{run.mode}/{run.device}] epoch {ep}: "
+                f"test acc {a:.4f} ({time.time() - t0:.0f}s)")
+    return {"acc": accs, "final": accs[-1]}

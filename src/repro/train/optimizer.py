@@ -1,0 +1,129 @@
+"""Optimizers: AdamW, SGD, and the analog device-model SGD.
+
+No external deps — each optimizer is (init, update) over parameter pytrees.
+``analog_sgd`` is the paper's training rule: the weight-space gradient is
+converted into a conductance request (ΔG = -lr · grad · w_scale) and pushed
+through the nonlinear/asymmetric/stochastic device model; non-conductance
+leaves (norms, reference arrays, scales) take plain SGD / stay frozen.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import CrossbarConfig, apply_update
+
+Array = jax.Array
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[..., Tuple[Any, Any]]  # (grads, state, params, **kw)
+
+
+def sgd(lr: float, momentum: float = 0.0) -> Optimizer:
+    def init(params):
+        if momentum == 0.0:
+            return ()
+        return jax.tree.map(jnp.zeros_like, params)
+
+    def update(grads, state, params, **_):
+        if momentum == 0.0:
+            new = jax.tree.map(
+                lambda p, g: p - lr * g.astype(p.dtype), params, grads)
+            return new, state
+        vel = jax.tree.map(lambda v, g: momentum * v + g, state, grads)
+        new = jax.tree.map(lambda p, v: p - lr * v.astype(p.dtype),
+                           params, vel)
+        return new, vel
+    return Optimizer(init, update)
+
+
+def adamw(lr: float, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        return {
+            "m": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32),
+                              params),
+            "v": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32),
+                              params),
+            "t": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params, **_):
+        t = state["t"] + 1
+        bc1 = 1 - b1 ** t.astype(jnp.float32)
+        bc2 = 1 - b2 ** t.astype(jnp.float32)
+        m = jax.tree.map(
+            lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32),
+            state["m"], grads)
+        v = jax.tree.map(
+            lambda v_, g: b2 * v_
+            + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state["v"], grads)
+
+        def step(p, m_, v_):
+            upd = (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps)
+            if weight_decay:
+                upd = upd + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * upd).astype(p.dtype)
+
+        new = jax.tree.map(step, params, m, v)
+        return new, {"m": m, "v": v, "t": t}
+    return Optimizer(init, update)
+
+
+def global_norm(tree) -> Array:
+    leaves = [jnp.sum(jnp.square(g.astype(jnp.float32)))
+              for g in jax.tree.leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), tree), norm
+
+
+# --------------------------------------------------------------------------
+# Analog SGD: the paper's outer-product update through the device model.
+# --------------------------------------------------------------------------
+
+def _is_analog_leaf_container(d: Any) -> bool:
+    return isinstance(d, dict) and set(d) >= {"g", "ref", "w_scale"}
+
+
+def analog_sgd(lr: float, cfg: CrossbarConfig) -> Optimizer:
+    """SGD where conductance leaves update through the device model.
+
+    Expects analog layers shaped {"g", "ref", "w_scale"}; their gradients
+    arrive in weight units (see core.analog_linear).  Other leaves take
+    plain SGD.  ``update`` requires a ``key=`` kwarg for stochastic models.
+    """
+
+    def init(params):
+        return ()
+
+    def update(grads, state, params, key: Optional[Array] = None, **_):
+        flat_keys = {}
+
+        def walk(p, g, path=()):
+            if _is_analog_leaf_container(p):
+                sub_key = None
+                if cfg.device.write_noise > 0.0:
+                    if key is None:
+                        raise ValueError("analog_sgd requires key=")
+                    sub_key = jax.random.fold_in(key, hash(path) % (2**31))
+                dg_req = -lr * g["g"] * p["w_scale"]
+                g_new = apply_update(p["g"], dg_req, cfg.device,
+                                     key=sub_key)
+                return {**p, "g": g_new}
+            if isinstance(p, dict):
+                return {k: walk(p[k], g[k], path + (k,)) for k in p}
+            return p - lr * g.astype(p.dtype)
+
+        return walk(params, grads), state
+    return Optimizer(init, update)

@@ -1,0 +1,96 @@
+"""Quantiser / integrator / ADC property tests."""
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis.extra import numpy as hnp
+
+from repro.core import (AdcConfig, adc_quantize, integrator_saturation,
+                        quantize_input)
+from repro.core.adc import quantize_dequantize
+
+
+@settings(deadline=None, max_examples=60)
+@given(x=hnp.arrays(np.float32, (4, 16),
+                    elements=st.floats(-100, 100, width=32)),
+       bits=st.sampled_from([2, 4, 8]))
+def test_quantize_roundtrip_error_bounded(x, bits):
+    cfg = AdcConfig(in_bits=bits)
+    x = jnp.asarray(x)
+    x_int, scale = quantize_input(x, cfg)
+    # codes are integers within the signed range
+    assert bool(jnp.all(jnp.abs(x_int) <= cfg.in_levels))
+    np.testing.assert_array_equal(np.asarray(x_int), np.round(x_int))
+    # round-trip error ≤ 0.5 LSB
+    err = jnp.abs(x_int * scale - x).max()
+    assert float(err) <= 0.5 * float(scale) + 1e-6
+
+
+def test_zero_maps_to_zero():
+    cfg = AdcConfig()
+    x = jnp.zeros((3, 5))
+    x_int, scale = quantize_input(x, cfg)
+    np.testing.assert_array_equal(np.asarray(x_int), 0)
+
+
+def test_quantize_dequantize_idempotent():
+    cfg = AdcConfig(in_bits=4)
+    x = jax.random.normal(jax.random.PRNGKey(0), (8, 8))
+    once = quantize_dequantize(x, cfg)
+    twice = quantize_dequantize(once, cfg)
+    np.testing.assert_allclose(once, twice, atol=1e-6)
+
+
+def test_dynamic_range_tracks_signal():
+    cfg = AdcConfig(range_mode="dynamic", sat_sigmas=4.0)
+    q_small = 0.1 * jax.random.normal(jax.random.PRNGKey(0), (16, 1, 1, 32))
+    q_big = 100.0 * q_small
+    _, sat_s = integrator_saturation(q_small, cfg, n_rows=64,
+                                     reduce_axes=(0, 3))
+    _, sat_b = integrator_saturation(q_big, cfg, n_rows=64,
+                                     reduce_axes=(0, 3))
+    np.testing.assert_allclose(np.asarray(sat_b / sat_s), 100.0, rtol=1e-4)
+
+
+def test_dynamic_range_ignores_padded_zero_columns():
+    # A tile whose columns are mostly structural zeros must size its range
+    # from the live columns only (regression: 300x10 layer collapse).
+    key = jax.random.PRNGKey(1)
+    live = jax.random.normal(key, (32, 1, 1, 4))
+    q = jnp.concatenate([live, jnp.zeros((32, 1, 1, 60))], axis=-1)
+    cfg = AdcConfig(range_mode="dynamic", sat_sigmas=4.0)
+    _, sat = integrator_saturation(q, cfg, n_rows=64, reduce_axes=(0, 3))
+    rms_live = float(jnp.sqrt(jnp.mean(live ** 2)))
+    np.testing.assert_allclose(float(sat[0, 0, 0, 0]), 4.0 * rms_live,
+                               rtol=1e-4)
+
+
+def test_fixed_range_worst_case():
+    cfg = AdcConfig(range_mode="fixed", sat_frac=0.03, in_bits=8)
+    q = jnp.asarray([[1e9]])
+    out, sat = integrator_saturation(q, cfg, n_rows=1024, g_max=1.0)
+    np.testing.assert_allclose(float(sat), 0.03 * 127 * 1024, rtol=1e-6)
+    assert float(out[0, 0]) == float(sat)
+
+
+def test_adc_monotone_and_bounded():
+    cfg = AdcConfig(out_bits=8)
+    sat = jnp.asarray(1.0)
+    q = jnp.linspace(-2, 2, 401)  # includes values beyond the range
+    y = adc_quantize(q, sat, cfg)
+    assert bool(jnp.all(jnp.diff(y) >= 0))
+    assert float(jnp.abs(y).max()) <= 1.0 + 1e-6
+    # outputs land on the LSB lattice (some codes may be skipped)
+    lsb = 1.0 / cfg.out_levels
+    codes = np.diff(np.asarray(jnp.unique(y))) / lsb
+    np.testing.assert_allclose(codes, np.round(codes), atol=1e-3)
+
+
+def test_adc_bits_control_resolution():
+    sat = jnp.asarray(1.0)
+    q = jax.random.uniform(jax.random.PRNGKey(0), (1000,), minval=-1,
+                           maxval=1)
+    err8 = jnp.abs(adc_quantize(q, sat, AdcConfig(out_bits=8)) - q).mean()
+    err2 = jnp.abs(adc_quantize(q, sat, AdcConfig(out_bits=2)) - q).mean()
+    assert float(err2) > 10 * float(err8)

@@ -1,0 +1,155 @@
+"""Device-model unit + property tests (paper §V)."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis.extra import numpy as hnp
+
+from repro.core import (IDEAL, TAOX, DeviceConfig, VoltageModel, apply_update,
+                        lut_from_analytic, lut_from_pulse_train)
+from repro.core.device import reset_factor, set_factor, write_noise_sigma
+
+KEY = jax.random.PRNGKey(0)
+
+
+def test_ideal_update_exact_inside_window():
+    g = jnp.asarray([0.2, 0.5, 0.8])
+    dg = jnp.asarray([0.1, -0.2, 0.05])
+    out = apply_update(g, dg, IDEAL)
+    np.testing.assert_allclose(out, g + dg, rtol=1e-6)
+
+
+def test_update_clips_to_window():
+    g = jnp.asarray([0.05, 0.95])
+    dg = jnp.asarray([-0.5, +0.5])
+    out = apply_update(g, dg, IDEAL)
+    np.testing.assert_allclose(out, [0.0, 1.0], atol=1e-7)
+
+
+@settings(deadline=None, max_examples=50)
+@given(
+    g=hnp.arrays(np.float32, (8,), elements=st.floats(0, 1, width=32)),
+    dg=hnp.arrays(np.float32, (8,),
+                  elements=st.floats(-2, 2, width=32)),
+    nu=st.floats(0.1, 10.0),
+    noise=st.floats(0.0, 2.0),
+)
+def test_update_always_in_window(g, dg, nu, noise):
+    cfg = DeviceConfig(kind="taox", nu_set=nu, nu_reset=nu,
+                       write_noise=noise)
+    out = apply_update(jnp.asarray(g), jnp.asarray(dg), cfg, key=KEY)
+    assert bool(jnp.all(out >= cfg.gmin) and jnp.all(out <= cfg.gmax))
+    assert not bool(jnp.any(jnp.isnan(out)))
+
+
+def test_set_factor_shape():
+    x = jnp.linspace(0, 1, 101)
+    f = set_factor(x, 5.0)
+    # normalised at the window centre; vanishing at the top rail
+    np.testing.assert_allclose(f[50], 1.0, atol=1e-5)
+    np.testing.assert_allclose(f[-1], 0.0, atol=1e-6)
+    assert bool(jnp.all(jnp.diff(f) < 0))  # monotone decreasing
+    # amplified at the bottom of the window (paper Fig. 10)
+    assert float(f[0]) > 5.0
+
+
+def test_asymmetry_mirror():
+    x = jnp.linspace(0, 1, 11)
+    np.testing.assert_allclose(reset_factor(x, 3.0),
+                               set_factor(1 - x, 3.0), rtol=1e-6)
+
+
+def test_nonlinearity_attenuates_near_rails():
+    cfg = DeviceConfig(kind="taox", nu_set=5.0, nu_reset=5.0,
+                       write_noise=0.0)
+    g_hi = jnp.asarray([0.9])
+    up = apply_update(g_hi, jnp.asarray([0.01]), cfg) - g_hi
+    dn = g_hi - apply_update(g_hi, jnp.asarray([-0.01]), cfg)
+    # near the top rail, positive updates are tiny, negative updates large
+    # ("a single negative pulse ... undoing the training from multiple
+    #  previous positive pulses")
+    assert float(dn[0]) > 5 * float(up[0])
+
+
+def test_stochasticity_reproducible_and_zero_mean():
+    cfg = DeviceConfig(kind="linearized", write_noise=1.0)
+    g = jnp.full((2000,), 0.5)
+    dg = jnp.full((2000,), 0.02)
+    a = apply_update(g, dg, cfg, key=KEY)
+    b = apply_update(g, dg, cfg, key=KEY)
+    np.testing.assert_array_equal(a, b)
+    c = apply_update(g, dg, cfg, key=jax.random.PRNGKey(1))
+    assert float(jnp.abs(a - c).max()) > 0.0
+    # mean change matches the request
+    np.testing.assert_allclose(float((a - g).mean()), 0.02, atol=2e-3)
+
+
+def test_write_noise_sigma_random_walk_scaling():
+    cfg = DeviceConfig(write_noise=0.5, pulse_dg=1 / 256)
+    s1 = write_noise_sigma(jnp.asarray(1 / 256), cfg)
+    s4 = write_noise_sigma(jnp.asarray(4 / 256), cfg)
+    np.testing.assert_allclose(float(s4 / s1), 2.0, rtol=1e-5)
+
+
+def test_voltage_model_eq6():
+    vm = VoltageModel(d1=4.0, d2=3.0, vmin_p=0.8, vmin_n=-0.7)
+    v = jnp.linspace(-2, 2, 201)
+    dg = vm.delta_g(v)
+    # dead zone
+    dead = (v > vm.vmin_n) & (v < vm.vmin_p)
+    assert bool(jnp.all(dg[dead] == 0))
+    # monotone overall
+    assert bool(jnp.all(jnp.diff(dg) >= 0))
+    # inverse round-trip
+    want = jnp.asarray([0.01, 0.1, 1.0, 5.0])
+    v_p = vm.voltage_for(want, +1)
+    np.testing.assert_allclose(vm.delta_g(v_p), want, rtol=1e-4)
+    v_n = vm.voltage_for(want, -1)
+    np.testing.assert_allclose(vm.delta_g(v_n), -want, rtol=1e-4)
+
+
+def test_lut_matches_analytic():
+    cfg = TAOX.replace(write_noise=0.0)
+    lut = lut_from_analytic(cfg, n_bins=256)
+    g = jnp.linspace(0.1, 0.9, 33)
+    dg_req = jnp.full_like(g, 4 * cfg.pulse_dg)
+    a = apply_update(g, dg_req, cfg)
+    b = lut.apply_update(g, dg_req, pulse_dg=cfg.pulse_dg)
+    # LUT applies n small pulses at the *initial* state; analytic applies
+    # one scaled step — equal to first order in dg.
+    np.testing.assert_allclose(a, b, atol=2e-3)
+
+
+def test_lut_from_pulse_train_recovers_shape():
+    # Simulate the paper's measurement protocol on the analytic device and
+    # check the binned LUT recovers the state-dependent mean update.
+    cfg = TAOX.replace(write_noise=0.05)
+    n_pulses, n_cycles = 200, 30
+    key = jax.random.PRNGKey(42)
+    traces = []
+    g = jnp.full((n_cycles,), 0.5)
+    row = [g]
+    for i in range(n_pulses):
+        key, k = jax.random.split(key)
+        g = apply_update(g, jnp.full_like(g, cfg.pulse_dg), cfg, key=k)
+        row.append(g)
+    for i in range(n_pulses):
+        key, k = jax.random.split(key)
+        g = apply_update(g, jnp.full_like(g, -cfg.pulse_dg), cfg, key=k)
+        row.append(g)
+    trace = np.stack([np.asarray(r) for r in row], axis=1)
+    lut = lut_from_pulse_train(trace, n_bins=32)
+    # mean SET step at mid-window within 2x of pulse_dg (the LUT window is
+    # the *observed* trace range, so coordinates shift slightly)
+    mid = np.argmin(np.abs(lut.centers - 0.5))
+    assert lut.mean_set[mid] == pytest.approx(cfg.pulse_dg, rel=1.0)
+    assert lut.mean_set[mid] > 0
+    # SET steps shrink toward the top of the window (nonlinearity shape)
+    hi = np.argmin(np.abs(lut.centers - 0.9))
+    lo = np.argmin(np.abs(lut.centers - 0.6))
+    assert lut.mean_set[hi] < lut.mean_set[lo]
+    # RESET moves conductance down
+    assert lut.mean_reset[mid] < 0

@@ -1,0 +1,79 @@
+"""Sanity checks over the committed dry-run artifacts (results/dryrun).
+
+Skipped when the sweep has not been run; regenerate with:
+    python -m repro.launch.dryrun --all --both-meshes
+"""
+import glob
+import json
+from pathlib import Path
+
+import pytest
+
+from repro.configs import ASSIGNED, applicable_shapes, get_config
+
+RESULTS = Path(__file__).resolve().parent.parent / "results" / "dryrun"
+
+pytestmark = pytest.mark.skipif(
+    not RESULTS.is_dir() or not list(RESULTS.glob("*.json")),
+    reason="dry-run sweep artifacts not present")
+
+
+def _load():
+    out = {}
+    for f in RESULTS.glob("*.json"):
+        r = json.loads(f.read_text())
+        out[(r["arch"], r["shape"], r["mesh"])] = r
+    return out
+
+
+def test_every_live_cell_present_and_ok():
+    recs = _load()
+    missing, failed = [], []
+    for arch in ASSIGNED:
+        cfg = get_config(arch)
+        for shape in applicable_shapes(cfg):
+            for mesh in ("16x16", "2x16x16"):
+                r = recs.get((arch, shape.name, mesh))
+                if r is None:
+                    missing.append((arch, shape.name, mesh))
+                elif not r["ok"]:
+                    failed.append((arch, shape.name, mesh, r.get("error")))
+    assert not missing, missing
+    assert not failed, failed
+    # 10 archs x 3 shapes + 2 ssm/hybrid long_500k = 32 cells x 2 meshes
+    assert len(recs) == 64
+
+
+def test_skipped_cells_match_spec():
+    """long_500k only exists for the sub-quadratic archs."""
+    recs = _load()
+    long_archs = {k[0] for k in recs if k[1] == "long_500k"}
+    assert long_archs == {"zamba2-1.2b", "mamba2-1.3b"}
+
+
+def test_memory_fits_hbm():
+    """Per-device params+opt+cache and temp must fit v5e-class 16 GB."""
+    for r in _load().values():
+        total = r["mem"]["argument_gb"] + r["mem"]["temp_per_device_gb"]
+        assert total < 16.0, (r["arch"], r["shape"], r["mesh"], total)
+
+
+def test_roofline_terms_finite_and_positive():
+    for r in _load().values():
+        h = r["hlo"]
+        assert h["flops"] > 0
+        assert h["traffic_bytes"] > 0
+        assert h["collective_bytes"] >= 0
+        assert h["collective_f32_bytes"] <= h["collective_bytes"] + 1e-6
+
+
+def test_train_flops_within_remat_window_of_6nd():
+    """Compiled train FLOPs should be 1-2.5x of 6·N_active·D."""
+    for r in _load().values():
+        if r["kind"] != "train":
+            continue
+        m = r["model"]
+        model_flops = 6 * m["params_active"] * m["seq_len"] \
+            * m["global_batch"]
+        ratio = r["hlo"]["flops"] * r["devices"] / model_flops
+        assert 0.9 < ratio < 3.0, (r["arch"], ratio)

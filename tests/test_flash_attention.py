@@ -1,0 +1,76 @@
+"""Flash-attention Pallas kernel: interpret-mode sweeps vs jnp oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import (flash_attention,
+                                           flash_attention_ref)
+
+KEY = jax.random.PRNGKey(0)
+
+CASES = [
+    # b, sq, skv, h, kvh, hd, bq, bk
+    (2, 64, 64, 4, 2, 16, 16, 16),     # GQA, square
+    (1, 128, 128, 8, 8, 32, 32, 64),   # MHA, uneven blocks
+    (2, 32, 64, 4, 1, 16, 32, 16),     # MQA, cross lengths
+    (1, 64, 64, 2, 2, 64, 64, 64),     # single block
+]
+
+
+def _inputs(b, sq, skv, h, kvh, hd, dtype=jnp.float32):
+    ks = jax.random.split(KEY, 3)
+    return (jax.random.normal(ks[0], (b, sq, h, hd), dtype),
+            jax.random.normal(ks[1], (b, skv, kvh, hd), dtype),
+            jax.random.normal(ks[2], (b, skv, kvh, hd), dtype))
+
+
+@pytest.mark.parametrize("b,sq,skv,h,kvh,hd,bq,bk", CASES)
+@pytest.mark.parametrize("causal", [True, False])
+def test_matches_reference(b, sq, skv, h, kvh, hd, bq, bk, causal):
+    if causal and sq != skv:
+        pytest.skip("causal requires aligned q/kv for this oracle")
+    q, k, v = _inputs(b, sq, skv, h, kvh, hd)
+    o = flash_attention(q, k, v, causal=causal, block_q=bq, block_k=bk,
+                        interpret=True)
+    o_ref = flash_attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(o_ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_bf16_inputs():
+    q, k, v = _inputs(2, 64, 64, 4, 2, 16, dtype=jnp.bfloat16)
+    o = flash_attention(q, k, v, block_q=32, block_k=32, interpret=True)
+    o_ref = flash_attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(o_ref, np.float32),
+                               rtol=3e-2, atol=3e-2)
+
+
+def test_block_size_invariance():
+    q, k, v = _inputs(1, 128, 128, 4, 4, 16)
+    o1 = flash_attention(q, k, v, block_q=128, block_k=128,
+                         interpret=True)
+    o2 = flash_attention(q, k, v, block_q=32, block_k=16, interpret=True)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_causality():
+    """Perturbing future keys must not change past outputs."""
+    q, k, v = _inputs(1, 64, 64, 2, 2, 16)
+    o1 = flash_attention(q, k, v, block_q=16, block_k=16, interpret=True)
+    k2 = k.at[:, 40:].set(9.0)
+    v2 = v.at[:, 40:].set(-9.0)
+    o2 = flash_attention(q, k2, v2, block_q=16, block_k=16,
+                         interpret=True)
+    np.testing.assert_allclose(np.asarray(o1[:, :40]),
+                               np.asarray(o2[:, :40]), rtol=1e-5,
+                               atol=1e-5)
+    assert float(jnp.abs(o1[:, 41:] - o2[:, 41:]).max()) > 0.1
+
+
+def test_rejects_misaligned_blocks():
+    q, k, v = _inputs(1, 60, 60, 2, 2, 16)
+    with pytest.raises(ValueError):
+        flash_attention(q, k, v, block_q=16, block_k=16, interpret=True)

@@ -1,0 +1,161 @@
+"""Pallas kernel validation: interpret-mode execution vs pure-jnp oracles.
+
+Sweeps shapes (single tile, padded, multi-tile, ragged), dtypes, I/O
+precisions and device models; every case asserts allclose against the
+``repro.kernels.ref`` oracle (which is the simulation semantics the paper's
+accuracy analysis depends on).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (IDEAL, TAOX, AdcConfig, CrossbarConfig,
+                        make_reference, weights_to_conductance)
+from repro.core.adc import quantize_input
+from repro.core.xbar_ops import outer_update as core_outer_update
+from repro.core.xbar_ops import mvm as core_mvm
+from repro.core.xbar_ops import vmm as core_vmm
+from repro.kernels import ops
+from repro.kernels.ref import vmm_bitplanes
+from repro.kernels.xbar_update import xbar_outer_update
+from repro.kernels.xbar_vmm import xbar_mvm, xbar_vmm
+
+KEY = jax.random.PRNGKey(0)
+
+SHAPES = [
+    # (K, N, B, rows, cols)
+    (16, 16, 4, 16, 16),      # exact single tile
+    (40, 24, 6, 16, 16),      # ragged padding
+    (64, 48, 8, 16, 16),      # multi-tile both dims
+    (33, 17, 3, 32, 16),      # rectangular tiles
+    (128, 128, 16, 64, 64),   # bigger tile
+]
+
+
+def _setup(k, n, rows, cols, in_bits=8, out_bits=8, device=IDEAL, seed=0):
+    cfg = CrossbarConfig(rows=rows, cols=cols, device=device,
+                         adc=AdcConfig(in_bits=in_bits, out_bits=out_bits))
+    kw, kx = jax.random.split(jax.random.PRNGKey(seed))
+    w = jax.random.normal(kw, (k, n)) / np.sqrt(k)
+    g, ws = weights_to_conductance(w, cfg)
+    ref = make_reference((k, n), cfg)
+    return cfg, g, ref, ws
+
+
+@pytest.mark.parametrize("k,n,b,rows,cols", SHAPES)
+def test_vmm_kernel_matches_ref(k, n, b, rows, cols):
+    cfg, g, ref, ws = _setup(k, n, rows, cols)
+    x = jax.random.normal(jax.random.PRNGKey(1), (b, k))
+    y_ref = core_vmm(x, g, ref, ws, cfg)
+    y_ker = ops.vmm(x, g, ref, ws, cfg, interpret=True)
+    np.testing.assert_allclose(np.asarray(y_ker), np.asarray(y_ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("k,n,b,rows,cols", SHAPES)
+def test_mvm_kernel_matches_ref(k, n, b, rows, cols):
+    cfg, g, ref, ws = _setup(k, n, rows, cols)
+    d = jax.random.normal(jax.random.PRNGKey(2), (b, n))
+    y_ref = core_mvm(d, g, ref, ws, cfg)
+    y_ker = ops.mvm(d, g, ref, ws, cfg, interpret=True)
+    np.testing.assert_allclose(np.asarray(y_ker), np.asarray(y_ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("in_bits,out_bits", [(8, 8), (4, 4), (2, 2),
+                                              (8, 4), (4, 8)])
+def test_vmm_kernel_precision_sweep(in_bits, out_bits):
+    cfg, g, ref, ws = _setup(48, 32, 16, 16, in_bits=in_bits,
+                             out_bits=out_bits)
+    x = jax.random.normal(jax.random.PRNGKey(3), (5, 48))
+    y_ref = core_vmm(x, g, ref, ws, cfg)
+    y_ker = ops.vmm(x, g, ref, ws, cfg, interpret=True)
+    np.testing.assert_allclose(np.asarray(y_ker), np.asarray(y_ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_vmm_kernel_dtype_sweep(dtype):
+    cfg, g, ref, ws = _setup(32, 32, 16, 16)
+    x = jax.random.normal(jax.random.PRNGKey(4), (4, 32)).astype(dtype)
+    y_ref = core_vmm(x.astype(jnp.float32), g, ref, ws, cfg)
+    y_ker = ops.vmm(x, g, ref, ws, cfg, interpret=True)
+    np.testing.assert_allclose(np.asarray(y_ker, dtype=np.float32),
+                               np.asarray(y_ref), rtol=2e-2, atol=2e-2)
+
+
+def test_vmm_kernel_fixed_range_mode():
+    cfg, g, ref, ws = _setup(32, 32, 16, 16)
+    cfg = cfg.replace(adc=AdcConfig(range_mode="fixed", sat_frac=0.05))
+    x = jax.random.normal(jax.random.PRNGKey(5), (4, 32))
+    y_ref = core_vmm(x, g, ref, ws, cfg)
+    y_ker = ops.vmm(x, g, ref, ws, cfg, interpret=True)
+    np.testing.assert_allclose(np.asarray(y_ker), np.asarray(y_ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("k,n,b,rows,cols", SHAPES[:4])
+@pytest.mark.parametrize("device", [IDEAL, TAOX,
+                                    TAOX.replace(write_noise=0.0)])
+def test_update_kernel_matches_ref(k, n, b, rows, cols, device):
+    cfg, g, ref, ws = _setup(k, n, rows, cols, device=device)
+    x = jax.random.normal(jax.random.PRNGKey(6), (b, k))
+    d = jax.random.normal(jax.random.PRNGKey(7), (b, n)) * 0.2
+    g_ref = core_outer_update(g, x, d, 0.05, ws, cfg, key=KEY)
+    g_ker = ops.outer_update(g, x, d, 0.05, ws, cfg, key=KEY,
+                             interpret=True)
+    np.testing.assert_allclose(np.asarray(g_ker), np.asarray(g_ref),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_update_kernel_batch_blocking_invariant():
+    """Splitting the batch across grid steps must not change the update
+    (the outer product is accumulated before the nonlinearity applies)."""
+    cfg, g, ref, ws = _setup(24, 24, 8, 8, device=TAOX)
+    x = jax.random.normal(jax.random.PRNGKey(8), (12, 24))
+    d = jax.random.normal(jax.random.PRNGKey(9), (12, 24)) * 0.1
+    g_full = ops.outer_update(g, x, d, 0.1, ws, cfg, key=KEY,
+                              interpret=True, block_b=12)
+    g_split = ops.outer_update(g, x, d, 0.1, ws, cfg, key=KEY,
+                               interpret=True, block_b=4)
+    np.testing.assert_allclose(np.asarray(g_split), np.asarray(g_full),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_update_kernel_requires_noise_key():
+    cfg, g, ref, ws = _setup(16, 16, 16, 16, device=TAOX)
+    x = jax.random.normal(jax.random.PRNGKey(10), (2, 16))
+    d = jax.random.normal(jax.random.PRNGKey(11), (2, 16))
+    with pytest.raises(ValueError):
+        ops.outer_update(g, x, d, 0.1, ws, cfg, interpret=True)
+
+
+def test_bitplane_oracle_equals_integer_matmul():
+    """Executable proof that the temporal pulse train == integer matmul
+    (the TPU-adaptation argument of DESIGN.md §2)."""
+    for bits in (8, 4, 2):
+        cfg = CrossbarConfig(rows=16, cols=16, device=IDEAL,
+                             adc=AdcConfig(in_bits=bits))
+        x = jax.random.normal(jax.random.PRNGKey(12), (4, 32))
+        x_int, _ = quantize_input(x, cfg.adc)
+        diff = jax.random.normal(jax.random.PRNGKey(13), (32, 24)) * 0.1
+        q_bp = vmm_bitplanes(x_int, diff, cfg)
+        q_mm = x_int @ diff
+        np.testing.assert_allclose(np.asarray(q_bp), np.asarray(q_mm),
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_raw_kernel_integer_charge_levels():
+    """With out_bits high and fixed range, kernel charge must be the exact
+    integer dot product (no analog distortion at the math level)."""
+    cfg = CrossbarConfig(rows=16, cols=16, device=IDEAL,
+                         adc=AdcConfig(in_bits=8, out_bits=16,
+                                       range_mode="fixed", sat_frac=1.0))
+    key1, key2 = jax.random.split(KEY)
+    x_int = jnp.round(jax.random.uniform(key1, (4, 32)) * 10 - 5)
+    diff = (jnp.round(jax.random.uniform(key2, (32, 16)) * 8) - 4) / 8.0
+    q = xbar_vmm(x_int, diff, cfg, interpret=True)
+    # quantisation lattice of the fixed-range 16-bit ADC is fine enough
+    np.testing.assert_allclose(np.asarray(q), np.asarray(x_int @ diff),
+                               rtol=0, atol=0.15)

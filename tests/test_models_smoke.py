@@ -1,0 +1,129 @@
+"""Per-architecture smoke tests: reduced configs, one forward/train step on
+CPU, output shapes + no NaNs (+ prefill/decode equivalence)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ASSIGNED, get_config
+from repro.models import model as M
+
+KEY = jax.random.PRNGKey(0)
+TKEY = jax.random.PRNGKey(7)
+S = 24
+
+
+def _batch(cfg, b=2, s=S, labels=True):
+    toks = jax.random.randint(TKEY, (b, s), 0, cfg.vocab)
+    batch = {"tokens": toks}
+    if labels:
+        batch["labels"] = jnp.roll(toks, -1, axis=1)
+    if cfg.family == "vlm":
+        batch["vision"] = jax.random.normal(
+            TKEY, (b, cfg.n_vision_tokens, cfg.d_model), jnp.bfloat16)
+    if cfg.family == "audio":
+        batch["audio"] = jax.random.normal(
+            TKEY, (b, cfg.n_audio_frames, cfg.d_model), jnp.bfloat16)
+    return batch
+
+
+@pytest.mark.parametrize("name", ASSIGNED)
+def test_forward_shapes_and_no_nans(name):
+    cfg = get_config(name, smoke=True)
+    params = M.init_params(KEY, cfg)
+    batch = _batch(cfg)
+    logits, _, _, aux = M.forward(params, batch, cfg)
+    assert logits.shape == (2, S, cfg.vocab)
+    assert logits.dtype == jnp.float32
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    assert bool(jnp.isfinite(aux))
+
+
+@pytest.mark.parametrize("name", ASSIGNED)
+def test_one_train_step_no_nans(name):
+    cfg = get_config(name, smoke=True)
+    params = M.init_params(KEY, cfg)
+    batch = _batch(cfg)
+    (loss, metrics), grads = jax.value_and_grad(
+        M.loss_fn, has_aux=True)(params, batch, cfg)
+    assert np.isfinite(float(loss))
+    flat = jax.tree.leaves(grads)
+    assert all(bool(jnp.all(jnp.isfinite(g))) for g in flat)
+    # an SGD step perturbs params and loss stays finite
+    params2 = jax.tree.map(lambda p, g: p - 0.01 * g.astype(p.dtype),
+                           params, grads)
+    loss2, _ = M.loss_fn(params2, batch, cfg)
+    assert np.isfinite(float(loss2))
+
+
+@pytest.mark.parametrize("name", ASSIGNED)
+def test_prefill_decode_matches_full_forward(name):
+    cfg = get_config(name, smoke=True)
+    if cfg.n_experts:
+        # avoid MoE capacity drops so decode == full forward exactly
+        cfg = cfg.replace(capacity_factor=8.0)
+    params = M.init_params(KEY, cfg)
+    batch = _batch(cfg, labels=False)
+    extras = {k: v for k, v in batch.items() if k != "tokens"}
+    logits, _, _, _ = M.forward(params, batch, cfg)
+    want = logits[:, -1]
+    _, cache = M.prefill(params,
+                         {"tokens": batch["tokens"][:, :S - 1], **extras},
+                         cfg, max_len=S + 8)
+    got, cache = M.decode_step(params, cache, batch["tokens"][:, S - 1],
+                               cfg, batch_extras=extras)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=5e-2, atol=5e-2)
+
+
+@pytest.mark.parametrize("name", ["gemma-2b", "mamba2-1.3b",
+                                  "zamba2-1.2b"])
+def test_multi_step_decode_advances(name):
+    cfg = get_config(name, smoke=True)
+    params = M.init_params(KEY, cfg)
+    batch = _batch(cfg, labels=False)
+    extras = {k: v for k, v in batch.items() if k != "tokens"}
+    _, cache = M.prefill(params,
+                         {"tokens": batch["tokens"][:, :8], **extras},
+                         cfg, max_len=32)
+    tok = batch["tokens"][:, 8]
+    outs = []
+    for i in range(4):
+        logits, cache = M.decode_step(params, cache, tok, cfg,
+                                      batch_extras=extras)
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        outs.append(logits)
+        assert bool(jnp.all(jnp.isfinite(logits)))
+    # logits differ across steps (cache actually advances)
+    assert float(jnp.abs(outs[0] - outs[-1]).max()) > 0
+
+
+@pytest.mark.parametrize("name", ASSIGNED)
+def test_analog_mode_forward(name):
+    """Every arch runs with analog-crossbar projection semantics."""
+    cfg = get_config(name, smoke=True).replace(analog=True,
+                                               analog_rows=32,
+                                               analog_cols=32)
+    params = M.init_params(KEY, cfg)
+    batch = _batch(cfg)
+    loss, metrics = M.loss_fn(params, batch, cfg)
+    assert np.isfinite(float(loss))
+
+
+def test_param_count_sanity():
+    """Full configs land near their nameplate sizes."""
+    expect = {
+        "gemma-2b": (2.0e9, 3.5e9),
+        "stablelm-3b": (2.0e9, 3.8e9),
+        "starcoder2-3b": (2.5e9, 3.8e9),
+        "granite-20b": (15e9, 24e9),
+        "deepseek-v2-lite-16b": (12e9, 20e9),
+        "whisper-medium": (0.5e9, 1.2e9),
+        "mamba2-1.3b": (0.9e9, 1.8e9),
+        "zamba2-1.2b": (0.9e9, 2.2e9),
+        "llama4-scout-17b-a16e": (60e9, 130e9),   # total (not active)
+        "llama-3.2-vision-90b": (70e9, 110e9),
+    }
+    for name, (lo, hi) in expect.items():
+        n = get_config(name).param_count()
+        assert lo < n < hi, (name, n)

@@ -1,0 +1,89 @@
+"""Periodic-carry (paper §VI.B / Fig. 15) tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (IDEAL, TAOX, AdcConfig, CrossbarConfig, pc_backward,
+                        pc_carry, pc_effective_weights, pc_forward, pc_init,
+                        pc_update)
+
+CFG = CrossbarConfig(rows=128, cols=128, device=IDEAL,
+                     adc=AdcConfig(in_bits=8, out_bits=8))
+KEY = jax.random.PRNGKey(0)
+
+
+def test_carry_preserves_effective_weights():
+    p = pc_init(KEY, 64, 32, CFG, n_cells=3, base=4.0)
+    x = jax.random.normal(jax.random.PRNGKey(1), (8, 64))
+    d = jax.random.normal(jax.random.PRNGKey(2), (8, 32)) * 0.1
+    p = pc_update(p, x, d, 0.1, CFG)
+    w_before = pc_effective_weights(p, CFG)
+    p2 = pc_carry(p, CFG)
+    w_after = pc_effective_weights(p2, CFG)
+    np.testing.assert_allclose(np.asarray(w_after), np.asarray(w_before),
+                               atol=1e-5)
+
+
+def test_carry_recenters_lsb():
+    p = pc_init(KEY, 16, 16, CFG, n_cells=3, base=4.0)
+    x = jnp.ones((4, 16))
+    d = jnp.ones((4, 16)) * 0.2
+    for _ in range(5):
+        p = pc_update(p, x, d, 0.2, CFG)
+    lsb_dev_before = float(jnp.abs(p["g"][0] - CFG.g_mid).mean())
+    p2 = pc_carry(p, CFG)
+    lsb_dev_after = float(jnp.abs(p2["g"][0] - CFG.g_mid).mean())
+    assert lsb_dev_after < 0.3 * lsb_dev_before
+
+
+def test_pc_forward_matches_effective_matmul():
+    p = pc_init(KEY, 60, 24, CFG, n_cells=2, base=8.0)
+    x = jax.random.normal(jax.random.PRNGKey(3), (8, 60))
+    y = pc_forward(p, x, CFG)
+    w = pc_effective_weights(p, CFG)
+    rel = float(jnp.abs(y - x @ w).mean() / jnp.abs(x @ w).mean())
+    assert rel < 0.08, rel
+
+
+def test_pc_backward_matches_transpose():
+    p = pc_init(KEY, 60, 24, CFG, n_cells=2, base=8.0)
+    d = jax.random.normal(jax.random.PRNGKey(4), (8, 24))
+    dx = pc_backward(p, d, CFG)
+    w = pc_effective_weights(p, CFG)
+    rel = float(jnp.abs(dx - d @ w.T).mean() / jnp.abs(d @ w.T).mean())
+    assert rel < 0.08, rel
+
+
+def test_pc_tracks_sgd_on_ideal_device():
+    """With an ideal device, PC-SGD must track plain SGD weights closely."""
+    p = pc_init(KEY, 32, 16, CFG, n_cells=3, base=4.0)
+    w = pc_effective_weights(p, CFG)
+    lr = 0.05
+    key = jax.random.PRNGKey(5)
+    for i in range(20):
+        key, kx, kd = jax.random.split(key, 3)
+        x = jax.random.normal(kx, (4, 32))
+        d = jax.random.normal(kd, (4, 16)) * 0.1
+        p = pc_update(p, x, d, lr, CFG)
+        w = w - lr * jnp.einsum("bk,bn->kn", x, d)
+        if i % 5 == 4:
+            p = pc_carry(p, CFG)
+    w_pc = pc_effective_weights(p, CFG)
+    rel = float(jnp.abs(w_pc - w).mean() / jnp.abs(w).mean())
+    assert rel < 0.1, rel
+
+
+def test_pc_cells_stay_in_window_under_taox():
+    cfg = CFG.replace(device=TAOX)
+    p = pc_init(KEY, 16, 8, cfg, n_cells=3, base=4.0)
+    key = jax.random.PRNGKey(6)
+    for i in range(10):
+        key, kx, kd, ku = jax.random.split(key, 4)
+        x = jax.random.normal(kx, (4, 16))
+        d = jax.random.normal(kd, (4, 8))
+        p = pc_update(p, x, d, 0.5, cfg, key=ku)
+        p = pc_carry(p, cfg)
+    g = p["g"]
+    assert bool(jnp.all(g >= cfg.device.gmin) and
+                jnp.all(g <= cfg.device.gmax))
+    assert not bool(jnp.any(jnp.isnan(g)))
