@@ -144,6 +144,55 @@ def parse_hlo(text: str) -> Dict[str, Computation]:
     return comps
 
 
+def _operand_names(rhs: str) -> List[str]:
+    """Operand variable names of an instruction.
+
+    Handles both the terse syntax (``dot(%a, %b)``) and the scheduled-module
+    syntax where every operand carries its type (``dot(f32[8,32]{1,0} %a,
+    f32[32,32]{1,0} %b)``): split the top-level argument list of the call and
+    take the trailing token of each argument.  Never looks past the closing
+    paren, so ``metadata={op_name="jit(f)/..."}`` noise cannot leak in.
+    """
+    t = _result_type(rhs)
+    rest = rhs[len(t):].strip()
+    m = re.match(r"[\w\-]+\(", rest)
+    if not m:
+        return []
+    start, depth, end = m.end(), 1, -1
+    for i in range(start, len(rest)):
+        ch = rest[i]
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                end = i
+                break
+    if end < 0:
+        return []
+    args, buf, nest = [], [], 0
+    for ch in rest[start:end]:
+        if ch in "([{":
+            nest += 1
+        elif ch in ")]}":
+            nest -= 1
+        if ch == "," and nest == 0:
+            args.append("".join(buf))
+            buf = []
+        else:
+            buf.append(ch)
+    args.append("".join(buf))
+    names = []
+    for a in args:
+        mm = re.search(r"%?([\w.\-]+)$", a.strip())
+        if mm:
+            names.append(mm.group(1))
+    return names
+
+
+_TRIP_COUNT_RE = re.compile(r'"known_trip_count"\s*:\s*\{"n"\s*:\s*"(\d+)"')
+
+
 def _trip_count(cond: Computation) -> int:
     """lax.scan while-condition: compare(induction, constant(N), LT)."""
     consts = []
@@ -174,7 +223,7 @@ def _dot_flops(ins: Instr, symtab: Dict[str, str]) -> float:
         for d in dims.split(","):
             out_elems *= int(d)
     # contracted size from lhs shape + lhs_contracting_dims
-    ops = re.findall(r"\(%?([\w.\-]+)[,)]", ins.rhs)
+    ops = _operand_names(ins.rhs)
     mc = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.rhs)
     contracted = 1
     if ops and mc is not None:
@@ -256,9 +305,13 @@ def analyze(text: str, default_group: int = 1) -> Dict[str, float]:
             if op == "while":
                 mb = _BODY_RE.search(ins.rhs)
                 mc = _COND_RE.search(ins.rhs)
+                mt = _TRIP_COUNT_RE.search(ins.rhs)
                 if mb:
                     sub = mb.group(1)
-                if mc and mc.group(1) in comps:
+                if mt:
+                    # XLA annotates resolved loops with known_trip_count.
+                    mult = float(mt.group(1))
+                elif mc and mc.group(1) in comps:
                     mult = float(_trip_count(comps[mc.group(1)]))
             elif op in ("fusion", "call", "conditional", "map"):
                 m = _CALLS_RE.search(ins.rhs)

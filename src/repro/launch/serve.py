@@ -2,6 +2,12 @@
 prompts (the production-scale decode path is exercised by the dry-run).
 
     PYTHONPATH=src python -m repro.launch.serve --arch gemma-2b --smoke
+    PYTHONPATH=src python -m repro.launch.serve --arch lm100m --smoke \
+        --engine static          # legacy whole-batch baseline
+
+``--engine continuous`` (the default) runs the slot-based
+continuous-batching scheduler; families without a per-slot positional
+cache (ssm / hybrid / vlm / audio) fall back to the static path.
 """
 from __future__ import annotations
 
@@ -25,6 +31,12 @@ def main(argv=None):
     ap.add_argument("--max-new", type=int, default=32)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--engine", choices=["continuous", "static"],
+                    default="continuous")
+    ap.add_argument("--slots", type=int, default=None,
+                    help="decode slots for the continuous engine "
+                         "(default: batch size)")
+    ap.add_argument("--prefill-chunk", type=int, default=16)
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, smoke=args.smoke)
@@ -41,15 +53,26 @@ def main(argv=None):
         extras["audio"] = jax.numpy.zeros(
             (args.batch, cfg.n_audio_frames, cfg.d_model))
     engine = Engine(cfg, params, max_len=args.prompt_len + args.max_new + 8,
-                    extras=extras)
+                    extras=extras, n_slots=args.slots,
+                    prefill_chunk=args.prefill_chunk)
+    sp = SamplingParams(temperature=args.temperature,
+                        max_new_tokens=args.max_new)
+    use_static = args.engine == "static" or not engine.supports_continuous
     t0 = time.time()
-    outs = engine.generate(prompts, SamplingParams(
-        temperature=args.temperature, max_new_tokens=args.max_new))
+    if use_static:
+        outs = engine.generate_static(prompts, sp, seed=args.seed)
+    else:
+        outs = engine.generate(prompts, sp, seed=args.seed)
     dt = time.time() - t0
     n_tok = sum(len(o) for o in outs)
     for i, o in enumerate(outs):
         print(f"[{i}] prompt={prompts[i][:8]}... -> {o[:16]}...")
-    print(f"{n_tok} tokens in {dt:.2f}s = {n_tok / dt:.1f} tok/s")
+    mode = "static" if use_static else "continuous"
+    print(f"[{mode}] {n_tok} tokens in {dt:.2f}s = {n_tok / dt:.1f} tok/s")
+    if not use_static:
+        eng = engine.continuous(args.slots or args.batch)
+        print(f"decode compiles={eng.decode_compiles} "
+              f"metrics={dict(eng.metrics)}")
     return outs
 
 

@@ -265,6 +265,29 @@ def _decode_sdpa(q: Array, k: Array, v: Array, kv_len: Array) -> Array:
     return o.reshape(b, 1, h, v.shape[-1]).astype(q.dtype)
 
 
+def _cached_sdpa(q: Array, k: Array, v: Array, q_pos: Array) -> Array:
+    """Chunk attention against a partially-filled cache (chunked prefill).
+
+    q: (B, Sq, H, hd); k/v: (B, S, KVH, hd) — the full cache after this
+    chunk was written; q_pos: (B, Sq) absolute positions of the queries.
+    Cache slot s is visible to the query at position p iff s <= p: causal
+    within the chunk, and slots beyond the filled prefix are masked out
+    because their index exceeds every query position.
+    """
+    b, sq, h, hd = q.shape
+    s, kvh = k.shape[1], k.shape[2]
+    group = h // kvh
+    scale = 1.0 / np.sqrt(hd)
+    qg = q.reshape(b, sq, kvh, group, hd)
+    scores = jnp.einsum("bqkgd,bskd->bqkgs", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    mask = jnp.arange(s)[None, None, :] <= q_pos[:, :, None]   # (b, sq, s)
+    scores = jnp.where(mask[:, :, None, None, :], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    o = jnp.einsum("bqkgs,bskd->bqkgd", p, v.astype(jnp.float32))
+    return o.reshape(b, sq, h, v.shape[-1]).astype(q.dtype)
+
+
 def attention(p: dict, x: Array, cfg: ModelConfig, *, causal: bool = True,
               positions: Optional[Array] = None,
               cache: Optional[dict] = None,
@@ -273,16 +296,21 @@ def attention(p: dict, x: Array, cfg: ModelConfig, *, causal: bool = True,
     """Self- or cross-attention with optional KV cache.
 
     cache = {"k": (B, S, KVH, hd), "v": ..., "len": (B,)} — decode appends
-    at position ``len`` and attends to the full cache.
+    at position ``len`` and attends to the full cache.  Append mode also
+    covers chunked prefill (sq > 1 with explicit ``positions``): the chunk
+    is written at ``len`` and attends causally to the filled prefix.  A
+    cache with ``positions=None`` and sq > 1 is a fresh full prefill.
     """
     hd = cfg.resolved_head_dim
     b, sq = x.shape[0], x.shape[1]
+    append = cache is not None and x_kv is None and (
+        sq == 1 or positions is not None)
     q = _split_heads(project(p["wq"], x, cfg), cfg.n_heads)
     kv_src = x if x_kv is None else x_kv
     if positions is None:
         positions = jnp.broadcast_to(jnp.arange(sq), (b, sq))
-    if cache is not None and x_kv is None and sq == 1:
-        # --- decode: append one token to the cache --------------------------
+    if append:
+        # --- decode / chunked prefill: append sq tokens to the cache --------
         k_new = _split_heads(project(p["wk"], x, cfg), cfg.n_kv_heads)
         v_new = _split_heads(project(p["wv"], x, cfg), cfg.n_kv_heads)
         if use_rope:
@@ -295,8 +323,11 @@ def attention(p: dict, x: Array, cfg: ModelConfig, *, causal: bool = True,
         v = jax.vmap(lambda c, n, i: jax.lax.dynamic_update_slice(
             c, n, (i, 0, 0)))(cache["v"], v_new.astype(cache["v"].dtype),
                               idx)
-        o = _decode_sdpa(q, k, v, idx + 1)
-        new_cache = {"k": k, "v": v, "len": idx + 1}
+        if sq == 1:
+            o = _decode_sdpa(q, k, v, idx + 1)
+        else:
+            o = _cached_sdpa(q, k, v, positions)
+        new_cache = {"k": k, "v": v, "len": idx + sq}
     else:
         k = _split_heads(project(p["wk"], kv_src, cfg), cfg.n_kv_heads)
         v = _split_heads(project(p["wv"], kv_src, cfg), cfg.n_kv_heads)
@@ -356,10 +387,13 @@ def mla_attention(p: dict, x: Array, cfg: ModelConfig, *,
                   cache: Optional[dict] = None
                   ) -> Tuple[Array, Optional[dict]]:
     """Multi-head latent attention.  The cache stores the compressed
-    latent (kv_lora_rank) + shared rope key — MLA's memory saving."""
+    latent (kv_lora_rank) + shared rope key — MLA's memory saving.
+    Append mode (decode, or chunked prefill when ``positions`` is given)
+    writes at the cached ``len``; see ``attention``."""
     b, sq, d = x.shape
     h = cfg.n_heads
     qk_dim = cfg.qk_nope_dim + cfg.qk_rope_dim
+    append = cache is not None and (sq == 1 or positions is not None)
     if positions is None:
         positions = jnp.broadcast_to(jnp.arange(sq), (b, sq))
     q = _split_heads(project(p["wq"], x, cfg), h)  # (b,s,h,qk_dim)
@@ -372,7 +406,7 @@ def mla_attention(p: dict, x: Array, cfg: ModelConfig, *,
     k_rope = apply_rope(k_rope[:, :, None, :], positions,
                         cfg.rope_theta)  # single shared rope head
 
-    if cache is not None and sq == 1:
+    if append:
         idx = cache["len"]
         c_all = jax.vmap(lambda c, n, i: jax.lax.dynamic_update_slice(
             c, n, (i, 0)))(cache["c_kv"], c_kv.astype(cache["c_kv"].dtype),
@@ -381,8 +415,8 @@ def mla_attention(p: dict, x: Array, cfg: ModelConfig, *,
             c, n, (i, 0)))(cache["k_rope"],
                            k_rope[:, :, 0, :].astype(cache["k_rope"].dtype),
                            idx)
-        new_cache = {"c_kv": c_all, "k_rope": kr_all, "len": idx + 1}
-        kv_len = idx + 1
+        new_cache = {"c_kv": c_all, "k_rope": kr_all, "len": idx + sq}
+        kv_len = idx + sq
     else:
         c_all, kr_all = c_kv, k_rope[:, :, 0, :]
         new_cache = None
@@ -432,8 +466,10 @@ def mla_attention(p: dict, x: Array, cfg: ModelConfig, *,
     k_full = jnp.concatenate([k_nope, k_rope_b], axis=-1)
     q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
 
-    if cache is not None and sq == 1:
+    if append and sq == 1:
         o = _decode_sdpa(q_full, k_full, v, kv_len)
+    elif append:
+        o = _cached_sdpa(q_full, k_full, v, positions)
     else:
         o = _chunked_sdpa(q_full, k_full, v, causal=True)
     out = project(p["wo"], o.reshape(b, sq, -1), cfg)

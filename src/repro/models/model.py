@@ -160,6 +160,94 @@ def decode_step(params: dict, cache, tokens: Array, cfg: ModelConfig,
     return logits[:, -1], (nc, nsh)
 
 
+def prefill_chunk(params: dict, cache, tokens: Array, cfg: ModelConfig,
+                  batch_extras: Optional[Dict[str, Array]] = None):
+    """Append a chunk of prompt tokens to an existing cache.
+
+    tokens: (B, S).  Each row's chunk is written at its current cache
+    length and attends causally to the filled prefix, so long prompts can
+    be prefilled in fixed-shape chunks interleaved with decode steps.
+    Returns (full-chunk logits (B, S, V), new_cache); rows advance by S —
+    callers padding the final chunk fix the lengths with
+    ``cache_with_lens``.  Requires a family with a positional KV cache
+    (dense / moe); SSM-state families need exact-length prefill.
+    """
+    caches, shared = cache
+    lens = _cache_lens(cache, cfg)
+    if lens is None:
+        raise ValueError(
+            f"family {cfg.family!r} has no positional cache; "
+            "chunked prefill is unsupported — use prefill()")
+    positions = lens[:, None] + jnp.arange(tokens.shape[1])[None, :]
+    batch = {"tokens": tokens}
+    if batch_extras:
+        batch.update(batch_extras)
+    logits, nc, nsh, _ = forward(params, batch, cfg, caches=caches,
+                                 shared_caches=shared, positions=positions)
+    return logits, (nc, nsh)
+
+
+def cache_lens(cache, cfg: ModelConfig) -> Optional[Array]:
+    """Per-row filled lengths of a cache, or None for positionless
+    (pure-SSM) families."""
+    return _cache_lens(cache, cfg)
+
+
+def cache_with_lens(cache, lens: Array):
+    """Return ``cache`` with every per-row length leaf set to ``lens`` (B,).
+
+    Length leaves are the ``"len"`` entries of the cache dicts (stacked as
+    (..., B), batch-last), so a (B,) vector broadcasts onto each of them.
+    """
+    def fix(path, leaf):
+        if path and isinstance(path[-1], jax.tree_util.DictKey) \
+                and path[-1].key == "len":
+            return jnp.broadcast_to(lens.astype(leaf.dtype), leaf.shape)
+        return leaf
+    return jax.tree_util.tree_map_with_path(fix, cache)
+
+
+def cache_batch_axes(cfg: ModelConfig, max_len: int):
+    """Pytree (matching the cache structure) of each leaf's batch-dim index.
+
+    The stacked cache layouts put the batch dim at a different axis per
+    family/leaf ((L, B, ...), (n_groups, inner, B, ...), ...); comparing
+    abstract shapes at two batch sizes finds it without hard-coding
+    layouts.  Used by the slot-insert/reset surgery below.
+    """
+    a = jax.eval_shape(lambda: init_cache(cfg, 2, max_len))
+    b = jax.eval_shape(lambda: init_cache(cfg, 3, max_len))
+
+    def axis_of(x, y):
+        for i, (p, q) in enumerate(zip(x.shape, y.shape)):
+            if p != q:
+                return i
+        raise ValueError(f"no batch dim found in cache leaf {x.shape}")
+    return jax.tree.map(axis_of, a, b)
+
+
+def cache_insert(dst, src, slot, axes):
+    """Write the rows of ``src`` (a cache built with a smaller batch) into
+    ``dst`` starting at batch row ``slot``.  ``axes`` comes from
+    ``cache_batch_axes``; ``slot`` may be a traced scalar, so a jitted
+    insert compiles once per engine configuration."""
+    return jax.tree.map(
+        lambda d, s, ax: jax.lax.dynamic_update_slice_in_dim(
+            d, s.astype(d.dtype), slot, axis=ax),
+        dst, src, axes)
+
+
+def cache_reset_row(cache, slot, axes):
+    """Zero batch row ``slot`` of a cache (eviction hygiene: a freed slot
+    holds no stale K/V and its length is 0 so nothing attends to it)."""
+    return jax.tree.map(
+        lambda d, ax: jax.lax.dynamic_update_slice_in_dim(
+            d, jnp.zeros_like(
+                jax.lax.dynamic_slice_in_dim(d, 0, 1, axis=ax)),
+            slot, axis=ax),
+        cache, axes)
+
+
 def _cache_lens(cache, cfg: ModelConfig) -> Optional[Array]:
     caches, shared = cache
     if cfg.family in ("ssm",):

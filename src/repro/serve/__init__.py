@@ -1,1 +1,4 @@
-"""Batched serving engine (prefill + KV-cache decode)."""
+"""Serving engines: static batch + continuous batching."""
+from .engine import ContinuousEngine, Engine, Request, SamplingParams
+
+__all__ = ["ContinuousEngine", "Engine", "Request", "SamplingParams"]

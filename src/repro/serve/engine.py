@@ -1,19 +1,38 @@
-"""Batched serving engine: prefill + KV-cache decode with sampling.
+"""Serving engines: static batch and continuous batching.
 
-Static-batch engine (the production-scale path is exercised by the dry-run
-``serve_step`` cells; this engine is the runnable CPU/example path):
+``ContinuousEngine`` is the production-shaped path: a slot-based scheduler
+over a fixed-shape decode batch.  Finished sequences are evicted from their
+slot (EOS / per-request max tokens) and queued requests are admitted into
+the freed row, so the decode batch never drains to the slowest member the
+way a static batch does.  Mechanics:
+
+  * per-slot KV cache with per-row lengths — one pytree of shape
+    (layers, n_slots, max_len, ...) whose rows advance independently,
+  * a single jitted decode step with the cache buffers donated: no
+    per-step recompilation and no per-step reallocation,
+  * chunked prefill: prompts are prefilled in fixed-shape chunks on a
+    detached single-row cache (at most one chunk per scheduler tick, so a
+    long prompt never stalls in-flight decodes), then block-copied into a
+    free slot via the model's cache insert-at-slot API,
+  * an arrival-ordered request queue; admission happens whenever a slot
+    frees up.
+
+``Engine`` keeps the original API: ``generate()`` routes through a
+continuous engine when the family supports it (dense / moe, no modality
+extras) and otherwise falls back to the legacy static loop, which is also
+kept verbatim as ``generate_static`` — the baseline the serving benchmark
+compares against.
 
     engine = Engine(cfg, params, max_len=512)
-    texts = engine.generate(prompts, max_new_tokens=64)
+    texts = engine.generate(prompts, SamplingParams(max_new_tokens=64))
 
-Supports greedy and temperature sampling, per-sequence EOS stop, and
-left-padding-free ragged prompts via per-row prefill lengths.
+Supports greedy and temperature sampling and per-sequence EOS stop.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
-from functools import partial
-from typing import List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -32,16 +51,281 @@ class SamplingParams:
     eos_id: Optional[int] = None
 
 
+@dataclasses.dataclass
+class Request:
+    """A queued generation request."""
+    id: int
+    prompt: List[int]
+    sp: SamplingParams
+    arrival: float = 0.0
+
+
+@dataclasses.dataclass
+class _Active:
+    """A request occupying a decode slot."""
+    req: Request
+    out: List[int]
+    last: int
+
+
+def _sample(logits: Array, key: Array, temps: Array) -> Array:
+    """Greedy / temperature sampling, per row.  temps: (B,)."""
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    sampled = jax.random.categorical(
+        key, logits / jnp.maximum(temps[:, None], 1e-6)).astype(jnp.int32)
+    return jnp.where(temps > 0, sampled, greedy)
+
+
+class ContinuousEngine:
+    """Slot-based continuous-batching engine (see module docstring).
+
+    Drive it either with ``serve(prompts)`` (submit everything, run to
+    completion, results in submission order) or with the streaming API —
+    ``submit()`` + repeated ``step()`` — as the benchmark's Poisson-trace
+    driver does.  ``step()`` returns the request ids completed that tick.
+    """
+
+    def __init__(self, cfg: ModelConfig, params, *, n_slots: int = 4,
+                 max_len: int = 512, prefill_chunk: int = 32,
+                 seed: int = 0):
+        if cfg.family not in ("dense", "moe"):
+            raise ValueError(
+                f"continuous batching needs a positional KV cache per slot; "
+                f"family {cfg.family!r} is served by the static engine")
+        self.cfg = cfg
+        self.params = params
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.prefill_chunk = prefill_chunk
+        self._axes = M.cache_batch_axes(cfg, max_len)
+        self._slot_cache = M.init_cache(cfg, n_slots, max_len)
+        # cache buffers are donated: every step updates in place, so the
+        # engine holds exactly one slot cache for its whole lifetime.
+        self._decode = jax.jit(self._decode_impl, donate_argnums=(1,))
+        self._chunk = jax.jit(self._chunk_impl, donate_argnums=(1,))
+        self._insert = jax.jit(self._insert_impl, donate_argnums=(0,))
+        self._reset_row = jax.jit(self._reset_row_impl, donate_argnums=(0,))
+        self._next_id = 0
+        self.reset(seed)
+
+    # ---------------------------------------------------------------- jitted
+    def _decode_impl(self, params, cache, tok, key, temps):
+        logits, cache = M.decode_step(params, cache, tok, self.cfg)
+        return _sample(logits, key, temps), cache
+
+    def _chunk_impl(self, params, cache, tokens, n_valid, key, temps):
+        """One prefill chunk on a single-row cache.  tokens: (1, C), right-
+        padded; rows advance by n_valid only, and the sampled next token
+        comes from the logits at the last *valid* position."""
+        c = tokens.shape[1]
+        logits, cache = M.prefill_chunk(params, cache, tokens, self.cfg)
+        lens = M.cache_lens(cache, self.cfg)
+        cache = M.cache_with_lens(cache, lens - (c - n_valid))
+        last = jax.lax.dynamic_index_in_dim(logits, n_valid - 1, axis=1,
+                                            keepdims=False)
+        return _sample(last, key, temps), cache
+
+    def _insert_impl(self, dst, src, slot):
+        return M.cache_insert(dst, src, slot, self._axes)
+
+    def _reset_row_impl(self, cache, slot):
+        return M.cache_reset_row(cache, slot, self._axes)
+
+    # ------------------------------------------------------------- scheduler
+    def reset(self, seed: int = 0) -> None:
+        """Clear all queued/in-flight state (freed rows are zeroed at
+        eviction and fully overwritten on insert, so the slot cache itself
+        carries over)."""
+        self._key = jax.random.PRNGKey(seed)
+        self._queue: collections.deque = collections.deque()
+        self._slots: List[Optional[_Active]] = [None] * self.n_slots
+        self._pf = None                      # (Request, row_cache, consumed)
+        self._ready = None                   # (Request, row_cache, first_tok)
+        self.completed: Dict[int, List[int]] = {}
+        self.metrics = collections.Counter()
+
+    def submit(self, prompt: Sequence[int],
+               sp: SamplingParams = SamplingParams(),
+               arrival: float = 0.0) -> int:
+        p = list(prompt)
+        c = self.prefill_chunk
+        padded = -(-len(p) // c) * c
+        if padded > self.max_len or len(p) + sp.max_new_tokens > self.max_len:
+            raise ValueError(
+                f"prompt of {len(p)} (+{sp.max_new_tokens} new, chunk {c}) "
+                f"does not fit max_len={self.max_len}")
+        rid = self._next_id
+        self._next_id += 1
+        self._queue.append(Request(id=rid, prompt=p, sp=sp, arrival=arrival))
+        return rid
+
+    def has_work(self) -> bool:
+        return bool(self._queue) or self._pf is not None \
+            or self._ready is not None \
+            or any(s is not None for s in self._slots)
+
+    def step(self) -> List[int]:
+        """One scheduler tick: admit a prefilled request into a freed slot
+        if one is waiting, run at most one prefill chunk (prefill proceeds
+        even while every slot is busy — only the final admission needs a
+        free slot), then one batched decode step over the active slots.
+        Returns completed ids."""
+        done: List[int] = []
+        if self._ready is not None:
+            slot = self._free_slot()
+            if slot is not None:
+                self._admit(*self._ready, slot)
+                self._ready = None
+        if self._ready is None \
+                and (self._pf is not None or self._queue):
+            done += self._prefill_tick()
+        if any(s is not None for s in self._slots):
+            done += self._decode_tick()
+        return done
+
+    def serve(self, prompts: Sequence[Sequence[int]],
+              sp: SamplingParams = SamplingParams()) -> List[List[int]]:
+        ids = [self.submit(p, sp) for p in prompts]
+        while self.has_work():
+            self.step()
+        return [self.completed[i] for i in ids]
+
+    @property
+    def decode_compiles(self) -> Optional[int]:
+        """Number of tracings of the jitted decode step (None if the jax
+        version doesn't expose the cache size)."""
+        size = getattr(self._decode, "_cache_size", None)
+        return size() if size is not None else None
+
+    # --------------------------------------------------------------- helpers
+    def _free_slot(self) -> Optional[int]:
+        for i, s in enumerate(self._slots):
+            if s is None:
+                return i
+        return None
+
+    def _prefill_tick(self) -> List[int]:
+        if self._pf is None:
+            req = self._queue.popleft()
+            row = M.init_cache(self.cfg, 1, self.max_len)
+            self._pf = (req, row, 0)
+        req, row, consumed = self._pf
+        chunk = req.prompt[consumed:consumed + self.prefill_chunk]
+        buf = np.zeros((1, self.prefill_chunk), np.int32)
+        buf[0, :len(chunk)] = chunk
+        self._key, k = jax.random.split(self._key)
+        temps = jnp.full((1,), req.sp.temperature, jnp.float32)
+        tok, row = self._chunk(self.params, row, jnp.asarray(buf),
+                               len(chunk), k, temps)
+        self.metrics["prefill_chunks"] += 1
+        consumed += len(chunk)
+        if consumed < len(req.prompt):
+            # intermediate chunk: nothing to read back — leave the result
+            # in flight so the chunk overlaps the decode dispatch below
+            self._pf = (req, row, consumed)
+            return []
+        # final chunk: the first generated token comes from its logits
+        self._pf = None
+        first = int(np.asarray(tok)[0])
+        if (req.sp.eos_id is not None and first == req.sp.eos_id) \
+                or req.sp.max_new_tokens <= 1:
+            self.completed[req.id] = [first]
+            return [req.id]
+        slot = self._free_slot()
+        if slot is None:
+            self._ready = (req, row, first)  # admitted at the next eviction
+        else:
+            self._admit(req, row, first, slot)
+        return []
+
+    def _admit(self, req: Request, row, first: int, slot: int) -> None:
+        self._slot_cache = self._insert(self._slot_cache, row,
+                                        jnp.int32(slot))
+        self._slots[slot] = _Active(req=req, out=[first], last=first)
+        self.metrics["admitted"] += 1
+
+    def _decode_tick(self) -> List[int]:
+        tok = np.zeros((self.n_slots,), np.int32)
+        temps = np.zeros((self.n_slots,), np.float32)
+        for i, s in enumerate(self._slots):
+            if s is not None:
+                tok[i] = s.last
+                temps[i] = s.req.sp.temperature
+        self._key, k = jax.random.split(self._key)
+        nxt, self._slot_cache = self._decode(
+            self.params, self._slot_cache, jnp.asarray(tok), k,
+            jnp.asarray(temps))
+        self.metrics["decode_steps"] += 1
+        t = np.asarray(nxt)
+        done: List[int] = []
+        for i, s in enumerate(self._slots):
+            if s is None:
+                continue
+            s.last = int(t[i])
+            s.out.append(s.last)
+            sp = s.req.sp
+            if (sp.eos_id is not None and s.last == sp.eos_id) \
+                    or len(s.out) >= sp.max_new_tokens:
+                self.completed[s.req.id] = s.out
+                done.append(s.req.id)
+                self._slots[i] = None
+                # zero the freed row: no stale K/V, and its length stops
+                # creeping toward max_len while the slot idles
+                self._slot_cache = self._reset_row(self._slot_cache,
+                                                   jnp.int32(i))
+                self.metrics["evicted"] += 1
+        return done
+
+
 class Engine:
+    """User-facing engine.  ``generate()`` keeps the original static-batch
+    signature but runs on the continuous engine whenever the model family
+    supports it; ``generate_static`` is the legacy whole-batch loop."""
+
     def __init__(self, cfg: ModelConfig, params, max_len: int = 512,
-                 extras: Optional[dict] = None):
+                 extras: Optional[dict] = None,
+                 n_slots: Optional[int] = None, prefill_chunk: int = 32):
         self.cfg = cfg
         self.params = params
         self.max_len = max_len
         self.extras = extras or {}
+        self.n_slots = n_slots
+        self.prefill_chunk = prefill_chunk
         self._decode = jax.jit(self._decode_impl)
         self._prefill = jax.jit(self._prefill_impl)
+        self._cont: Dict[int, ContinuousEngine] = {}
 
+    @property
+    def supports_continuous(self) -> bool:
+        return self.cfg.family in ("dense", "moe") and not self.extras
+
+    def continuous(self, n_slots: int) -> ContinuousEngine:
+        """The (cached) continuous engine for a given slot count — caching
+        preserves the jit caches across generate() calls."""
+        eng = self._cont.get(n_slots)
+        if eng is None:
+            eng = ContinuousEngine(
+                self.cfg, self.params, n_slots=n_slots,
+                max_len=self.max_len, prefill_chunk=self.prefill_chunk)
+            self._cont[n_slots] = eng
+        return eng
+
+    def generate(self, prompts: Sequence[Sequence[int]],
+                 sp: SamplingParams = SamplingParams(),
+                 seed: int = 0) -> List[List[int]]:
+        """Greedy/temperature decoding for a batch of token prompts.
+
+        Routed through the continuous engine (per-request chunked prefill,
+        so ragged prompts carry no left-padding contamination); families
+        without a per-slot positional cache use the static path.
+        """
+        if not self.supports_continuous:
+            return self.generate_static(prompts, sp, seed)
+        eng = self.continuous(self.n_slots or len(prompts))
+        eng.reset(seed)
+        return eng.serve(prompts, sp)
+
+    # ----------------------------------------------------- legacy static path
     def _prefill_impl(self, params, tokens):
         batch = {"tokens": tokens, **self.extras}
         return M.prefill(params, batch, self.cfg, max_len=self.max_len)
@@ -49,21 +333,14 @@ class Engine:
     def _decode_impl(self, params, cache, tok, key, temperature):
         logits, cache = M.decode_step(params, cache, tok, self.cfg,
                                       batch_extras=self.extras or None)
-        greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        sampled = jax.random.categorical(
-            key, logits / jnp.maximum(temperature, 1e-6)).astype(jnp.int32)
-        nxt = jnp.where(temperature > 0, sampled, greedy)
-        return nxt, cache
+        temps = jnp.full((logits.shape[0],), temperature)
+        return _sample(logits, key, temps), cache
 
-    def generate(self, prompts: Sequence[Sequence[int]],
-                 sp: SamplingParams = SamplingParams(),
-                 seed: int = 0) -> List[List[int]]:
-        """Greedy/temperature decoding for a batch of token prompts.
-
-        Ragged prompts are right-aligned to the longest one: shorter rows
-        prefill with their own content left-trimmed (the cache ``len``
-        bookkeeping keeps attention windows correct per row).
-        """
+    def generate_static(self, prompts: Sequence[Sequence[int]],
+                        sp: SamplingParams = SamplingParams(),
+                        seed: int = 0) -> List[List[int]]:
+        """Static batch: one shared prefill (ragged prompts right-aligned
+        by left-padding) and lock-step decode until every row finishes."""
         b = len(prompts)
         plen = max(len(p) for p in prompts)
         toks = np.zeros((b, plen), dtype=np.int32)

@@ -1,4 +1,8 @@
 """Quantiser / integrator / ADC property tests."""
+import pytest
+
+pytest.importorskip("hypothesis")
+
 import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp

@@ -1,4 +1,8 @@
 """Device-model unit + property tests (paper §V)."""
+import pytest
+
+pytest.importorskip("hypothesis")
+
 import hypothesis
 import hypothesis.strategies as st
 import jax

@@ -92,5 +92,8 @@ def test_analyze_real_lowered_module():
     r = analyze(compiled.as_text())
     want = 7 * 2 * 8 * 32 * 32
     assert r["flops"] == pytest.approx(want, rel=0.01)
-    xla = compiled.cost_analysis()["flops"]
+    xla = compiled.cost_analysis()
+    if isinstance(xla, (list, tuple)):  # jax 0.4.x returns [per-device dict]
+        xla = xla[0]
+    xla = xla["flops"]
     assert xla < r["flops"]  # the undercount this parser exists to fix
