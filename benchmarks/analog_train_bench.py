@@ -1,0 +1,163 @@
+"""Analog vs numeric transformer training benchmark.
+
+Trains the same small LM twice from identical initial weights:
+
+  numeric — fp32 SGD on the digital model (the paper's "numeric" curve),
+  analog  — in-situ on the simulated crossbars: forward=VMM, backward=MVM
+            through the same conductances, rank-k parallel-write updates
+            through the nonlinear device model (train/analog_lm.py).
+
+Emits ``BENCH_analog_train.json`` with both loss curves, the projected
+per-step energy / pJ-per-MAC on the analog, digital-ReRAM and SRAM cores
+(hwmodel/arch_cost.train_step_cost), an ideal-device/high-bit forward
+parity check against the digital model, and the compile count of the
+jitted step (must be 1).
+
+    PYTHONPATH=src python benchmarks/analog_train_bench.py --smoke
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.data.synthetic import batch_tokens, make_token_stream
+from repro.models import model as M
+from repro.train import optimizer, train_loop
+from repro.train.analog_lm import init_state, make_analog_sgd_step
+
+Array = jax.Array
+
+
+def bench_config(args):
+    base = get_config(args.arch, smoke=args.smoke)
+    kw = dict(dtype="float32", analog=True, analog_mode="device",
+              analog_device=args.device,
+              analog_in_bits=args.bits, analog_out_bits=args.bits)
+    if args.smoke:
+        # Small enough for CPU, big enough that the FFN spans several
+        # physical tiles (the per-tile ADC boundary is the point).
+        kw.update(analog_rows=64, analog_cols=64)
+    return base.replace(**kw)
+
+
+def run_analog(cfg, stream, args):
+    state = init_state(jax.random.PRNGKey(args.seed), cfg)
+    step = make_analog_sgd_step(cfg, lr=args.lr)
+    key = jax.random.PRNGKey(args.seed + 1)
+    losses, t0 = [], time.perf_counter()
+    for i in range(args.steps):
+        x, y = batch_tokens(stream, args.batch, args.seq, i)
+        key, ks = jax.random.split(key)
+        state, mets = step(state, {"tokens": jnp.asarray(x),
+                                   "labels": jnp.asarray(y)}, ks)
+        losses.append(float(mets["loss"]))
+    return {"loss": losses, "wall_s": time.perf_counter() - t0,
+            "compiles": step.compiles, "cost": step.cost,
+            "g_rail_frac": float(mets["g_rail_frac"])}
+
+
+def run_numeric(cfg, stream, args):
+    """Same model, same init weights, digital fp32 SGD."""
+    dig = cfg.replace(analog=False)
+    opt = optimizer.sgd(args.lr)
+    # identical init: program_linear round-trips dense_init exactly, so
+    # reading the analog init back out reproduces the digital init.
+    params = M.readout_digital(
+        M.init_params(jax.random.PRNGKey(args.seed), cfg), cfg)
+    state = {"params": params, "opt": opt.init(params),
+             "step": jnp.zeros((), jnp.int32), "err_fb": ()}
+    step = jax.jit(train_loop.make_train_step(dig, opt),
+                   donate_argnums=(0,))
+    losses, t0 = [], time.perf_counter()
+    for i in range(args.steps):
+        x, y = batch_tokens(stream, args.batch, args.seq, i)
+        state, mets = step(state, {"tokens": jnp.asarray(x),
+                                   "labels": jnp.asarray(y)})
+        losses.append(float(mets["loss"]))
+    return {"loss": losses, "wall_s": time.perf_counter() - t0}
+
+
+def parity_check(cfg, args) -> float:
+    """Max relative error of the ideal-device / high-bit analog forward
+    against the digital forward on the same weights."""
+    ideal = cfg.replace(analog_device="ideal", analog_in_bits=16,
+                        analog_out_bits=16, analog_sat_sigmas=8.0)
+    params = M.init_params(jax.random.PRNGKey(args.seed), ideal)
+    dig = M.readout_digital(params, ideal)
+    rng = np.random.default_rng(args.seed)
+    batch = {"tokens": jnp.asarray(rng.integers(
+        0, cfg.vocab, size=(args.batch, args.seq)), jnp.int32)}
+    la, *_ = M.forward(params, batch, ideal)
+    ld, *_ = M.forward(dig, batch, ideal.replace(analog=False))
+    return float(jnp.max(jnp.abs(la - ld)) / jnp.max(jnp.abs(ld)))
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="lm100m")
+    ap.add_argument("--smoke", action=argparse.BooleanOptionalAction,
+                    default=False)
+    ap.add_argument("--steps", type=int, default=None)
+    ap.add_argument("--batch", type=int, default=None)
+    ap.add_argument("--seq", type=int, default=None)
+    ap.add_argument("--lr", type=float, default=0.1)
+    ap.add_argument("--bits", type=int, default=8)
+    ap.add_argument("--device", default="taox-nonoise",
+                    help="ideal | taox | taox-nonoise | linearized")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default="BENCH_analog_train.json")
+    args = ap.parse_args(argv)
+    if args.steps is None:
+        args.steps = 30 if args.smoke else 200
+    if args.batch is None:
+        args.batch = 8 if args.smoke else 32
+    if args.seq is None:
+        args.seq = 16 if args.smoke else 256
+
+    cfg = bench_config(args)
+    stream = make_token_stream(
+        max(200_000, args.steps * args.batch * (args.seq + 1) + 1),
+        cfg.vocab, seed=args.seed)
+
+    analog = run_analog(cfg, stream, args)
+    numeric = run_numeric(cfg, stream, args)
+    parity = parity_check(cfg, args)
+
+    result = {
+        "arch": cfg.name, "smoke": args.smoke, "device": args.device,
+        "bits": args.bits, "steps": args.steps,
+        "batch": args.batch, "seq": args.seq, "lr": args.lr,
+        "analog_loss": analog["loss"],
+        "numeric_loss": numeric["loss"],
+        "analog_wall_s": analog["wall_s"],
+        "numeric_wall_s": numeric["wall_s"],
+        "analog_compiles": analog["compiles"],
+        "g_rail_frac": analog["g_rail_frac"],
+        "cost": analog["cost"],
+        "pj_per_mac": analog["cost"]["pj_per_mac"],
+        "parity_rel_err": parity,
+    }
+    with open(args.out, "w") as f:
+        json.dump(result, f, indent=1)
+
+    print(f"analog[{args.device}/{args.bits}b]: "
+          f"loss {analog['loss'][0]:.3f} -> {analog['loss'][-1]:.3f} "
+          f"({analog['wall_s']:.1f}s, compiles={analog['compiles']})")
+    print(f"numeric:          loss {numeric['loss'][0]:.3f} -> "
+          f"{numeric['loss'][-1]:.3f} ({numeric['wall_s']:.1f}s)")
+    pj = analog["cost"]["pj_per_mac"]
+    print("projected train energy, pJ/MAC: "
+          + "  ".join(f"{k}={v:.3f}" for k, v in pj.items()))
+    print(f"ideal/16-bit forward parity rel err: {parity:.2e}")
+    print(f"wrote {args.out}")
+    return result
+
+
+if __name__ == "__main__":
+    main()

@@ -3,13 +3,16 @@
 These time the *simulation* throughput (how fast we can run analog-aware
 training on the host), not the modelled hardware — hardware numbers come
 from benchmarks.tables.
+
+    PYTHONPATH=src python benchmarks/micro.py --smoke --out BENCH_micro.json
 """
 from __future__ import annotations
 
+import argparse
+import json
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core import (IDEAL, TAOX, AdcConfig, CrossbarConfig,
@@ -25,35 +28,59 @@ def _time(fn, *args, n=5):
     return (time.perf_counter() - t0) / n * 1e6
 
 
-def main():
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action=argparse.BooleanOptionalAction,
+                    default=False,
+                    help="small shapes / few reps (CI trajectory tracking)")
+    ap.add_argument("--out", default=None,
+                    help="write rows to this JSON file "
+                         "(e.g. BENCH_micro.json)")
+    args = ap.parse_args(argv)
+
+    if args.smoke:
+        shapes = ((256, 256, 16), (512, 512, 8))
+        tile, reps = 256, 2
+    else:
+        shapes = ((1024, 1024, 64), (2048, 2048, 64), (4096, 4096, 16))
+        tile, reps = 1024, 5
+
+    rows = []
     print("name,us_per_call,derived")
     key = jax.random.PRNGKey(0)
-    for k, n, b in ((1024, 1024, 64), (2048, 2048, 64), (4096, 4096, 16)):
-        cfg = CrossbarConfig(rows=1024, cols=1024, device=IDEAL,
+    for k, n, b in shapes:
+        cfg = CrossbarConfig(rows=tile, cols=tile, device=IDEAL,
                              adc=AdcConfig())
         w = jax.random.normal(key, (k, n)) / np.sqrt(k)
         g, ws = weights_to_conductance(w, cfg)
         ref = make_reference((k, n), cfg)
         x = jax.random.normal(key, (b, k))
         d = jax.random.normal(key, (b, n))
+        macs = b * k * n
+
+        def emit(name, us):
+            gmacs = macs / us / 1e3
+            rows.append({"name": name, "us_per_call": us,
+                         "sim_gmacs": gmacs})
+            print(f"{name},{us:.0f},sim_gmacs={gmacs:.2f}")
 
         f_vmm = jax.jit(lambda x: vmm(x, g, ref, ws, cfg))
-        us = _time(f_vmm, x)
-        macs = b * k * n
-        print(f"micro/vmm_{k}x{n}_b{b},{us:.0f},"
-              f"sim_gmacs={macs / us / 1e3:.2f}")
+        emit(f"micro/vmm_{k}x{n}_b{b}", _time(f_vmm, x, n=reps))
 
         f_mvm = jax.jit(lambda d: mvm(d, g, ref, ws, cfg))
-        us = _time(f_mvm, d)
-        print(f"micro/mvm_{k}x{n}_b{b},{us:.0f},"
-              f"sim_gmacs={macs / us / 1e3:.2f}")
+        emit(f"micro/mvm_{k}x{n}_b{b}", _time(f_mvm, d, n=reps))
 
         cfg_t = cfg.replace(device=TAOX)
         f_upd = jax.jit(lambda g_, x_, d_, key_: outer_update(
             g_, x_, d_, 0.01, ws, cfg_t, key=key_))
-        us = _time(f_upd, g, x, d, key)
-        print(f"micro/outer_update_{k}x{n}_b{b},{us:.0f},"
-              f"sim_gmacs={macs / us / 1e3:.2f}")
+        emit(f"micro/outer_update_{k}x{n}_b{b}",
+             _time(f_upd, g, x, d, key, n=reps))
+
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump({"smoke": args.smoke, "rows": rows}, f, indent=1)
+        print(f"wrote {args.out}")
+    return rows
 
 
 if __name__ == "__main__":

@@ -138,6 +138,9 @@ def main(argv=None):
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--prefill-chunk", type=int, default=8)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default=None,
+                    help="write the result dict to this JSON file "
+                         "(e.g. BENCH_serve.json)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, smoke=args.smoke)
@@ -170,11 +173,19 @@ def main(argv=None):
     print(f"speedup: {tps_c / tps_s:.2f}x tokens/sec, "
           f"decode compiles={eng.decode_compiles} "
           f"metrics={dict(eng.metrics)}")
-    return {"static_tps": tps_s, "continuous_tps": tps_c,
-            "speedup": tps_c / tps_s,
-            "static_p50": p50_s, "static_p99": p99_s,
-            "continuous_p50": p50_c, "continuous_p99": p99_c,
-            "decode_compiles": eng.decode_compiles}
+    result = {"arch": args.arch, "smoke": args.smoke, "n": args.n,
+              "rate": args.rate, "slots": args.slots,
+              "static_tps": tps_s, "continuous_tps": tps_c,
+              "speedup": tps_c / tps_s,
+              "static_p50": p50_s, "static_p99": p99_s,
+              "continuous_p50": p50_c, "continuous_p99": p99_c,
+              "decode_compiles": eng.decode_compiles}
+    if args.out:
+        import json
+        with open(args.out, "w") as f:
+            json.dump(result, f, indent=1)
+        print(f"wrote {args.out}")
+    return result
 
 
 if __name__ == "__main__":

@@ -8,7 +8,7 @@ family-preserving config for CPU tests).
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Tuple
 
 
 @dataclasses.dataclass(frozen=True)
@@ -64,10 +64,22 @@ class ModelConfig:
 
     # --- analog-crossbar execution (the paper's technique) -------------------
     analog: bool = False           # run projections through the crossbar sim
+    # "fakequant": QAT-style I/O quantisation inside a fused digital matmul
+    #              (scalable LM integration, no device state).
+    # "device":    projections are *programmed* onto tiled crossbars —
+    #              forward=VMM, backward=MVM through the same conductances,
+    #              updates via the nonlinear device model (in-situ training).
+    analog_mode: str = "fakequant"
+    analog_device: str = "taox"    # key into core.DEVICE_MODELS
     analog_rows: int = 1024
     analog_cols: int = 1024
     analog_in_bits: int = 8
     analog_out_bits: int = 8
+    analog_sat_sigmas: float = 4.0  # integrator range, sigmas of col charge
+
+    @property
+    def analog_training(self) -> bool:
+        return self.analog and self.analog_mode == "device"
 
     @property
     def resolved_head_dim(self) -> int:

@@ -8,6 +8,9 @@ from . import endurance
 from .device import (IDEAL, LINEARIZED, TAOX, TAOX_NONOISE, DeviceConfig,
                      LutDevice, VoltageModel, apply_update,
                      lut_from_analytic, lut_from_pulse_train)
+from .tiled_analog import (DEVICE_MODELS, analog_project,
+                           crossbar_from_model, is_analog_container,
+                           program_linear, tile_info, with_tapes)
 from .periodic_carry import (pc_backward, pc_carry, pc_effective_weights,
                              pc_forward, pc_init, pc_update)
 from .xbar_ops import mvm, outer_update, quantize_update_operands, vmm
@@ -21,5 +24,7 @@ __all__ = [
     "pad_to_tiles", "tile_grid", "apply_update", "lut_from_analytic",
     "lut_from_pulse_train", "vmm", "mvm", "outer_update",
     "quantize_update_operands", "pc_init", "pc_forward", "pc_backward",
-    "pc_update", "pc_carry", "pc_effective_weights",
+    "pc_update", "pc_carry", "pc_effective_weights", "DEVICE_MODELS",
+    "analog_project", "crossbar_from_model", "is_analog_container",
+    "program_linear", "tile_info", "with_tapes",
 ]

@@ -21,7 +21,6 @@ All functions are pure, jit-safe and vectorised over arbitrary array shapes.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Optional
 
 import jax

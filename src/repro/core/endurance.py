@@ -16,7 +16,7 @@ effective write drive — the paper quotes ~33 nA / 33 MΩ).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional
+from typing import Dict
 
 import jax
 import jax.numpy as jnp

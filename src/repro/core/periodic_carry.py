@@ -22,7 +22,7 @@ Carry k->k+1: t = clamp_to_representable(v_k);  v_{k+1} += t / base;
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

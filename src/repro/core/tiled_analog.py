@@ -1,0 +1,192 @@
+"""Tiled-crossbar parameter containers for whole-model analog execution.
+
+``core.analog_linear`` gives one layer on one logical array; this module is
+the scaling story: any projection matrix of a transformer (q/k/v/o, the MLP
+up/gate/down, MLA factors) is *programmed* onto a grid of physical
+``rows x cols`` crossbar tiles and executed with the paper's three kernels —
+
+    forward   = VMM   (parallel read,   Fig. 3a)
+    backward  = MVM   (transpose read of the SAME conductances, Fig. 3b)
+    update    = rank-k outer-product write (Fig. 3c)
+
+The container is a plain dict pytree so it rides inside any model parameter
+tree (including ``jax.lax.scan``-stacked per-layer trees):
+
+    {"g": (K, N) conductances, "ref": (K, N) reference, "w_scale": ()}
+
+Tiling is *physical*, not a storage layout: the read ops pad (K, N) to tile
+multiples and quantise each tile's column charge independently
+(``xbar_ops._tiled_read``), and the Pallas update kernel walks the same
+grid.  ``tile_info`` reports the simulated grid (tests / diagnostics); the
+hwmodel cost roll-up projects at the paper's Table-I geometry — see
+``hwmodel/arch_cost.train_step_cost``.
+
+In-situ training needs the *drive operands* of the outer-product write —
+the quantised activations x_q and errors d_q — not a materialised (K, N)
+gradient.  The custom VJP here therefore returns a **zero** cotangent for
+``g`` and instead writes x_q / d_q into two tape leaves that the caller
+injects next to the container (see ``train/analog_lm.py``).  The analog
+optimizer hands the tapes straight to the fused Pallas kernel
+``kernels/xbar_update.py``, so the (K, N) gradient never exists in HBM —
+on the hardware it never exists at all.
+"""
+from __future__ import annotations
+
+from functools import lru_cache, partial
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .adc import AdcConfig
+from .crossbar import CrossbarConfig, make_reference, tile_grid, \
+    weights_to_conductance
+from .device import IDEAL, LINEARIZED, TAOX, TAOX_NONOISE, DeviceConfig
+from .xbar_ops import mvm, quantize_update_operands, vmm
+
+Array = jax.Array
+
+#: Device models selectable from a ModelConfig (``analog_device``).
+DEVICE_MODELS: Dict[str, DeviceConfig] = {
+    "ideal": IDEAL,
+    "taox": TAOX,
+    "taox-nonoise": TAOX_NONOISE,
+    "linearized": LINEARIZED,
+}
+
+
+@lru_cache(maxsize=None)
+def crossbar_from_model(cfg) -> CrossbarConfig:
+    """Build the physical tile description from a (frozen) ModelConfig.
+
+    Duck-typed on the ``analog_*`` fields so ``repro.core`` keeps zero
+    dependency on ``repro.configs``; cached because the result is a static
+    (hashable) argument of every jitted analog op.
+    """
+    return CrossbarConfig(
+        rows=cfg.analog_rows, cols=cfg.analog_cols,
+        device=DEVICE_MODELS[cfg.analog_device],
+        adc=AdcConfig(in_bits=cfg.analog_in_bits,
+                      out_bits=cfg.analog_out_bits,
+                      sat_sigmas=cfg.analog_sat_sigmas))
+
+
+def program_linear(w: Array, cfg: CrossbarConfig,
+                   key: Optional[Array] = None,
+                   w_max: Optional[float] = None) -> dict:
+    """Program a digitally-initialised (K, N) weight matrix onto the grid.
+
+    ``w_max`` fixes the weight<->conductance window; the default leaves
+    8x-rms headroom so trained weights grow without pinning the rails (same
+    policy as ``analog_linear_init``, but computed from the given weights
+    so programming an existing digital checkpoint round-trips exactly).
+    """
+    w = w.astype(jnp.float32)
+    if w_max is None:
+        w_max = 8.0 * jnp.sqrt(jnp.mean(jnp.square(w)) + 1e-12)
+    g, w_scale = weights_to_conductance(w, cfg, w_max=w_max)
+    ref = make_reference(w.shape, cfg,
+                         key=key if cfg.ref_sigma > 0 else None)
+    return {"g": g, "ref": ref, "w_scale": w_scale}
+
+
+def is_analog_container(p) -> bool:
+    return isinstance(p, dict) and {"g", "ref", "w_scale"} <= set(p)
+
+
+def readout(p: dict, cfg: CrossbarConfig) -> Array:
+    """Digital serial read of the programmed weights (paper §III.D).
+
+    Handles scan-stacked containers, where ``g`` is (L, K, N) and
+    ``w_scale`` is (L,).
+    """
+    del cfg  # reference array carries the zero point
+    w_scale = jnp.asarray(p["w_scale"])[..., None, None]
+    return (p["g"] - p["ref"]) / w_scale
+
+
+def tile_info(p: dict, cfg: CrossbarConfig) -> Tuple[int, int, float]:
+    """(tiles_k, tiles_n, fill fraction) of the grid holding this layer."""
+    k, n = p["g"].shape[-2:]
+    tk, tn = tile_grid(k, n, cfg)
+    return tk, tn, (k * n) / (tk * tn * cfg.rows * cfg.cols)
+
+
+# --------------------------------------------------------------------------
+# Taped analog matmul: the in-situ training primitive.
+# --------------------------------------------------------------------------
+
+@partial(jax.custom_vjp, nondiff_argnums=(6,))
+def _taped_matmul(g: Array, ref: Array, w_scale: Array,
+                  x_tape: Array, d_tape: Array, x: Array,
+                  cfg: CrossbarConfig) -> Array:
+    del x_tape, d_tape
+    return vmm(x, g, ref, w_scale, cfg)
+
+
+def _taped_fwd(g, ref, w_scale, x_tape, d_tape, x, cfg):
+    del x_tape, d_tape
+    y = vmm(x, g, ref, w_scale, cfg)
+    return y, (g, ref, w_scale, x)
+
+
+def _taped_bwd(cfg, res, dy):
+    g, ref, w_scale, x = res
+    # Error backprop: transpose read of the SAME (quantised, saturated,
+    # ADC'd) conductances the forward pass saw.
+    dx = mvm(dy.astype(jnp.float32), g, ref, w_scale, cfg)
+    # The write drivers' operands, quantised exactly as the hardware does
+    # (rows: temporal code, columns: voltage code).  They flow out through
+    # the tape leaves; ``g`` gets a zero cotangent — the dense (K, N)
+    # gradient is never formed.
+    x_q, d_q = quantize_update_operands(x.astype(jnp.float32),
+                                        dy.astype(jnp.float32), cfg)
+    return (jnp.zeros_like(g), jnp.zeros_like(ref),
+            jnp.zeros_like(w_scale), x_q, d_q, dx.astype(x.dtype))
+
+
+_taped_matmul.defvjp(_taped_fwd, _taped_bwd)
+
+
+def analog_project(p: dict, x: Array, cfg: CrossbarConfig) -> Array:
+    """Apply a programmed container to activations of shape (..., K).
+
+    If the container carries ``x_tape``/``d_tape`` leaves (injected by the
+    analog train step), the backward pass deposits the quantised update
+    operands there; otherwise throwaway zero tapes are created (inference /
+    eval — no backward, no cost).
+
+    Each container must be applied at most once per differentiated step:
+    cotangents of a reused container would *sum* the tapes, which is not
+    the operand of the summed outer product.  Dense transformer stacks
+    apply each projection exactly once per token batch.
+    """
+    lead = x.shape[:-1]
+    k, n = p["g"].shape
+    xb = x.reshape(-1, k)
+    x_tape = p.get("x_tape")
+    d_tape = p.get("d_tape")
+    if x_tape is None:
+        x_tape = jnp.zeros((xb.shape[0], k), jnp.float32)
+    if d_tape is None:
+        d_tape = jnp.zeros((xb.shape[0], n), jnp.float32)
+    y = _taped_matmul(p["g"], p["ref"], p["w_scale"], x_tape, d_tape,
+                      xb.astype(jnp.float32), cfg)
+    return y.reshape(*lead, n).astype(x.dtype)
+
+
+def make_tapes(p: dict, n_tokens: int) -> dict:
+    """Zero tape leaves for one container (shapes (T, K) / (T, N))."""
+    k, n = p["g"].shape[-2:]
+    lead = p["g"].shape[:-2]  # scan-stacked containers carry (L, K, N)
+    return {"x_tape": jnp.zeros((*lead, n_tokens, k), jnp.float32),
+            "d_tape": jnp.zeros((*lead, n_tokens, n), jnp.float32)}
+
+
+def with_tapes(params, n_tokens: int):
+    """Recursively inject tape leaves next to every analog container."""
+    if is_analog_container(params):
+        return {**params, **make_tapes(params, n_tokens)}
+    if isinstance(params, dict):
+        return {k: with_tapes(v, n_tokens) for k, v in params.items()}
+    return params

@@ -18,7 +18,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict, List, Tuple
+from typing import Dict, List, Optional
 
 from repro.configs.base import ModelConfig
 
@@ -206,3 +206,50 @@ def analyze_arch(cfg: ModelConfig, bits: int = 8,
 
 def report(cfgs: List[ModelConfig], bits: int = 8) -> List[ArchCost]:
     return [analyze_arch(cfg, bits=bits) for cfg in cfgs]
+
+
+def train_step_cost(cfg: ModelConfig, n_tokens: int, bits: int = 8,
+                    ctx_len: Optional[int] = None) -> Dict[str, object]:
+    """Projected hardware cost of ONE training step of ``n_tokens`` tokens.
+
+    Joins the model's layer shapes with the paper's per-kernel numbers so a
+    training run can report, every step, what the same step would cost on
+    the analog accelerator vs a digital-ReRAM or SRAM core.  All three are
+    projected at the paper's Table-I 1024x1024 tile geometry (the only one
+    the synthesized energy numbers are calibrated for), regardless of the
+    tile size the *simulation* ran with — tiles/area/util here describe
+    the projected machine, not the sim grid.  Digital training is charged
+    3x the inference MACs (forward + activation-grad + weight-grad); the
+    analog step charges VMM + MVM + OPU per projection, the same 3-pass
+    count realised in-array.
+    """
+    ctx_len = ctx_len or 4096
+    ac = analyze_arch(cfg, bits=bits, ctx_len=ctx_len)
+    macs = sum(p.k * p.n * p.count * p.active
+               for p in model_projections(cfg))
+    d_macs = digital_macs_per_token(cfg, ctx_len)
+    train_macs = 3.0 * (macs + d_macs) * n_tokens
+
+    e_uj = {
+        "analog": ac.e_train_token_uj * n_tokens,
+        "digital_reram": 3.0 * ac.e_digital_reram_token_uj * n_tokens,
+        "sram": 3.0 * ac.e_sram_token_uj * n_tokens,
+    }
+    lat = AnalogCore(bits=bits).latency
+    t_token = (lat["vmm"] + lat["mvm"] + lat["opu"]) \
+        * sum(p.count * p.active for p in model_projections(cfg))
+    return {
+        "n_tokens": n_tokens,
+        "bits": bits,
+        "tile_geometry": f"{TABLE_I.rows}x{TABLE_I.cols} (paper Table I)",
+        "tiles": ac.tiles,
+        "area_mm2": ac.area_mm2,
+        "tile_util": ac.util,
+        "e_step_uj": e_uj,
+        # 1 MAC := one multiply-accumulate of one of the 3 training passes.
+        "pj_per_mac": {k: v * 1e6 / max(train_macs, 1.0)
+                       for k, v in e_uj.items()},
+        "fj_per_mac_analog_kernel": ac.fj_per_mac_analog_only,
+        "t_step_us": t_token * n_tokens * 1e6,  # serial layer pipeline
+        "digital_mac_frac": ac.digital_mac_frac,
+    }

@@ -8,7 +8,7 @@ from __future__ import annotations
 
 from typing import Dict
 
-from .params import NJ, SYNTH, UM, TABLE_I, TableI
+from .params import SYNTH, UM, TABLE_I, TableI
 
 
 def _bits_per_array(p: TableI) -> int:

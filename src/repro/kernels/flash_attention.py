@@ -14,7 +14,6 @@ a production kernel would use a lower-triangular grid).
 from __future__ import annotations
 
 import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

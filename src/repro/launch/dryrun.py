@@ -26,7 +26,6 @@ import traceback
 from pathlib import Path
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import (ASSIGNED, SHAPE_BY_NAME, applicable_shapes,
                            get_config)

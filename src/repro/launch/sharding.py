@@ -16,10 +16,9 @@ Every rule degrades to replication when divisibility fails (e.g. whisper's
 """
 from __future__ import annotations
 
-from typing import Any, Optional, Tuple
+from typing import Tuple
 
 import jax
-import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 import os

@@ -11,9 +11,7 @@ Conventions:
 """
 from __future__ import annotations
 
-import dataclasses
 import os
-from functools import partial
 from typing import Optional, Tuple
 
 import jax
@@ -21,8 +19,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core import CrossbarConfig, AdcConfig
+from repro.core import AdcConfig
 from repro.core.adc import quantize_dequantize
+from repro.core.tiled_analog import (analog_project, crossbar_from_model,
+                                     is_analog_container, program_linear,
+                                     readout)
 
 Array = jax.Array
 
@@ -95,6 +96,22 @@ def embed_init(key: Array, vocab: int, d: int) -> Array:
                                        dtype=jnp.float32)
 
 
+def proj_init(key: Array, d_in: int, d_out: int, cfg: ModelConfig) -> dict:
+    """Projection parameters: a digital weight dict, or — in analog device
+    mode — the weights programmed onto a tiled-crossbar container."""
+    w = dense_init(key, d_in, d_out)
+    if cfg.analog_training:
+        return program_linear(w, crossbar_from_model(cfg))
+    return {"w": w}
+
+
+def proj_readout(p: dict, cfg: ModelConfig) -> dict:
+    """Digital serial read of a projection back to a weight dict."""
+    if is_analog_container(p):
+        return {"w": readout(p, crossbar_from_model(cfg))}
+    return p
+
+
 # --------------------------------------------------------------------------
 # Norms
 # --------------------------------------------------------------------------
@@ -119,10 +136,15 @@ def project(p: dict, x: Array, cfg: ModelConfig) -> Array:
     fake-quantisation (per-token input DAC + per-K-tile output ADC),
     keeping the HLO a single fused matmul + cheap elementwise epilogues.
 
-    Full device-nonideality simulation (noise, update nonlinearity) runs
-    through repro.core.AnalogLinear in the dedicated analog training path;
-    this fake-quant mode is the scalable LM integration (QAT semantics).
+    In analog *device* mode (``cfg.analog_mode == "device"``) the params
+    are a tiled-crossbar container and the matmul executes on the simulated
+    array: forward=VMM, backward=MVM through the same conductances, with
+    the quantised update operands taped for the in-situ optimizer
+    (core/tiled_analog.py).  Fake-quant mode keeps QAT semantics: a fused
+    digital matmul with crossbar I/O quantisation epilogues.
     """
+    if is_analog_container(p):
+        return analog_project(p, x, crossbar_from_model(cfg))
     w = p["w"].astype(x.dtype)
     if not cfg.analog:
         return x @ w
@@ -183,10 +205,10 @@ def attn_init(key: Array, cfg: ModelConfig, d_in: Optional[int] = None) -> dict:
     hd = cfg.resolved_head_dim
     ks = jax.random.split(key, 4)
     return {
-        "wq": {"w": dense_init(ks[0], d, cfg.n_heads * hd)},
-        "wk": {"w": dense_init(ks[1], d, cfg.n_kv_heads * hd)},
-        "wv": {"w": dense_init(ks[2], d, cfg.n_kv_heads * hd)},
-        "wo": {"w": dense_init(ks[3], cfg.n_heads * hd, cfg.d_model)},
+        "wq": proj_init(ks[0], d, cfg.n_heads * hd, cfg),
+        "wk": proj_init(ks[1], d, cfg.n_kv_heads * hd, cfg),
+        "wv": proj_init(ks[2], d, cfg.n_kv_heads * hd, cfg),
+        "wo": proj_init(ks[3], cfg.n_heads * hd, cfg.d_model, cfg),
     }
 
 
@@ -371,14 +393,14 @@ def mla_init(key: Array, cfg: ModelConfig) -> dict:
     ks = jax.random.split(key, 5)
     qk_dim = cfg.qk_nope_dim + cfg.qk_rope_dim
     return {
-        "wq": {"w": dense_init(ks[0], d, cfg.n_heads * qk_dim)},
-        "wkv_a": {"w": dense_init(ks[1], d,
-                                  cfg.kv_lora_rank + cfg.qk_rope_dim)},
+        "wq": proj_init(ks[0], d, cfg.n_heads * qk_dim, cfg),
+        "wkv_a": proj_init(ks[1], d,
+                           cfg.kv_lora_rank + cfg.qk_rope_dim, cfg),
         "kv_norm": rmsnorm_init(cfg.kv_lora_rank),
-        "wkv_b": {"w": dense_init(
+        "wkv_b": proj_init(
             ks[2], cfg.kv_lora_rank,
-            cfg.n_heads * (cfg.qk_nope_dim + cfg.v_head_dim))},
-        "wo": {"w": dense_init(ks[3], cfg.n_heads * cfg.v_head_dim, d)},
+            cfg.n_heads * (cfg.qk_nope_dim + cfg.v_head_dim), cfg),
+        "wo": proj_init(ks[3], cfg.n_heads * cfg.v_head_dim, d, cfg),
     }
 
 
@@ -431,7 +453,8 @@ def mla_attention(p: dict, x: Array, cfg: ModelConfig, *,
             }
         kv_len = None
 
-    if cache is not None and sq == 1 and os.environ.get("REPRO_MLA_ABSORB"):
+    if cache is not None and sq == 1 and "w" in p["wkv_b"] \
+            and os.environ.get("REPRO_MLA_ABSORB"):
         # K8 (perf, beyond-paper): absorbed MLA decode (DeepSeek-V2 §2.1.2).
         # Fold wkv_b's K-block into the query and its V-block into the
         # output so attention runs in the latent space — O(B·H·S·r) per
@@ -493,10 +516,10 @@ def make_mla_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict:
 def ffn_init(key: Array, cfg: ModelConfig, d_ff: Optional[int] = None) -> dict:
     d, ff = cfg.d_model, d_ff or cfg.d_ff
     ks = jax.random.split(key, 3)
-    p = {"w_up": {"w": dense_init(ks[0], d, ff)},
-         "w_down": {"w": dense_init(ks[1], ff, d)}}
+    p = {"w_up": proj_init(ks[0], d, ff, cfg),
+         "w_down": proj_init(ks[1], ff, d, cfg)}
     if cfg.gated:
-        p["w_gate"] = {"w": dense_init(ks[2], d, ff)}
+        p["w_gate"] = proj_init(ks[2], d, ff, cfg)
     return p
 
 

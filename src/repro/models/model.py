@@ -21,8 +21,9 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig, ShapeSpec
 
 from . import transformer as tf
-from .layers import cdtype, make_cache, make_mla_cache
+from .layers import cdtype, make_cache, make_mla_cache, proj_readout
 from .ssm import make_ssm_state
+from repro.core.tiled_analog import is_analog_container
 
 Array = jax.Array
 
@@ -39,6 +40,21 @@ def init_params(key: Array, cfg: ModelConfig) -> dict:
     if cfg.family in ("ssm", "hybrid"):
         return tf.ssm_stack_init(key, cfg)
     return tf.decoder_init(key, cfg)
+
+
+def readout_digital(params, cfg: ModelConfig):
+    """Serial read of an analog-device model back to digital weights.
+
+    Walks the parameter tree and converts every tiled-crossbar container to
+    a plain ``{"w": (g - ref) / w_scale}`` dict, so the same checkpoint can
+    be evaluated (or fine-tuned) with ``cfg.replace(analog=False)``.  A
+    no-op on digital trees.
+    """
+    if is_analog_container(params):
+        return proj_readout(params, cfg)
+    if isinstance(params, dict):
+        return {k: readout_digital(v, cfg) for k, v in params.items()}
+    return params
 
 
 def forward(params: dict, batch: Dict[str, Array], cfg: ModelConfig,

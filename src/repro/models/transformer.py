@@ -17,7 +17,7 @@ Modes: ``train`` (full seq, logits), ``prefill`` (full seq, logits + cache),
 from __future__ import annotations
 
 from functools import partial
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -26,10 +26,10 @@ from repro.configs.base import ModelConfig
 
 from . import moe as moe_mod
 from . import ssm as ssm_mod
-from .layers import (_chunked_sdpa, _split_heads, attention, attn_init,
-                     cdtype, dense_init, embed_init, ffn, ffn_init,
-                     make_cache, make_mla_cache, mla_attention, mla_init,
-                     project, rmsnorm, rmsnorm_init, shard_batch_dim)
+from .layers import (
+    _chunked_sdpa, _split_heads, attention, attn_init, cdtype, dense_init,
+    embed_init, ffn, ffn_init, mla_attention, mla_init, project, rmsnorm,
+    rmsnorm_init, shard_batch_dim)
 
 Array = jax.Array
 

@@ -1,0 +1,153 @@
+"""In-situ analog training for the transformer family (scaling the paper's
+§VI MLP experiment to real workloads).
+
+One ``AnalogTrainStep`` is the whole training rule, jitted and donated so
+it compiles exactly once and updates conductances in place:
+
+  1. zero *tapes* are injected next to every tiled-crossbar container
+     (``core.tiled_analog.with_tapes``) — the backward pass deposits the
+     quantised write-driver operands (x_q, d_q) there instead of a dense
+     (K, N) weight gradient,
+  2. forward = VMM, backward = MVM through the same conductances
+     (``models/layers.project`` dispatches on the container),
+  3. every container's update is the paper's rank-k parallel write: the
+     tapes go straight into the fused Pallas kernel
+     ``kernels/xbar_update.xbar_outer_update`` (outer product + nonlinear /
+     asymmetric / stochastic device model, one HBM round-trip per tile),
+  4. digital leaves (embeddings, norms, the logits head) take plain SGD —
+     the paper keeps exactly these on the digital core.
+
+The step also carries a hardware cost roll-up: layer shapes joined with
+``hwmodel/arch_cost`` project the energy/latency of each step on the
+analog accelerator vs digital-ReRAM vs SRAM cores (``step.cost``).
+"""
+from __future__ import annotations
+
+import zlib
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.tiled_analog import (crossbar_from_model,
+                                     is_analog_container, with_tapes)
+from repro.hwmodel.arch_cost import train_step_cost
+from repro.kernels.ops import default_interpret
+from repro.kernels.xbar_update import xbar_outer_update
+from repro.models import model as M
+
+Array = jax.Array
+
+
+def init_state(key: Array, cfg: ModelConfig) -> dict:
+    return {"params": M.init_params(key, cfg),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def _path_key(key: Array, path: Tuple[str, ...]) -> Array:
+    """Stable (process-independent) per-container PRNG stream."""
+    return jax.random.fold_in(
+        key, zlib.crc32("/".join(path).encode()) & 0x7FFFFFFF)
+
+
+class AnalogTrainStep:
+    """Jitted, donated-buffer analog-SGD step: ``state, metrics = step(state,
+    batch, key)``.  ``step.compiles`` counts tracings (must stay at 1);
+    ``step.cost`` is the projected per-step hardware cost (available after
+    the first call, when the token count is known)."""
+
+    def __init__(self, cfg: ModelConfig, lr: float,
+                 interpret: Optional[bool] = None, bits: int = 8):
+        if not cfg.analog_training:
+            raise ValueError("cfg must have analog=True, "
+                             "analog_mode='device'")
+        self.cfg = cfg
+        self.lr = lr
+        self.bits = bits
+        self.xcfg = crossbar_from_model(cfg)
+        self.interpret = default_interpret() if interpret is None \
+            else interpret
+        self.cost: Optional[dict] = None
+        self._step = jax.jit(self._step_impl, donate_argnums=(0,))
+
+    # ------------------------------------------------------------------ api
+
+    def __call__(self, state: dict, batch: Dict[str, Array], key: Array
+                 ) -> Tuple[dict, Dict[str, Array]]:
+        if self.cost is None:
+            self.cost = train_step_cost(
+                self.cfg, n_tokens=int(batch["tokens"].size),
+                bits=self.bits, ctx_len=batch["tokens"].shape[-1])
+        return self._step(state, batch, key)
+
+    @property
+    def compiles(self) -> Optional[int]:
+        size = getattr(self._step, "_cache_size", None)
+        return size() if size is not None else None
+
+    # ------------------------------------------------------------- internals
+
+    def _step_impl(self, state, batch, key):
+        cfg = self.cfg
+        params = state["params"]
+        n_tokens = batch["tokens"].size  # static under jit
+
+        (loss, metrics), grads = jax.value_and_grad(
+            M.loss_fn, has_aux=True)(with_tapes(params, n_tokens),
+                                     batch, cfg)
+        rail = []
+        new_params = self._update(params, grads, key, (), rail)
+        if not rail:
+            # Families whose projections aren't crossbar-mapped yet (ssm /
+            # moe experts) would otherwise train fully digitally while
+            # claiming to be analog — fail loudly instead.
+            raise ValueError(
+                f"no analog containers in params for family "
+                f"{cfg.family!r}; only crossbar-mapped projections "
+                f"(dense attention/FFN, MLA) support device-mode training")
+        out = {"loss": loss, **metrics}
+        # fraction of devices pinned at the conductance rails — the
+        # leading indicator of window exhaustion (paper §V.A).
+        out["g_rail_frac"] = sum(rail) / len(rail)
+        return {"params": new_params, "step": state["step"] + 1}, out
+
+    def _update(self, p, g, key, path, rail):
+        if is_analog_container(p):
+            return self._update_container(p, g, _path_key(key, path), rail)
+        if isinstance(p, dict):
+            return {k: self._update(p[k], g[k], key, path + (k,), rail)
+                    for k in p}
+        return p - self.lr * g.astype(p.dtype)
+
+    def _update_container(self, p, g, key, rail):
+        gq, xq, dq = p["g"], g["x_tape"], g["d_tape"]
+        if gq.ndim == 2:
+            g_new = self._kernel_update(gq, xq, dq, p["w_scale"], key)
+        else:  # scan-stacked (L, K, N): one parallel write per layer
+            g_new = jnp.stack([
+                self._kernel_update(gq[i], xq[i], dq[i], p["w_scale"][i],
+                                    jax.random.fold_in(key, i))
+                for i in range(gq.shape[0])])
+        dev = self.xcfg.device
+        span = dev.gmax - dev.gmin
+        rail.append(jnp.mean(
+            (g_new <= dev.gmin + 1e-3 * span)
+            | (g_new >= dev.gmax - 1e-3 * span)).astype(jnp.float32))
+        return {**p, "g": g_new}
+
+    def _kernel_update(self, g, x_q, d_q, w_scale, key):
+        """The paper's Fig. 3c parallel write, fused on the tile grid."""
+        noise = None
+        if self.xcfg.device.write_noise > 0.0:
+            noise = jax.random.normal(key, g.shape, dtype=jnp.float32)
+        scale = jnp.asarray(-self.lr, jnp.float32) * w_scale
+        return xbar_outer_update(g, x_q, d_q, scale, self.xcfg,
+                                 noise=noise, interpret=self.interpret)
+
+
+def make_analog_sgd_step(cfg: ModelConfig, lr: float,
+                         interpret: Optional[bool] = None,
+                         bits: int = 8) -> AnalogTrainStep:
+    """The analog-SGD training step for a device-mode transformer config."""
+    return AnalogTrainStep(cfg, lr, interpret=interpret, bits=bits)

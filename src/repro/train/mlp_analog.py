@@ -15,7 +15,7 @@ from __future__ import annotations
 import dataclasses
 import time
 from functools import partial
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp

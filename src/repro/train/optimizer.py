@@ -8,7 +8,6 @@ leaves (norms, reference arrays, scales) take plain SGD / stay frozen.
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Any, Callable, NamedTuple, Optional, Tuple
 
 import jax

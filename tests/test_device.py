@@ -3,12 +3,10 @@ import pytest
 
 pytest.importorskip("hypothesis")
 
-import hypothesis
 import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from hypothesis import given, settings
 from hypothesis.extra import numpy as hnp
 

@@ -1,13 +1,11 @@
 """Multi-device tests (subprocess-isolated: the main pytest process must
 keep seeing 1 device, per the dry-run contract)."""
-import json
 import os
 import subprocess
 import sys
 import textwrap
 from pathlib import Path
 
-import pytest
 
 REPO = Path(__file__).resolve().parent.parent
 

@@ -3,7 +3,6 @@
 Skipped when the sweep has not been run; regenerate with:
     python -m repro.launch.dryrun --all --both-meshes
 """
-import glob
 import json
 from pathlib import Path
 

@@ -1,7 +1,6 @@
 """Paper §V.E-F: endurance arithmetic and write-current constraints."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.core import TAOX

@@ -3,8 +3,7 @@ import textwrap
 
 import pytest
 
-from repro.launch.hlo_analysis import (Computation, _shape_bytes, analyze,
-                                       parse_hlo)
+from repro.launch.hlo_analysis import _shape_bytes, analyze, parse_hlo
 
 SAMPLE = textwrap.dedent("""\
     HloModule jit_f

@@ -18,8 +18,7 @@ from repro.core.xbar_ops import mvm as core_mvm
 from repro.core.xbar_ops import vmm as core_vmm
 from repro.kernels import ops
 from repro.kernels.ref import vmm_bitplanes
-from repro.kernels.xbar_update import xbar_outer_update
-from repro.kernels.xbar_vmm import xbar_mvm, xbar_vmm
+from repro.kernels.xbar_vmm import xbar_vmm
 
 KEY = jax.random.PRNGKey(0)
 

@@ -1,8 +1,6 @@
 """Serving engine tests."""
 import jax
 import jax.numpy as jnp
-import numpy as np
-import pytest
 
 from repro.configs import get_config
 from repro.models import model as M

@@ -1,7 +1,6 @@
 """Continuous-batching engine tests: scheduling invariance, eviction /
 admission, and no decode retracing across admissions."""
 import jax
-import numpy as np
 
 from repro.configs import get_config
 from repro.models import model as M

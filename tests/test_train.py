@@ -8,7 +8,7 @@ import pytest
 from repro.configs import get_config
 from repro.data.pipeline import PipelineConfig, TokenPipeline
 from repro.train import checkpoint, compress, train_loop
-from repro.train.optimizer import adamw, analog_sgd, sgd
+from repro.train.optimizer import adamw, analog_sgd
 
 
 def test_pipeline_deterministic_and_resumable():
