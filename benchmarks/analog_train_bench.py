@@ -19,6 +19,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import time
 
 import jax
@@ -113,6 +114,10 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default="BENCH_analog_train.json")
     args = ap.parse_args(argv)
+    # Smoke-scale models don't need activation remat; it only inflates
+    # compile time and recompute for BOTH runs (models/transformer._remat).
+    # Respect an explicit REPRO_REMAT from the caller.
+    os.environ.setdefault("REPRO_REMAT", "none")
     if args.steps is None:
         args.steps = 30 if args.smoke else 200
     if args.batch is None:
@@ -131,6 +136,7 @@ def main(argv=None):
 
     result = {
         "arch": cfg.name, "smoke": args.smoke, "device": args.device,
+        "remat": os.environ.get("REPRO_REMAT", "full"),
         "bits": args.bits, "steps": args.steps,
         "batch": args.batch, "seq": args.seq, "lr": args.lr,
         "analog_loss": analog["loss"],

@@ -1,0 +1,94 @@
+"""Bench-regression gate: fail CI when a benchmark row slows down.
+
+Compares a freshly produced ``BENCH_micro.json`` (or any file with the
+same ``{"rows": [{"name", "us_per_call", "sim_gmacs"}, ...]}`` shape)
+against the committed trajectory, row by row (matched on ``name``); rows
+present on only one side are reported and skipped, so adding or retiring
+benchmarks never trips the gate.
+
+Machines differ: the committed trajectory may come from a different
+(faster/slower) host than the CI runner, so raw wall-time ratios would
+flag every row at once.  The gate therefore divides each row's
+fresh/baseline ratio by the *median* ratio across all shared rows — a
+uniform machine-speed factor cancels, while a single de-fused or
+de-optimised row sticks out against its peers.  The tolerance is
+deliberately loose (CI wall-time jitters); the gate exists to catch
+order-of-magnitude regressions like an accidentally de-fused update
+path, not 10% noise.  ``--max-median`` optionally also bounds the raw
+median ratio for same-machine comparisons.
+
+    python benchmarks/check_bench.py --baseline BENCH_micro.json \
+        --fresh BENCH_micro_fresh.json --tol 0.30
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import statistics
+import sys
+
+
+def load_rows(path: str) -> dict:
+    with open(path) as f:
+        data = json.load(f)
+    return {r["name"]: r for r in data["rows"]}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", required=True,
+                    help="committed trajectory JSON")
+    ap.add_argument("--fresh", required=True, help="freshly produced JSON")
+    ap.add_argument("--tol", type=float, default=0.30,
+                    help="max allowed fractional per-row slowdown after "
+                         "machine normalisation (0.30 = fail beyond 1.3x)")
+    ap.add_argument("--max-median", type=float, default=None,
+                    help="also fail if the raw median fresh/baseline ratio "
+                         "exceeds this (use when both files come from the "
+                         "same machine)")
+    args = ap.parse_args(argv)
+
+    base = load_rows(args.baseline)
+    fresh = load_rows(args.fresh)
+    shared = sorted(set(base) & set(fresh))
+    if not shared:
+        print("bench gate: no shared rows — nothing to compare")
+        return 0
+    for name in sorted(set(base) - set(fresh)):
+        print(f"bench gate: row retired (skipped): {name}")
+    for name in sorted(set(fresh) - set(base)):
+        print(f"bench gate: new row (skipped): {name}")
+
+    ratios = {n: fresh[n]["us_per_call"] / base[n]["us_per_call"]
+              for n in shared}
+    machine = statistics.median(ratios.values())
+    print(f"bench gate: median fresh/baseline ratio {machine:.2f}x "
+          f"(machine-speed factor, divided out per row)")
+
+    failures = []
+    for name in shared:
+        rel = ratios[name] / machine
+        flag = "FAIL" if rel > 1.0 + args.tol else "ok"
+        print(f"{flag:>4}  {name}: {base[name]['us_per_call']:.0f}us -> "
+              f"{fresh[name]['us_per_call']:.0f}us "
+              f"({ratios[name]:.2f}x raw, {rel:.2f}x normalised)")
+        if rel > 1.0 + args.tol:
+            failures.append((name, rel))
+    if args.max_median is not None and machine > args.max_median:
+        failures.append(("<median>", machine))
+        print(f"FAIL  raw median ratio {machine:.2f}x exceeds "
+              f"--max-median {args.max_median:.2f}x")
+
+    if failures:
+        print(f"\nbench gate FAILED: {len(failures)} check(s) beyond "
+              f"tolerance:")
+        for name, ratio in failures:
+            print(f"  {name}: {ratio:.2f}x")
+        return 1
+    print(f"\nbench gate passed: {len(shared)} rows within "
+          f"{1.0 + args.tol:.2f}x of the machine-normalised baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

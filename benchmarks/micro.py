@@ -4,6 +4,18 @@ These time the *simulation* throughput (how fast we can run analog-aware
 training on the host), not the modelled hardware — hardware numbers come
 from benchmarks.tables.
 
+Update rows:
+  * ``micro/outer_update_*``        — the fused update path the analog
+    train step actually runs (layer math + device epilogue + in-kernel
+    counter-PRNG noise in one sweep; Mosaic on TPU, the jnp twin on CPU).
+  * ``micro/outer_update_ref_*``    — the dense einsum reference
+    (``core.xbar_ops.outer_update``: three HBM round-trips plus a host
+    noise field per call).
+  * ``micro/outer_update_kernel_*`` — the Pallas kernel itself (the
+    interpreter on non-TPU backends; a correctness oracle, not a fast
+    path — tracked so TPU runs have a trajectory).
+  * ``micro/outer_update_batched_*``— the layer-batched (L, K, N) sweep.
+
     PYTHONPATH=src python benchmarks/micro.py --smoke --out BENCH_micro.json
 """
 from __future__ import annotations
@@ -13,19 +25,27 @@ import json
 import time
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core import (IDEAL, TAOX, AdcConfig, CrossbarConfig,
                         make_reference, weights_to_conductance)
-from repro.core.xbar_ops import mvm, outer_update, vmm
+from repro.core.xbar_ops import (mvm, outer_update, quantize_update_operands,
+                                 vmm)
+from repro.kernels import ops as kops
+from repro.kernels.xbar_update import xbar_outer_update
 
 
 def _time(fn, *args, n=5):
+    """Best-observed wall time over n reps (min is robust to CPU
+    contention spikes, which matters for the CI regression gate)."""
     jax.block_until_ready(fn(*args))  # compile + warm
-    t0 = time.perf_counter()
+    best = float("inf")
     for _ in range(n):
+        t0 = time.perf_counter()
         jax.block_until_ready(fn(*args))
-    return (time.perf_counter() - t0) / n * 1e6
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6
 
 
 def main(argv=None):
@@ -40,7 +60,7 @@ def main(argv=None):
 
     if args.smoke:
         shapes = ((256, 256, 16), (512, 512, 8))
-        tile, reps = 256, 2
+        tile, reps = 256, 10
     else:
         shapes = ((1024, 1024, 64), (2048, 2048, 64), (4096, 4096, 16))
         tile, reps = 1024, 5
@@ -58,8 +78,8 @@ def main(argv=None):
         d = jax.random.normal(key, (b, n))
         macs = b * k * n
 
-        def emit(name, us):
-            gmacs = macs / us / 1e3
+        def emit(name, us, n_macs=macs):
+            gmacs = n_macs / us / 1e3
             rows.append({"name": name, "us_per_call": us,
                          "sim_gmacs": gmacs})
             print(f"{name},{us:.0f},sim_gmacs={gmacs:.2f}")
@@ -71,10 +91,40 @@ def main(argv=None):
         emit(f"micro/mvm_{k}x{n}_b{b}", _time(f_mvm, d, n=reps))
 
         cfg_t = cfg.replace(device=TAOX)
-        f_upd = jax.jit(lambda g_, x_, d_, key_: outer_update(
-            g_, x_, d_, 0.01, ws, cfg_t, key=key_))
+
+        # The path the analog train step runs: fused sweep, in-kernel noise.
+        f_upd = jax.jit(lambda g_, x_, d_, key_: kops.outer_update(
+            g_, x_, d_, 0.01, ws, cfg_t, key=key_, noise_mode="kernel",
+            impl="auto"))
         emit(f"micro/outer_update_{k}x{n}_b{b}",
              _time(f_upd, g, x, d, key, n=reps))
+
+        # Dense reference: einsum + apply_update + a host noise field.
+        f_ref = jax.jit(lambda g_, x_, d_, key_: outer_update(
+            g_, x_, d_, 0.01, ws, cfg_t, key=key_))
+        emit(f"micro/outer_update_ref_{k}x{n}_b{b}",
+             _time(f_ref, g, x, d, key, n=reps))
+
+        # The Pallas kernel itself (interpreter on non-TPU backends).
+        f_ker = jax.jit(lambda g_, x_, d_, key_: kops.outer_update(
+            g_, x_, d_, 0.01, ws, cfg_t, key=key_, noise_mode="kernel",
+            impl="interpret" if jax.default_backend() != "tpu"
+            else "pallas"))
+        emit(f"micro/outer_update_kernel_{k}x{n}_b{b}",
+             _time(f_ker, g, x, d, key, n=reps))
+
+        # Layer-batched sweep over a scan-stacked (L, K, N) container.
+        lyr = 4
+        gl = jnp.broadcast_to(g, (lyr, k, n))
+        x_q, d_q = quantize_update_operands(x, d, cfg_t)
+        xl = jnp.broadcast_to(x_q, (lyr, b, k))
+        dl = jnp.broadcast_to(d_q, (lyr, b, n))
+        scale = jnp.full((lyr,), -0.01 * ws, jnp.float32)
+        f_bat = jax.jit(lambda g_, x_, d_: xbar_outer_update(
+            g_, x_, d_, scale, cfg_t, seed=jnp.uint32(7),
+            noise_mode="kernel"))
+        emit(f"micro/outer_update_batched_L{lyr}_{k}x{n}_b{b}",
+             _time(f_bat, gl, xl, dl, n=reps), n_macs=lyr * macs)
 
     if args.out:
         with open(args.out, "w") as f:

@@ -10,7 +10,8 @@ from .device import (IDEAL, LINEARIZED, TAOX, TAOX_NONOISE, DeviceConfig,
                      lut_from_analytic, lut_from_pulse_train)
 from .tiled_analog import (DEVICE_MODELS, analog_project,
                            crossbar_from_model, is_analog_container,
-                           program_linear, tile_info, with_tapes)
+                           merge_tapes, program_linear, split_tapes,
+                           tile_info, with_tapes)
 from .periodic_carry import (pc_backward, pc_carry, pc_effective_weights,
                              pc_forward, pc_init, pc_update)
 from .xbar_ops import mvm, outer_update, quantize_update_operands, vmm
@@ -26,5 +27,6 @@ __all__ = [
     "quantize_update_operands", "pc_init", "pc_forward", "pc_backward",
     "pc_update", "pc_carry", "pc_effective_weights", "DEVICE_MODELS",
     "analog_project", "crossbar_from_model", "is_analog_container",
-    "program_linear", "tile_info", "with_tapes",
+    "program_linear", "tile_info", "with_tapes", "split_tapes",
+    "merge_tapes",
 ]

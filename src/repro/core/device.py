@@ -146,7 +146,8 @@ def apply_update(g: Array, dg_req: Array, cfg: DeviceConfig,
             raise ValueError("stochastic device model requires a PRNG key")
         sigma = write_noise_sigma(dg_req, cfg)
         dg = dg + sigma * jax.random.normal(key, g.shape, dtype=g.dtype)
-    return jnp.clip(g + dg, cfg.gmin, cfg.gmax)
+    # raw min/max: jnp.clip is a pjit-wrapped call per invocation
+    return jnp.minimum(jnp.maximum(g + dg, cfg.gmin), cfg.gmax)
 
 
 # ---------------------------------------------------------------------------

@@ -23,12 +23,15 @@ hwmodel cost roll-up projects at the paper's Table-I geometry — see
 
 In-situ training needs the *drive operands* of the outer-product write —
 the quantised activations x_q and errors d_q — not a materialised (K, N)
-gradient.  The custom VJP here therefore returns a **zero** cotangent for
-``g`` and instead writes x_q / d_q into two tape leaves that the caller
-injects next to the container (see ``train/analog_lm.py``).  The analog
-optimizer hands the tapes straight to the fused Pallas kernel
-``kernels/xbar_update.py``, so the (K, N) gradient never exists in HBM —
-on the hardware it never exists at all.
+gradient.  The custom VJP here therefore returns **symbolic-zero**
+cotangents for g/ref/w_scale (zero by type: nothing is traced, nothing is
+broadcast) and instead writes x_q / d_q into two tape leaves.  The train
+step hoists the analog leaves out of the differentiated tree entirely
+(:func:`split_tapes` / :func:`merge_tapes`), so the grads tree holds
+exactly the tapes plus the digital gradients, and the analog optimizer
+hands the tapes straight to the fused Pallas kernel
+``kernels/xbar_update.py`` — the (K, N) gradient never exists in HBM; on
+the hardware it never exists at all.
 """
 from __future__ import annotations
 
@@ -37,6 +40,7 @@ from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+from jax.custom_derivatives import SymbolicZero
 
 from .adc import AdcConfig
 from .crossbar import CrossbarConfig, make_reference, tile_grid, \
@@ -116,6 +120,14 @@ def tile_info(p: dict, cfg: CrossbarConfig) -> Tuple[int, int, float]:
 # Taped analog matmul: the in-situ training primitive.
 # --------------------------------------------------------------------------
 
+def _symbolic_zero(x: Array) -> SymbolicZero:
+    """A cotangent that is zero *by type*: no array is traced, nothing is
+    broadcast, nothing hits HBM.  (g/ref/w_scale are f32, so the tangent
+    aval equals the primal aval.)"""
+    return SymbolicZero(jax.core.ShapedArray(jnp.shape(x),
+                                             jnp.result_type(x)))
+
+
 @partial(jax.custom_vjp, nondiff_argnums=(6,))
 def _taped_matmul(g: Array, ref: Array, w_scale: Array,
                   x_tape: Array, d_tape: Array, x: Array,
@@ -125,27 +137,32 @@ def _taped_matmul(g: Array, ref: Array, w_scale: Array,
 
 
 def _taped_fwd(g, ref, w_scale, x_tape, d_tape, x, cfg):
+    # defvjp(..., symbolic_zeros=True) wraps every differentiable primal as
+    # CustomVJPPrimal(value, perturbed); the tapes' values are never read.
     del x_tape, d_tape
+    g, ref, w_scale, x = g.value, ref.value, w_scale.value, x.value
     y = vmm(x, g, ref, w_scale, cfg)
     return y, (g, ref, w_scale, x)
 
 
 def _taped_bwd(cfg, res, dy):
     g, ref, w_scale, x = res
+    if isinstance(dy, SymbolicZero):  # y unused downstream: nothing flows
+        dy = jnp.zeros(dy.aval.shape, dy.aval.dtype)
+    dy32 = dy.astype(jnp.float32)
     # Error backprop: transpose read of the SAME (quantised, saturated,
     # ADC'd) conductances the forward pass saw.
-    dx = mvm(dy.astype(jnp.float32), g, ref, w_scale, cfg)
+    dx = mvm(dy32, g, ref, w_scale, cfg)
     # The write drivers' operands, quantised exactly as the hardware does
     # (rows: temporal code, columns: voltage code).  They flow out through
-    # the tape leaves; ``g`` gets a zero cotangent — the dense (K, N)
-    # gradient is never formed.
-    x_q, d_q = quantize_update_operands(x.astype(jnp.float32),
-                                        dy.astype(jnp.float32), cfg)
-    return (jnp.zeros_like(g), jnp.zeros_like(ref),
-            jnp.zeros_like(w_scale), x_q, d_q, dx.astype(x.dtype))
+    # the tape leaves; g/ref/w_scale get *symbolic* zero cotangents — the
+    # dense (K, N) gradient is never formed, not even as a zeros fill.
+    x_q, d_q = quantize_update_operands(x.astype(jnp.float32), dy32, cfg)
+    return (_symbolic_zero(g), _symbolic_zero(ref), _symbolic_zero(w_scale),
+            x_q, d_q, dx.astype(x.dtype))
 
 
-_taped_matmul.defvjp(_taped_fwd, _taped_bwd)
+_taped_matmul.defvjp(_taped_fwd, _taped_bwd, symbolic_zeros=True)
 
 
 def analog_project(p: dict, x: Array, cfg: CrossbarConfig) -> Array:
@@ -176,7 +193,17 @@ def analog_project(p: dict, x: Array, cfg: CrossbarConfig) -> Array:
 
 
 def make_tapes(p: dict, n_tokens: int) -> dict:
-    """Zero tape leaves for one container (shapes (T, K) / (T, N))."""
+    """Zero tape *slots* for one container (shapes (T, K) / (T, N)).
+
+    Tape lifecycle: the train step allocates these slots (inside jit they
+    are zero constants whose values are never read — the taped VJP ignores
+    them and XLA folds them away, so no (T, K) buffer is ever written), the
+    backward pass of ``_taped_matmul`` overwrites their cotangents with the
+    quantised write-driver operands (x_q, d_q), and the analog optimizer
+    consumes those cotangents as the drive operands of the fused parallel
+    write (``kernels/xbar_update.py``).  One allocation site, one writer,
+    one consumer.
+    """
     k, n = p["g"].shape[-2:]
     lead = p["g"].shape[:-2]  # scan-stacked containers carry (L, K, N)
     return {"x_tape": jnp.zeros((*lead, n_tokens, k), jnp.float32),
@@ -184,9 +211,46 @@ def make_tapes(p: dict, n_tokens: int) -> dict:
 
 
 def with_tapes(params, n_tokens: int):
-    """Recursively inject tape leaves next to every analog container."""
+    """Recursively inject tape leaves next to every analog container.
+
+    Prefer :func:`split_tapes` in training code — differentiating a
+    ``with_tapes`` tree asks for cotangents of every g/ref/w_scale leaf,
+    which ``jax.grad`` then instantiates as dense zeros at the boundary.
+    """
     if is_analog_container(params):
         return {**params, **make_tapes(params, n_tokens)}
     if isinstance(params, dict):
         return {k: with_tapes(v, n_tokens) for k, v in params.items()}
     return params
+
+
+def split_tapes(params, n_tokens: int):
+    """Partition a parameter tree for the hoisted analog gradient.
+
+    Returns ``(diff, frozen)``: ``diff`` carries every digital leaf plus,
+    for each analog container, only the tape slots; ``frozen`` mirrors the
+    tree with each container's g/ref/w_scale (``None`` elsewhere).
+    ``jax.value_and_grad`` over ``diff`` (recombined via
+    :func:`merge_tapes` inside the loss closure) therefore never requests a
+    conductance cotangent — the grads tree holds exactly the tapes and the
+    digital gradients, and no (K, N) zero array exists even at the jaxpr
+    level (the taped VJP emits symbolic zeros internally).
+    """
+    if is_analog_container(params):
+        return (make_tapes(params, n_tokens),
+                {k: params[k] for k in ("g", "ref", "w_scale")})
+    if isinstance(params, dict):
+        split = {k: split_tapes(v, n_tokens) for k, v in params.items()}
+        return ({k: v[0] for k, v in split.items()},
+                {k: v[1] for k, v in split.items()})
+    return params, None
+
+
+def merge_tapes(diff, frozen):
+    """Inverse of :func:`split_tapes`: rebuild the tree the model consumes
+    (each analog container regains its g/ref/w_scale next to its tapes)."""
+    if frozen is None:
+        return diff
+    if isinstance(frozen, dict) and "g" in frozen:
+        return {**frozen, **diff}
+    return {k: merge_tapes(diff[k], frozen[k]) for k in diff}

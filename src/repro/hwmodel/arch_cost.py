@@ -43,13 +43,22 @@ def model_projections(cfg: ModelConfig) -> List[Projection]:
     ps: List[Projection] = []
     L = cfg.n_layers
 
-    def attn(prefix: str, count: int, d_in: int = None):
+    def attn(prefix: str, count: int, d_in: int = None,
+             fused: bool = True):
+        # mirror models/layers.attn_init: self-attention programs q/k/v on
+        # one column-concatenated array; cross-attention keeps them split
         di = d_in or d
-        ps.append(Projection(f"{prefix}.wq", di, cfg.n_heads * hd, count))
-        ps.append(Projection(f"{prefix}.wk", di, cfg.n_kv_heads * hd,
-                             count))
-        ps.append(Projection(f"{prefix}.wv", di, cfg.n_kv_heads * hd,
-                             count))
+        if fused:
+            ps.append(Projection(
+                f"{prefix}.wqkv", di,
+                (cfg.n_heads + 2 * cfg.n_kv_heads) * hd, count))
+        else:
+            ps.append(Projection(f"{prefix}.wq", di, cfg.n_heads * hd,
+                                 count))
+            ps.append(Projection(f"{prefix}.wk", di,
+                                 cfg.n_kv_heads * hd, count))
+            ps.append(Projection(f"{prefix}.wv", di,
+                                 cfg.n_kv_heads * hd, count))
         ps.append(Projection(f"{prefix}.wo", cfg.n_heads * hd, d, count))
 
     if cfg.family in ("ssm", "hybrid"):
@@ -62,8 +71,9 @@ def model_projections(cfg: ModelConfig) -> List[Projection]:
             n_groups = L // cfg.attn_every
             ps.append(Projection("shared.in", 2 * d, d, 1))
             attn("shared.attn", 1)
-            for nm, kk, nn in (("shared.ffn.up", d, cfg.d_ff),
-                               ("shared.ffn.gate", d, cfg.d_ff),
+            shared_up = ("shared.ffn.upgate", d, 2 * cfg.d_ff) \
+                if cfg.gated else ("shared.ffn.up", d, cfg.d_ff)
+            for nm, kk, nn in (shared_up,
                                ("shared.ffn.down", cfg.d_ff, d)):
                 ps.append(Projection(nm, kk, nn, 1))
         return ps
@@ -72,8 +82,10 @@ def model_projections(cfg: ModelConfig) -> List[Projection]:
     if cfg.cross_attn_every:
         n_cross = L // cfg.cross_attn_every
         n_self = L - n_cross
-        attn("cross", n_cross)
-        for nm, kk, nn in (("cross.ffn.up", d, cfg.d_ff),
+        attn("cross", n_cross, fused=False)
+        cross_up = ("cross.ffn.upgate", d, 2 * cfg.d_ff) if cfg.gated \
+            else ("cross.ffn.up", d, cfg.d_ff)
+        for nm, kk, nn in (cross_up,
                            ("cross.ffn.down", cfg.d_ff, d)):
             ps.append(Projection(nm, kk, nn, n_cross))
     if cfg.use_mla:
@@ -90,11 +102,15 @@ def model_projections(cfg: ModelConfig) -> List[Projection]:
         attn("attn", n_self)
     if cfg.n_encoder_layers:
         attn("enc.attn", cfg.n_encoder_layers)
-        for nm, kk, nn in (("enc.ffn.up", d, cfg.d_ff),
+        enc_up = ("enc.ffn.upgate", d, 2 * cfg.d_ff) if cfg.gated \
+            else ("enc.ffn.up", d, cfg.d_ff)
+        for nm, kk, nn in (enc_up,
                            ("enc.ffn.down", cfg.d_ff, d)):
             ps.append(Projection(nm, kk, nn, cfg.n_encoder_layers))
 
-    ffn_names = (("up", cfg.d_ff), ("gate", cfg.d_ff)) if cfg.gated \
+    # mirror models/layers.ffn_init: gated FFNs program up+gate on one
+    # double-width array sharing the row drives
+    ffn_names = (("upgate", 2 * cfg.d_ff),) if cfg.gated \
         else (("up", cfg.d_ff),)
     if cfg.n_experts:
         ffe = cfg.d_ff_expert or cfg.d_ff

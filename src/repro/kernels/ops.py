@@ -54,16 +54,37 @@ def mvm(d: Array, g: Array, g_ref: Array, w_scale: Array,
 def outer_update(g: Array, x: Array, d: Array, lr, w_scale: Array,
                  cfg: CrossbarConfig, key: Optional[Array] = None,
                  block_b: Optional[int] = None,
-                 interpret: Optional[bool] = None) -> Array:
-    """Kernelised counterpart of ``repro.core.xbar_ops.outer_update``."""
-    interpret = default_interpret() if interpret is None else interpret
+                 interpret: Optional[bool] = None,
+                 noise_mode: Optional[str] = None,
+                 impl: Optional[str] = None) -> Array:
+    """Kernelised counterpart of ``repro.core.xbar_ops.outer_update``.
+
+    The default noise mode is ``"host"`` — a pre-generated field from
+    ``key`` — so results are the exact twin of the reference op for the
+    same key.  Pass ``noise_mode="kernel"`` to derive a scalar seed from
+    ``key`` instead and let the kernel generate its noise in-place (no
+    (K, N) field in HBM; samples differ from the host path but share its
+    distribution).  ``impl`` selects the execution path (see
+    ``kernels.xbar_update.xbar_outer_update``).
+    """
+    if impl is None and interpret is None:
+        interpret = default_interpret()
     x_q, d_q = quantize_update_operands(x.astype(jnp.float32),
                                         d.astype(jnp.float32), cfg)
-    noise = None
-    if cfg.device.write_noise > 0.0:
+    noise = seed = None
+    if cfg.device.write_noise <= 0.0:
+        noise_mode = "none"
+    elif noise_mode in (None, "host", "kernel"):
         if key is None:
             raise ValueError("stochastic device model requires a PRNG key")
-        noise = jax.random.normal(key, g.shape, dtype=jnp.float32)
+        if noise_mode == "kernel":
+            seed = jax.random.bits(key, (), jnp.uint32)
+        else:
+            noise_mode = "host"
+            noise = jax.random.normal(key, g.shape, dtype=jnp.float32)
+    # any other value ("none" for a deliberately noiseless run, or a typo)
+    # passes through to xbar_outer_update's strict validation
     scale = jnp.asarray(-lr, jnp.float32) * w_scale
     return xbar_outer_update(g, x_q, d_q, scale, cfg, noise=noise,
-                             block_b=block_b, interpret=interpret)
+                             seed=seed, noise_mode=noise_mode,
+                             block_b=block_b, interpret=interpret, impl=impl)

@@ -1,4 +1,4 @@
-"""Pallas TPU kernel: fused rank-k outer-product + nonlinear device update.
+"""Pallas TPU kernel: fused, layer-batched rank-k outer-product update.
 
 The paper's parallel write (Fig. 3c) updates every crossbar cell with the
 product of its row drive (time-coded activation) and column drive
@@ -8,13 +8,44 @@ nonlinear/asymmetric/stochastic device model elementwise and write the new
 conductances — one HBM round-trip for G instead of three (read, add,
 write-back) plus a separate (K, N) gradient materialisation.
 
-Grid: (K/rows, N/cols, B/blk_b) — batch innermost; the output block doubles
-as the outer-product accumulator until the last batch step, when the device
-epilogue transforms it into the new conductances in-place.
+Grid layout
+-----------
+``(L, K/rows, N/cols, B/blk_b)`` with the batch innermost.  ``L`` is a
+leading *layer* grid dimension so one ``pallas_call`` sweeps a whole
+scan-stacked ``(L, K, N)`` parameter container (every projection of every
+transformer layer) instead of launching L kernels from a Python loop and
+re-stacking the results.  Per-layer scalars (the folded ``-lr * w_scale``
+and the PRNG seed) ride in as (L, 1)/(1, 1) blocks indexed by the layer
+grid coordinate.  The output block doubles as the outer-product accumulator
+until the last batch step, when the device epilogue transforms it into the
+new conductances in place.
 
-Stochasticity: a pre-generated N(0,1) field rides in as an input (Pallas
-TPU PRNG is not available in interpret mode; the random-walk sigma scaling
-happens in-kernel).
+Stochasticity
+-------------
+Three modes (``noise_mode``):
+
+* ``"none"``   — noiseless devices; no noise operand at all.
+* ``"kernel"`` — the default for training: standard normals are generated
+  *inside* the epilogue by a counter-based PRNG (murmur-mix of
+  (seed, layer, tile, cell) + Box–Muller) seeded per (layer, tile) from one
+  scalar.  No (K, N) noise field ever exists in HBM, and because the
+  generator is plain uint32/f32 arithmetic it produces bit-identical
+  samples in the compiled TPU kernel, in interpret mode, and in the fused
+  jnp path below — one seed, same conductances on every backend.
+* ``"host"``   — the legacy pre-generated N(0,1) field rides in as an
+  input; kept as the fallback that reproduces ``core.device.apply_update``
+  exactly for a given ``jax.random`` key (the kernel-vs-reference
+  equivalence tests depend on it).
+
+Execution paths (``impl``)
+--------------------------
+``"pallas"`` compiles the kernel with Mosaic (TPU), ``"interpret"`` runs it
+under the Pallas interpreter (the validation oracle on any backend), and
+``"fused"`` runs a mathematically identical single-sweep jnp twin — one
+batched einsum + the same epilogue — which is what non-TPU hosts use for
+speed: the interpreter walks the grid serially and exists for correctness,
+not throughput.  ``"auto"`` picks ``"pallas"`` on TPU and ``"fused"``
+elsewhere.
 """
 from __future__ import annotations
 
@@ -31,8 +62,96 @@ from repro.core.device import DeviceConfig
 
 Array = jax.Array
 
+NOISE_MODES = ("none", "host", "kernel")
+IMPLS = ("auto", "pallas", "interpret", "fused")
 
-def _device_epilogue(g: Array, dg_req: Array, noise: Array,
+
+# --------------------------------------------------------------------------
+# Counter-based PRNG (shared by the kernel epilogue and the fused path)
+# --------------------------------------------------------------------------
+
+def _u32(x) -> Array:
+    return jnp.asarray(x).astype(jnp.uint32)
+
+
+def _mix32(x: Array) -> Array:
+    """murmur3 fmix32: a bijective 32-bit finaliser with full avalanche."""
+    x = x ^ (x >> jnp.uint32(16))
+    x = x * jnp.uint32(0x85EBCA6B)
+    x = x ^ (x >> jnp.uint32(13))
+    x = x * jnp.uint32(0xC2B2AE35)
+    x = x ^ (x >> jnp.uint32(16))
+    return x
+
+
+def _tile_seed(seed, layer, tile_k, tile_n) -> Array:
+    """Decorrelated per-(layer, tile) seed from one scalar base seed."""
+    h = _mix32(_u32(seed) ^ jnp.uint32(0x9E3779B9))
+    h = _mix32(h + jnp.uint32(0x9E3779B1) * _u32(layer))
+    h = _mix32(h + jnp.uint32(0x85EBCA77) * _u32(tile_k))
+    h = _mix32(h + jnp.uint32(0xC2B2AE3D) * _u32(tile_n))
+    return h
+
+
+def _pair_normals(h: Array) -> tuple:
+    """Two standard normals per hashed pair counter: both Box–Muller
+    outputs, so the hash/log work is paid once per *pair*.  The one mixed
+    word supplies both uniforms (16 bits each — radius resolution 1.5e-5
+    truncates at 4.7 sigma, far beyond the device-noise regime).  Pure
+    uint32/f32 ops — no carried RNG state — the same hash gives the same
+    samples everywhere."""
+    # u1 in (0, 1] keeps the log finite.
+    u1 = ((h >> jnp.uint32(16)).astype(jnp.float32) + 1.0) * (1.0 / (1 << 16))
+    u2 = (h & jnp.uint32(0xFFFF)).astype(jnp.float32) * (1.0 / (1 << 16))
+    r = jnp.sqrt(-2.0 * jnp.log(u1))
+    a = (2.0 * np.pi) * u2
+    return r * jnp.cos(a), r * jnp.sin(a)
+
+
+def _tile_normals(seed: Array, rows: int, cols: int) -> Array:
+    """(rows, cols) standard normals for one tile from its scalar seed.
+
+    Pairs interleave along the column axis — (r, 2j) and (r, 2j + 1) share
+    one Box–Muller draw — so a tile with even ``cols`` (every practical
+    array) does half the hashing and half the logs.  The odd-``cols``
+    fallback spends a full draw per cell and keeps only the cosine leg.
+    """
+    if cols % 2 == 0:
+        half = cols // 2
+        pid = (jax.lax.broadcasted_iota(jnp.uint32, (rows, half), 0)
+               * jnp.uint32(half)
+               + jax.lax.broadcasted_iota(jnp.uint32, (rows, half), 1))
+        z0, z1 = _pair_normals(_mix32(pid ^ seed))
+        z = jnp.stack([z0, z1], axis=-1)  # (..., rows, half, 2)
+        return z.reshape(*z.shape[:-2], cols)
+    idx = (jax.lax.broadcasted_iota(jnp.uint32, (rows, cols), 0)
+           * jnp.uint32(cols)
+           + jax.lax.broadcasted_iota(jnp.uint32, (rows, cols), 1))
+    z0, _ = _pair_normals(_mix32(idx ^ seed))
+    return z0
+
+
+def field_normals(seed, shape, cfg: CrossbarConfig) -> Array:
+    """(L, K, N) standard-normal field, bit-identical to what the kernel
+    epilogue generates per (layer, tile).  Used by the fused jnp path and by
+    the distribution/reproducibility tests; never needed on TPU."""
+    lyr, k, n = shape
+    rows, cols = cfg.rows, cfg.cols
+    tk, tn = -(-k // rows), -(-n // cols)
+    li = jax.lax.broadcasted_iota(jnp.uint32, (lyr, tk, tn), 0)
+    ki = jax.lax.broadcasted_iota(jnp.uint32, (lyr, tk, tn), 1)
+    ni = jax.lax.broadcasted_iota(jnp.uint32, (lyr, tk, tn), 2)
+    seeds = _tile_seed(seed, li, ki, ni)[..., None, None]
+    z = _tile_normals(seeds, rows, cols)  # (L, tk, tn, rows, cols)
+    z = z.transpose(0, 1, 3, 2, 4).reshape(lyr, tk * rows, tn * cols)
+    return z[:, :k, :n]
+
+
+# --------------------------------------------------------------------------
+# Device epilogue (elementwise; mirrors core.device.apply_update)
+# --------------------------------------------------------------------------
+
+def _device_epilogue(g: Array, dg_req: Array, noise: Optional[Array],
                      dev: DeviceConfig) -> Array:
     """Elementwise device model (mirrors core.device.apply_update)."""
     if dev.kind in ("ideal", "linearized"):
@@ -46,84 +165,245 @@ def _device_epilogue(g: Array, dg_req: Array, noise: Array,
             e = np.exp(-nu)
             mid = (np.exp(-0.5 * nu) - e) / (1.0 - e)
             return (jnp.exp(-nu * xx) - e) / (1.0 - e) / mid
-        up = dev.gain_set * factor(x, dev.nu_set)
-        dn = dev.gain_reset * factor(1.0 - x, dev.nu_reset)
+        if dev.nu_set == dev.nu_reset and dev.nu_set >= 1e-6:
+            # Symmetric nonlinearity: exp(-nu (1-x)) = e^{-nu} / exp(-nu x),
+            # so one transcendental serves both write directions.
+            nu = dev.nu_set
+            e = np.exp(-nu)
+            mid = (np.exp(-0.5 * nu) - e) / (1.0 - e)
+            s = jnp.exp(-nu * x)
+            up = dev.gain_set * ((s - e) / ((1.0 - e) * mid))
+            dn = dev.gain_reset * ((e / s - e) / ((1.0 - e) * mid))
+        else:
+            up = dev.gain_set * factor(x, dev.nu_set)
+            dn = dev.gain_reset * factor(1.0 - x, dev.nu_reset)
         dg = jnp.where(dg_req >= 0, dg_req * up, dg_req * dn)
-    if dev.write_noise > 0.0:
+    if dev.write_noise > 0.0 and noise is not None:
         n_pulses = jnp.abs(dg_req) / dev.pulse_dg
         sigma = dev.write_noise * dev.pulse_dg * jnp.sqrt(n_pulses)
         dg = dg + sigma * noise
-    return jnp.clip(g + dg, dev.gmin, dev.gmax)
+    # raw min/max: jnp.clip is a pjit-wrapped call per invocation
+    return jnp.minimum(jnp.maximum(g + dg, dev.gmin), dev.gmax)
 
 
-def _update_kernel(x_ref, d_ref, g_ref, noise_ref, scale_ref, o_ref, *,
-                   cfg: CrossbarConfig, n_bsteps: int):
-    bstep = pl.program_id(2)
+# --------------------------------------------------------------------------
+# The kernel
+# --------------------------------------------------------------------------
+
+def _update_kernel(*refs, cfg: CrossbarConfig, n_bsteps: int,
+                   noise_mode: str):
+    if noise_mode == "host":
+        x_ref, d_ref, g_ref, noise_ref, scale_ref, o_ref = refs
+    elif noise_mode == "kernel":
+        x_ref, d_ref, g_ref, seed_ref, scale_ref, o_ref = refs
+    else:
+        x_ref, d_ref, g_ref, scale_ref, o_ref = refs
+    bstep = pl.program_id(3)
+    # program ids are read at the kernel-body top level: inside a pl.when
+    # branch they would land in a cond jaxpr the interpreter can't lower.
+    lid, kid, nid = pl.program_id(0), pl.program_id(1), pl.program_id(2)
 
     @pl.when(bstep == 0)
     def _init():
-        o_ref[:, :] = jnp.zeros_like(o_ref)
+        o_ref[0, :, :] = jnp.zeros_like(o_ref[0, :, :])
 
     # Accumulate the outer product sum_b x[b, :] d[b, :] for this tile.
-    o_ref[:, :] += jax.lax.dot_general(
-        x_ref[:, :], d_ref[:, :],
+    o_ref[0, :, :] += jax.lax.dot_general(
+        x_ref[0, :, :], d_ref[0, :, :],
         dimension_numbers=(((0,), (0,)), ((), ())),
         preferred_element_type=jnp.float32)
 
     @pl.when(bstep == n_bsteps - 1)
     def _apply():
-        dg_req = scale_ref[0, 0] * o_ref[:, :]
-        o_ref[:, :] = _device_epilogue(g_ref[:, :], dg_req,
-                                       noise_ref[:, :], cfg.device)
+        dg_req = scale_ref[0, 0] * o_ref[0, :, :]
+        if noise_mode == "kernel":
+            rows, cols = o_ref.shape[-2:]
+            seed = _tile_seed(seed_ref[0, 0], lid, kid, nid)
+            noise = _tile_normals(seed, rows, cols)
+        elif noise_mode == "host":
+            noise = noise_ref[0, :, :]
+        else:
+            noise = None
+        o_ref[0, :, :] = _device_epilogue(g_ref[0, :, :], dg_req, noise,
+                                          cfg.device)
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("cfg", "block_b", "interpret"))
-def xbar_outer_update(g: Array, x_q: Array, d_q: Array, scale: Array,
+def _pallas_update(g, x_q, d_q, scale, noise, seed, cfg, block_b,
+                   noise_mode, interpret):
+    lyr, k, n = g.shape
+    b = x_q.shape[1]
+    bb = block_b or b
+    x_q = jnp.pad(x_q, ((0, 0), (0, (-b) % bb), (0, (-k) % cfg.rows)))
+    d_q = jnp.pad(d_q, ((0, 0), (0, (-b) % bb), (0, (-n) % cfg.cols)))
+    gp = jnp.pad(g, ((0, 0), (0, (-k) % cfg.rows), (0, (-n) % cfg.cols)))
+    _, kp, np_ = gp.shape
+    bp = x_q.shape[1]
+    grid = (lyr, kp // cfg.rows, np_ // cfg.cols, bp // bb)
+
+    inputs = [x_q, d_q, gp]
+    in_specs = [
+        pl.BlockSpec((1, bb, cfg.rows), lambda l_, k_, n_, b_: (l_, b_, k_)),
+        pl.BlockSpec((1, bb, cfg.cols), lambda l_, k_, n_, b_: (l_, b_, n_)),
+        pl.BlockSpec((1, cfg.rows, cfg.cols),
+                     lambda l_, k_, n_, b_: (l_, k_, n_)),
+    ]
+    if noise_mode == "host":
+        noisep = jnp.pad(noise, ((0, 0), (0, (-k) % cfg.rows),
+                                 (0, (-n) % cfg.cols)))
+        inputs.append(noisep)
+        in_specs.append(pl.BlockSpec((1, cfg.rows, cfg.cols),
+                                     lambda l_, k_, n_, b_: (l_, k_, n_)))
+    elif noise_mode == "kernel":
+        inputs.append(jnp.reshape(_u32(seed), (1, 1)))
+        in_specs.append(pl.BlockSpec((1, 1), lambda l_, k_, n_, b_: (0, 0)))
+    inputs.append(jnp.reshape(scale, (lyr, 1)))
+    in_specs.append(pl.BlockSpec((1, 1), lambda l_, k_, n_, b_: (l_, 0)))
+
+    out = pl.pallas_call(
+        functools.partial(_update_kernel, cfg=cfg, n_bsteps=grid[3],
+                          noise_mode=noise_mode),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, cfg.rows, cfg.cols),
+                               lambda l_, k_, n_, b_: (l_, k_, n_)),
+        out_shape=jax.ShapeDtypeStruct((lyr, kp, np_), jnp.float32),
+        interpret=interpret,
+    )(*inputs)
+    return out[:, :k, :n]
+
+
+def _fused_update(g, x_q, d_q, scale, noise, seed, cfg, noise_mode):
+    """Single-sweep jnp twin of the kernel: one layer-batched einsum plus
+    the identical epilogue (and, in kernel noise mode, the identical
+    counter-PRNG bits).  The fast path on hosts without Mosaic."""
+    dg_req = scale[:, None, None] * jnp.einsum(
+        "lbk,lbn->lkn", x_q, d_q, preferred_element_type=jnp.float32)
+    if noise_mode == "kernel":
+        noise = field_normals(seed, g.shape, cfg)
+    elif noise_mode == "none":
+        noise = None
+    return _device_epilogue(g, dg_req, noise, cfg.device)
+
+
+def _dispatch_update(g, x_q, d_q, scale, noise, seed, cfg, block_b, impl,
+                     noise_mode):
+    if impl == "fused":
+        return _fused_update(g, x_q, d_q, scale, noise, seed, cfg,
+                             noise_mode)
+    return _pallas_update(g, x_q, d_q, scale, noise, seed, cfg, block_b,
+                          noise_mode, interpret=(impl == "interpret"))
+
+
+_outer_update = functools.partial(jax.jit, static_argnames=(
+    "cfg", "block_b", "impl", "noise_mode"))(_dispatch_update)
+
+
+def _resolve_update_args(g, x_q, d_q, scale, cfg, noise, seed, noise_mode,
+                         impl, interpret):
+    squeeze = g.ndim == 2
+    if squeeze:
+        g, x_q, d_q = g[None], x_q[None], d_q[None]
+        if noise is not None:
+            noise = noise[None]
+    lyr = g.shape[0]
+    dev = cfg.device
+
+    if noise_mode is None:
+        if dev.write_noise <= 0.0:
+            noise_mode = "none"
+        elif noise is not None:
+            noise_mode = "host"
+        elif seed is not None:
+            noise_mode = "kernel"
+        else:
+            raise ValueError(
+                "stochastic device model requires a noise field "
+                "(noise_mode='host') or a scalar seed (noise_mode='kernel')")
+    if noise_mode not in NOISE_MODES:
+        raise ValueError(f"noise_mode must be one of {NOISE_MODES}")
+    if noise_mode == "host" and noise is None:
+        raise ValueError("noise_mode='host' requires a noise field")
+    if noise_mode == "kernel" and seed is None:
+        raise ValueError("noise_mode='kernel' requires a scalar seed")
+    if noise_mode != "host":
+        noise = None
+    if noise_mode != "kernel":
+        seed = None
+
+    if impl is None:
+        if interpret is not None:
+            impl = "interpret" if interpret else "pallas"
+        else:
+            impl = "auto"
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "fused"
+    if impl not in IMPLS:
+        raise ValueError(f"impl must be one of {IMPLS}")
+
+    g = g.astype(jnp.float32)
+    x_q = x_q.astype(jnp.float32)
+    d_q = d_q.astype(jnp.float32)
+    if noise is not None:
+        noise = noise.astype(jnp.float32)
+    if seed is not None:
+        seed = _u32(seed)
+    scale = jnp.broadcast_to(
+        jnp.asarray(scale, jnp.float32).reshape(-1), (lyr,))
+    return g, x_q, d_q, scale, noise, seed, noise_mode, impl, squeeze
+
+
+def xbar_outer_update(g: Array, x_q: Array, d_q: Array, scale,
                       cfg: CrossbarConfig,
                       noise: Optional[Array] = None,
                       block_b: Optional[int] = None,
-                      interpret: bool = False) -> Array:
-    """G <- device(G, scale * sum_b outer(x_q_b, d_q_b)).
+                      interpret: Optional[bool] = None,
+                      seed: Optional[Array] = None,
+                      noise_mode: Optional[str] = None,
+                      impl: Optional[str] = None) -> Array:
+    """G <- device(G, scale * sum_b outer(x_q_b, d_q_b)), layer-batched.
 
-    ``x_q``: (B, K) row drives, ``d_q``: (B, N) column drives (already
-    quantised by the write drivers), ``scale`` folds ``-lr * w_scale``.
-    ``noise``: (K, N) standard normals (required iff write_noise > 0).
+    ``g``: (K, N) or scan-stacked (L, K, N) conductances; ``x_q``: (B, K)
+    or (L, B, K) row drives; ``d_q``: (B, N) or (L, B, N) column drives
+    (already quantised by the write drivers); ``scale`` folds
+    ``-lr * w_scale`` — scalar or (L,).
+
+    Stochasticity: pass ``seed`` (scalar uint32) for in-kernel noise
+    (``noise_mode="kernel"``), or a pre-generated N(0,1) ``noise`` field of
+    g's shape (``noise_mode="host"``, the exact twin of
+    ``core.device.apply_update`` for the matching ``jax.random`` key).
+
+    ``impl``: "pallas" | "interpret" | "fused" | None ("auto": Mosaic on
+    TPU, the fused jnp twin elsewhere).  ``interpret=True/False`` is the
+    legacy spelling of "interpret"/"pallas".
     """
-    k, n = g.shape
-    b = x_q.shape[0]
-    dev = cfg.device
-    if dev.write_noise > 0.0 and noise is None:
-        raise ValueError("stochastic device model requires a noise field")
-    if noise is None:
-        noise = jnp.zeros((1, 1), dtype=jnp.float32)
-        noise = jnp.broadcast_to(noise, g.shape)
-    bb = block_b or b
-    x_q = jnp.pad(x_q.astype(jnp.float32),
-                  (((0, (-b) % bb), (0, (-k) % cfg.rows))))
-    d_q = jnp.pad(d_q.astype(jnp.float32),
-                  (((0, (-b) % bb), (0, (-n) % cfg.cols))))
-    gp = jnp.pad(g.astype(jnp.float32),
-                 (((0, (-k) % cfg.rows), (0, (-n) % cfg.cols))))
-    noisep = jnp.pad(noise.astype(jnp.float32),
-                     (((0, (-k) % cfg.rows), (0, (-n) % cfg.cols))))
-    scale = jnp.reshape(scale.astype(jnp.float32), (1, 1))
-    bp = x_q.shape[0]
-    kp, np_ = gp.shape
-    grid = (kp // cfg.rows, np_ // cfg.cols, bp // bb)
-    out = pl.pallas_call(
-        functools.partial(_update_kernel, cfg=cfg, n_bsteps=grid[2]),
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((bb, cfg.rows), lambda k_, n_, b_: (b_, k_)),
-            pl.BlockSpec((bb, cfg.cols), lambda k_, n_, b_: (b_, n_)),
-            pl.BlockSpec((cfg.rows, cfg.cols), lambda k_, n_, b_: (k_, n_)),
-            pl.BlockSpec((cfg.rows, cfg.cols), lambda k_, n_, b_: (k_, n_)),
-            pl.BlockSpec((1, 1), lambda k_, n_, b_: (0, 0)),
-        ],
-        out_specs=pl.BlockSpec((cfg.rows, cfg.cols),
-                               lambda k_, n_, b_: (k_, n_)),
-        out_shape=jax.ShapeDtypeStruct((kp, np_), jnp.float32),
-        interpret=interpret,
-    )(x_q, d_q, gp, noisep, scale)
-    return out[:k, :n].astype(g.dtype)
+    in_dtype = g.dtype
+    (g, x_q, d_q, scale, noise, seed, noise_mode, impl,
+     squeeze) = _resolve_update_args(g, x_q, d_q, scale, cfg, noise, seed,
+                                     noise_mode, impl, interpret)
+    out = _outer_update(g, x_q, d_q, scale, noise, seed, cfg, block_b,
+                        impl, noise_mode)
+    if squeeze:
+        out = out[0]
+    return out.astype(in_dtype)
+
+
+def xbar_outer_update_inline(g: Array, x_q: Array, d_q: Array, scale,
+                             cfg: CrossbarConfig,
+                             noise: Optional[Array] = None,
+                             block_b: Optional[int] = None,
+                             seed: Optional[Array] = None,
+                             noise_mode: Optional[str] = None,
+                             impl: Optional[str] = None) -> Array:
+    """``xbar_outer_update`` without the jit wrapper, for callers already
+    inside a jitted computation (the analog train step): the update inlines
+    into the caller's graph, so per-container epilogues fuse with the rest
+    of the step instead of becoming separate pjit subcomputations."""
+    in_dtype = g.dtype
+    (g, x_q, d_q, scale, noise, seed, noise_mode, impl,
+     squeeze) = _resolve_update_args(g, x_q, d_q, scale, cfg, noise, seed,
+                                     noise_mode, impl, None)
+    out = _dispatch_update(g, x_q, d_q, scale, noise, seed, cfg, block_b,
+                           impl, noise_mode)
+    if squeeze:
+        out = out[0]
+    return out.astype(in_dtype)

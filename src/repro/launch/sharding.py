@@ -100,9 +100,11 @@ def param_pspec(path: Tuple, leaf, cfg: ModelConfig, mesh) -> P:
     if os.environ.get("REPRO_SSM_FSDP") and \
             any(k in sp for k in ("in_proj", "out_proj")):
         return spec2d(dp, None)
-    # column-parallel producers
-    if any(k in sp for k in ("wq", "wk", "wv", "w_up", "w_gate", "wkv_b",
-                             "in_proj", "xattn")):
+    # column-parallel producers (wqkv / w_upgate are the fused
+    # self-attention and gated-FFN layouts: concat of column-parallel
+    # pieces is itself column-parallel)
+    if any(k in sp for k in ("wq", "wk", "wv", "wqkv", "w_up", "w_gate",
+                             "w_upgate", "wkv_b", "in_proj", "xattn")):
         if "wo" in sp:  # xattn/wo handled below
             return spec2d("model", dp)
         return spec2d(dp, "model")

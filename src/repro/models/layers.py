@@ -96,13 +96,18 @@ def embed_init(key: Array, vocab: int, d: int) -> Array:
                                        dtype=jnp.float32)
 
 
-def proj_init(key: Array, d_in: int, d_out: int, cfg: ModelConfig) -> dict:
-    """Projection parameters: a digital weight dict, or — in analog device
-    mode — the weights programmed onto a tiled-crossbar container."""
-    w = dense_init(key, d_in, d_out)
+def proj_from_weights(w: Array, cfg: ModelConfig) -> dict:
+    """Wrap explicit weights as projection params (digital dict, or the
+    weights programmed onto a tiled-crossbar container in device mode)."""
     if cfg.analog_training:
         return program_linear(w, crossbar_from_model(cfg))
     return {"w": w}
+
+
+def proj_init(key: Array, d_in: int, d_out: int, cfg: ModelConfig) -> dict:
+    """Projection parameters: a digital weight dict, or — in analog device
+    mode — the weights programmed onto a tiled-crossbar container."""
+    return proj_from_weights(dense_init(key, d_in, d_out), cfg)
 
 
 def proj_readout(p: dict, cfg: ModelConfig) -> dict:
@@ -200,16 +205,35 @@ def apply_rope(x: Array, positions: Array, theta: float) -> Array:
 # Attention
 # --------------------------------------------------------------------------
 
-def attn_init(key: Array, cfg: ModelConfig, d_in: Optional[int] = None) -> dict:
+def attn_init(key: Array, cfg: ModelConfig, d_in: Optional[int] = None,
+              fused: bool = True) -> dict:
+    """Attention projections.
+
+    ``fused=True`` (self-attention, the default) lays q/k/v out on ONE
+    column-concatenated projection ``wqkv`` — the same init draws as the
+    unfused layout, stacked side by side.  One matmul (one crossbar VMM
+    sweep, one MVM backward, one wide rank-k parallel write) drives all
+    three heads' worth of columns; on the simulated hardware this is
+    exactly a wider array sharing the same row drives.  Cross-attention
+    (q from x, k/v from another stream) needs separate containers: pass
+    ``fused=False``.
+    """
     d = d_in or cfg.d_model
     hd = cfg.resolved_head_dim
     ks = jax.random.split(key, 4)
-    return {
-        "wq": proj_init(ks[0], d, cfg.n_heads * hd, cfg),
-        "wk": proj_init(ks[1], d, cfg.n_kv_heads * hd, cfg),
-        "wv": proj_init(ks[2], d, cfg.n_kv_heads * hd, cfg),
-        "wo": proj_init(ks[3], cfg.n_heads * hd, cfg.d_model, cfg),
-    }
+    wo = proj_init(ks[3], cfg.n_heads * hd, cfg.d_model, cfg)
+    if not fused:
+        return {
+            "wq": proj_init(ks[0], d, cfg.n_heads * hd, cfg),
+            "wk": proj_init(ks[1], d, cfg.n_kv_heads * hd, cfg),
+            "wv": proj_init(ks[2], d, cfg.n_kv_heads * hd, cfg),
+            "wo": wo,
+        }
+    w = jnp.concatenate(
+        [dense_init(ks[0], d, cfg.n_heads * hd),
+         dense_init(ks[1], d, cfg.n_kv_heads * hd),
+         dense_init(ks[2], d, cfg.n_kv_heads * hd)], axis=1)
+    return {"wqkv": proj_from_weights(w, cfg), "wo": wo}
 
 
 def _split_heads(x: Array, n: int) -> Array:
@@ -327,14 +351,24 @@ def attention(p: dict, x: Array, cfg: ModelConfig, *, causal: bool = True,
     b, sq = x.shape[0], x.shape[1]
     append = cache is not None and x_kv is None and (
         sq == 1 or positions is not None)
-    q = _split_heads(project(p["wq"], x, cfg), cfg.n_heads)
+    if "wqkv" in p:  # fused self-attention projection (one VMM sweep)
+        nq, nkv = cfg.n_heads * hd, cfg.n_kv_heads * hd
+        qkv = project(p["wqkv"], x, cfg)
+        q = _split_heads(qkv[..., :nq], cfg.n_heads)
+        k_self = _split_heads(qkv[..., nq:nq + nkv], cfg.n_kv_heads)
+        v_self = _split_heads(qkv[..., nq + nkv:], cfg.n_kv_heads)
+    else:
+        q = _split_heads(project(p["wq"], x, cfg), cfg.n_heads)
+        k_self = v_self = None
     kv_src = x if x_kv is None else x_kv
     if positions is None:
         positions = jnp.broadcast_to(jnp.arange(sq), (b, sq))
     if append:
         # --- decode / chunked prefill: append sq tokens to the cache --------
-        k_new = _split_heads(project(p["wk"], x, cfg), cfg.n_kv_heads)
-        v_new = _split_heads(project(p["wv"], x, cfg), cfg.n_kv_heads)
+        k_new = k_self if k_self is not None else _split_heads(
+            project(p["wk"], x, cfg), cfg.n_kv_heads)
+        v_new = v_self if v_self is not None else _split_heads(
+            project(p["wv"], x, cfg), cfg.n_kv_heads)
         if use_rope:
             q = apply_rope(q, positions, cfg.rope_theta)
             k_new = apply_rope(k_new, positions, cfg.rope_theta)
@@ -351,8 +385,13 @@ def attention(p: dict, x: Array, cfg: ModelConfig, *, causal: bool = True,
             o = _cached_sdpa(q, k, v, positions)
         new_cache = {"k": k, "v": v, "len": idx + sq}
     else:
-        k = _split_heads(project(p["wk"], kv_src, cfg), cfg.n_kv_heads)
-        v = _split_heads(project(p["wv"], kv_src, cfg), cfg.n_kv_heads)
+        if k_self is not None and x_kv is None:
+            k, v = k_self, v_self
+        else:
+            k = _split_heads(project(p["wk"], kv_src, cfg),
+                             cfg.n_kv_heads)
+            v = _split_heads(project(p["wv"], kv_src, cfg),
+                             cfg.n_kv_heads)
         if use_rope and x_kv is None:
             q = apply_rope(q, positions, cfg.rope_theta)
             k = apply_rope(k, positions, cfg.rope_theta)
@@ -514,20 +553,28 @@ def make_mla_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict:
 # --------------------------------------------------------------------------
 
 def ffn_init(key: Array, cfg: ModelConfig, d_ff: Optional[int] = None) -> dict:
+    """Gated FFNs lay up+gate out on one column-concatenated projection
+    ``w_upgate`` (same init draws as the split layout): both halves share
+    the row drives, so the analog forward/backward/update each run as one
+    sweep of a double-width array."""
     d, ff = cfg.d_model, d_ff or cfg.d_ff
     ks = jax.random.split(key, 3)
-    p = {"w_up": proj_init(ks[0], d, ff, cfg),
-         "w_down": proj_init(ks[1], ff, d, cfg)}
     if cfg.gated:
-        p["w_gate"] = proj_init(ks[2], d, ff, cfg)
-    return p
+        w = jnp.concatenate([dense_init(ks[0], d, ff),
+                             dense_init(ks[2], d, ff)], axis=1)
+        return {"w_upgate": proj_from_weights(w, cfg),
+                "w_down": proj_init(ks[1], ff, d, cfg)}
+    return {"w_up": proj_init(ks[0], d, ff, cfg),
+            "w_down": proj_init(ks[1], ff, d, cfg)}
 
 
 def ffn(p: dict, x: Array, cfg: ModelConfig) -> Array:
     act = jax.nn.gelu if cfg.act == "gelu" else jax.nn.silu
-    up = project(p["w_up"], x, cfg)
-    if cfg.gated:
-        up = act(project(p["w_gate"], x, cfg)) * up
+    if "w_upgate" in p:
+        up, gate = jnp.split(project(p["w_upgate"], x, cfg), 2, axis=-1)
+        up = act(gate) * up
+    elif cfg.gated:
+        up = act(project(p["w_gate"], x, cfg)) * project(p["w_up"], x, cfg)
     else:
-        up = act(up)
+        up = act(project(p["w_up"], x, cfg))
     return project(p["w_down"], up, cfg)

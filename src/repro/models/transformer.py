@@ -40,10 +40,17 @@ def _remat(f):
     """Remat policy knob (perf iteration K1, EXPERIMENTS.md §Perf):
     REPRO_REMAT=dots saves matmul outputs instead of recomputing the whole
     block body — fewer replayed FLOPs *and* fewer replayed TP collectives
-    at the cost of activation memory."""
-    if os.environ.get("REPRO_REMAT", "full") == "dots":
-        pol = jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
-        return jax.checkpoint(f, policy=pol)
+    at the cost of activation memory.  REPRO_REMAT=none disables remat
+    entirely: the right call for smoke-scale models and CPU benchmarking,
+    where activation memory is free and the recompute chain only inflates
+    compile time and step latency (the analog sim chain especially — its
+    per-projection quantise/saturate/ADC ops all replay under remat)."""
+    pol = os.environ.get("REPRO_REMAT", "full")
+    if pol == "none":
+        return f
+    if pol == "dots":
+        return jax.checkpoint(
+            f, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
     return jax.checkpoint(f)
 
 
@@ -90,7 +97,8 @@ def moe_block(p: dict, x: Array, cfg: ModelConfig, positions, cache):
 
 def cross_block_init(key: Array, cfg: ModelConfig) -> dict:
     k1, k2 = jax.random.split(key)
-    return {"ln1": rmsnorm_init(cfg.d_model), "xattn": attn_init(k1, cfg),
+    return {"ln1": rmsnorm_init(cfg.d_model),
+            "xattn": attn_init(k1, cfg, fused=False),
             "ln2": rmsnorm_init(cfg.d_model), "ffn": ffn_init(k2, cfg),
             "gate_attn": jnp.zeros((), jnp.float32),
             "gate_ffn": jnp.zeros((), jnp.float32)}
@@ -259,7 +267,7 @@ def audio_init(key: Array, cfg: ModelConfig) -> dict:
         return {"ln1": rmsnorm_init(cfg.d_model),
                 "attn": attn_init(k1, cfg),
                 "lnx": rmsnorm_init(cfg.d_model),
-                "xattn": attn_init(k2, cfg),
+                "xattn": attn_init(k2, cfg, fused=False),
                 "ln2": rmsnorm_init(cfg.d_model),
                 "ffn": ffn_init(k3, cfg)}
 

@@ -4,16 +4,22 @@
 One ``AnalogTrainStep`` is the whole training rule, jitted and donated so
 it compiles exactly once and updates conductances in place:
 
-  1. zero *tapes* are injected next to every tiled-crossbar container
-     (``core.tiled_analog.with_tapes``) — the backward pass deposits the
-     quantised write-driver operands (x_q, d_q) there instead of a dense
-     (K, N) weight gradient,
+  1. the parameter tree is *split* (``core.tiled_analog.split_tapes``):
+     digital leaves plus per-container tape slots form the differentiated
+     tree, while every container's g/ref/w_scale is hoisted into frozen
+     (closure) position — the backward pass deposits the quantised
+     write-driver operands (x_q, d_q) in the tape cotangents and no dense
+     (K, N) weight gradient, not even a zeros fill, is ever formed,
   2. forward = VMM, backward = MVM through the same conductances
      (``models/layers.project`` dispatches on the container),
   3. every container's update is the paper's rank-k parallel write: the
-     tapes go straight into the fused Pallas kernel
-     ``kernels/xbar_update.xbar_outer_update`` (outer product + nonlinear /
+     tapes go straight into the *layer-batched* fused kernel
+     ``kernels/xbar_update.xbar_outer_update`` — one sweep over a
+     scan-stacked (L, K, N) container (outer product + nonlinear /
      asymmetric / stochastic device model, one HBM round-trip per tile),
+     with write noise generated in-kernel from one scalar seed per
+     container (``noise_mode="kernel"``; the legacy pre-generated field
+     path stays behind ``noise_mode="host"``),
   4. digital leaves (embeddings, norms, the logits head) take plain SGD —
      the paper keeps exactly these on the digital core.
 
@@ -31,10 +37,10 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.core.tiled_analog import (crossbar_from_model,
-                                     is_analog_container, with_tapes)
+                                     is_analog_container, merge_tapes,
+                                     split_tapes)
 from repro.hwmodel.arch_cost import train_step_cost
-from repro.kernels.ops import default_interpret
-from repro.kernels.xbar_update import xbar_outer_update
+from repro.kernels.xbar_update import _mix32, xbar_outer_update_inline
 from repro.models import model as M
 
 Array = jax.Array
@@ -55,19 +61,30 @@ class AnalogTrainStep:
     """Jitted, donated-buffer analog-SGD step: ``state, metrics = step(state,
     batch, key)``.  ``step.compiles`` counts tracings (must stay at 1);
     ``step.cost`` is the projected per-step hardware cost (available after
-    the first call, when the token count is known)."""
+    the first call, when the token count is known).
+
+    ``impl`` selects the update-kernel execution path ("pallas" |
+    "interpret" | "fused" | None = auto: Mosaic on TPU, the fused jnp twin
+    elsewhere); ``noise_mode`` selects in-kernel counter-PRNG write noise
+    ("kernel", the default) or the legacy host-generated field ("host").
+    """
 
     def __init__(self, cfg: ModelConfig, lr: float,
-                 interpret: Optional[bool] = None, bits: int = 8):
+                 interpret: Optional[bool] = None, bits: int = 8,
+                 impl: Optional[str] = None, noise_mode: str = "kernel"):
         if not cfg.analog_training:
             raise ValueError("cfg must have analog=True, "
                              "analog_mode='device'")
+        if noise_mode not in ("kernel", "host"):
+            raise ValueError("noise_mode must be 'kernel' or 'host'")
         self.cfg = cfg
         self.lr = lr
         self.bits = bits
         self.xcfg = crossbar_from_model(cfg)
-        self.interpret = default_interpret() if interpret is None \
-            else interpret
+        if impl is None and interpret is not None:
+            impl = "interpret" if interpret else "pallas"
+        self.impl = impl or "auto"
+        self.noise_mode = noise_mode
         self.cost: Optional[dict] = None
         self._step = jax.jit(self._step_impl, donate_argnums=(0,))
 
@@ -93,11 +110,19 @@ class AnalogTrainStep:
         params = state["params"]
         n_tokens = batch["tokens"].size  # static under jit
 
+        # Hoist g/ref/w_scale out of the differentiated arguments: the grads
+        # tree holds exactly the tape cotangents + digital gradients.
+        diff, frozen = split_tapes(params, n_tokens)
         (loss, metrics), grads = jax.value_and_grad(
-            M.loss_fn, has_aux=True)(with_tapes(params, n_tokens),
-                                     batch, cfg)
+            lambda d: M.loss_fn(merge_tapes(d, frozen), batch, cfg),
+            has_aux=True)(diff)
         rail = []
-        new_params = self._update(params, grads, key, (), rail)
+        # One threefry draw per step; per-container seeds come out of the
+        # same counter mix the kernel PRNG uses (keyed on the tree path).
+        seed_base = jax.random.bits(key, (), jnp.uint32) \
+            if self.xcfg.device.write_noise > 0.0 \
+            and self.noise_mode == "kernel" else None
+        new_params = self._update(params, grads, key, seed_base, (), rail)
         if not rail:
             # Families whose projections aren't crossbar-mapped yet (ssm /
             # moe experts) would otherwise train fully digitally while
@@ -112,23 +137,33 @@ class AnalogTrainStep:
         out["g_rail_frac"] = sum(rail) / len(rail)
         return {"params": new_params, "step": state["step"] + 1}, out
 
-    def _update(self, p, g, key, path, rail):
+    def _update(self, p, g, key, seed_base, path, rail):
         if is_analog_container(p):
-            return self._update_container(p, g, _path_key(key, path), rail)
+            return self._update_container(p, g, key, seed_base, path, rail)
         if isinstance(p, dict):
-            return {k: self._update(p[k], g[k], key, path + (k,), rail)
+            return {k: self._update(p[k], g[k], key, seed_base,
+                                    path + (k,), rail)
                     for k in p}
         return p - self.lr * g.astype(p.dtype)
 
-    def _update_container(self, p, g, key, rail):
-        gq, xq, dq = p["g"], g["x_tape"], g["d_tape"]
-        if gq.ndim == 2:
-            g_new = self._kernel_update(gq, xq, dq, p["w_scale"], key)
-        else:  # scan-stacked (L, K, N): one parallel write per layer
-            g_new = jnp.stack([
-                self._kernel_update(gq[i], xq[i], dq[i], p["w_scale"][i],
-                                    jax.random.fold_in(key, i))
-                for i in range(gq.shape[0])])
+    def _update_container(self, p, tapes, key, seed_base, path, rail):
+        """The paper's Fig. 3c parallel write, fused on the (L, tiles)
+        grid: one kernel sweep per container, scan-stacked or not."""
+        noise = seed = None
+        mode = "none"
+        if seed_base is not None:
+            mode = "kernel"
+            seed = _mix32(seed_base ^ jnp.uint32(
+                zlib.crc32("/".join(path).encode())))
+        elif self.xcfg.device.write_noise > 0.0:
+            mode = "host"
+            noise = jax.random.normal(_path_key(key, path), p["g"].shape,
+                                      dtype=jnp.float32)
+        scale = jnp.asarray(-self.lr, jnp.float32) \
+            * jnp.asarray(p["w_scale"], jnp.float32)
+        g_new = xbar_outer_update_inline(
+            p["g"], tapes["x_tape"], tapes["d_tape"], scale, self.xcfg,
+            noise=noise, seed=seed, noise_mode=mode, impl=self.impl)
         dev = self.xcfg.device
         span = dev.gmax - dev.gmin
         rail.append(jnp.mean(
@@ -136,18 +171,11 @@ class AnalogTrainStep:
             | (g_new >= dev.gmax - 1e-3 * span)).astype(jnp.float32))
         return {**p, "g": g_new}
 
-    def _kernel_update(self, g, x_q, d_q, w_scale, key):
-        """The paper's Fig. 3c parallel write, fused on the tile grid."""
-        noise = None
-        if self.xcfg.device.write_noise > 0.0:
-            noise = jax.random.normal(key, g.shape, dtype=jnp.float32)
-        scale = jnp.asarray(-self.lr, jnp.float32) * w_scale
-        return xbar_outer_update(g, x_q, d_q, scale, self.xcfg,
-                                 noise=noise, interpret=self.interpret)
-
 
 def make_analog_sgd_step(cfg: ModelConfig, lr: float,
                          interpret: Optional[bool] = None,
-                         bits: int = 8) -> AnalogTrainStep:
+                         bits: int = 8, impl: Optional[str] = None,
+                         noise_mode: str = "kernel") -> AnalogTrainStep:
     """The analog-SGD training step for a device-mode transformer config."""
-    return AnalogTrainStep(cfg, lr, interpret=interpret, bits=bits)
+    return AnalogTrainStep(cfg, lr, interpret=interpret, bits=bits,
+                           impl=impl, noise_mode=noise_mode)

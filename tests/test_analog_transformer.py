@@ -114,7 +114,7 @@ def test_update_routes_through_kernel_device_model():
         sub = params["layers"][name]
         gsub = grads["layers"][name]
         nsub = new_state["params"]["layers"][name]
-        leaf = "wq" if name == "attn" else "w_up"
+        leaf = "wqkv" if name == "attn" else "w_upgate"
         for layer in range(sub[leaf]["g"].shape[0]):
             p, g, n = sub[leaf], gsub[leaf], nsub[leaf]
             dw = jnp.einsum("bk,bn->kn", g["x_tape"][layer],
@@ -149,7 +149,7 @@ def test_train_step_compiles_once_and_learns():
     assert np.mean(losses[-5:]) < losses[0] - 0.3
     # conductances stay inside the physical window
     dev = crossbar_from_model(cfg).device
-    g = state["params"]["layers"]["attn"]["wq"]["g"]
+    g = state["params"]["layers"]["attn"]["wqkv"]["g"]
     assert float(g.min()) >= dev.gmin and float(g.max()) <= dev.gmax
     assert 0.0 <= float(mets["g_rail_frac"]) < 0.5
     # per-step hardware roll-up is attached and ordered sensibly
@@ -167,7 +167,7 @@ def test_stochastic_device_requires_and_uses_key():
         state = init_state(jax.random.PRNGKey(0), cfg)
         step = make_analog_sgd_step(cfg, lr=0.05)
         new, _ = step(state, batch, key)
-        return new["params"]["layers"]["ffn"]["w_up"]["g"]
+        return new["params"]["layers"]["ffn"]["w_upgate"]["g"]
 
     a = one(jax.random.PRNGKey(3))
     b = one(jax.random.PRNGKey(3))

@@ -1,0 +1,267 @@
+"""The fused analog update path: layer-batched kernel equivalence,
+hoisted symbolic-zero tapes, and the in-kernel counter PRNG."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import (LINEARIZED, TAOX, AdcConfig, CrossbarConfig,
+                        weights_to_conductance)
+from repro.core.tiled_analog import (is_analog_container, merge_tapes,
+                                     split_tapes, with_tapes)
+from repro.core.xbar_ops import quantize_update_operands
+from repro.data.synthetic import batch_tokens, make_token_stream
+from repro.kernels.xbar_update import field_normals, xbar_outer_update
+from repro.models import model as M
+from repro.train.analog_lm import init_state, make_analog_sgd_step
+
+TAOX_NN = TAOX.replace(write_noise=0.0)
+
+
+def _stacked(lyr=3, k=40, n=24, b=6, rows=16, cols=16, device=TAOX_NN,
+             seed=0):
+    cfg = CrossbarConfig(rows=rows, cols=cols, device=device,
+                         adc=AdcConfig())
+    keys = jax.random.split(jax.random.PRNGKey(seed), 4)
+    w = jax.random.normal(keys[0], (lyr, k, n)) / np.sqrt(k)
+    g, ws = jax.vmap(lambda wl: weights_to_conductance(wl, cfg))(w)
+    x = jax.random.normal(keys[1], (lyr, b, k))
+    d = jax.random.normal(keys[2], (lyr, b, n)) * 0.2
+    x_q, d_q = jax.vmap(lambda xl, dl: quantize_update_operands(
+        xl, dl, cfg))(x, d)
+    scale = -0.05 * ws
+    return cfg, g, x_q, d_q, scale
+
+
+def _cfg(**kw):
+    base = dict(dtype="float32", analog=True, analog_mode="device",
+                analog_device="taox-nonoise", analog_rows=64,
+                analog_cols=64, analog_in_bits=8, analog_out_bits=8)
+    base.update(kw)
+    return get_config("lm100m", smoke=True).replace(**base)
+
+
+def _batch(cfg, b=4, s=16, seed=0):
+    rng = np.random.default_rng(seed)
+    return {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (b, s)),
+                                  jnp.int32),
+            "labels": jnp.asarray(rng.integers(0, cfg.vocab, (b, s)),
+                                  jnp.int32)}
+
+
+# ----------------------------------------------------- layer-batched kernel
+
+@pytest.mark.parametrize("impl", ["fused", "interpret"])
+def test_batched_update_matches_per_layer_loop(impl):
+    """One (L, K, N) sweep must equal L independent 2-D updates."""
+    cfg, g, x_q, d_q, scale = _stacked()
+    batched = xbar_outer_update(g, x_q, d_q, scale, cfg, impl=impl)
+    looped = jnp.stack([
+        xbar_outer_update(g[i], x_q[i], d_q[i], scale[i], cfg, impl=impl)
+        for i in range(g.shape[0])])
+    np.testing.assert_allclose(np.asarray(batched), np.asarray(looped),
+                               rtol=1e-6, atol=1e-7)
+
+
+def test_batched_update_host_noise_matches_per_layer_loop():
+    """Host-field mode: the batched sweep consumes the stacked field the
+    same way the per-layer loop consumes its slices."""
+    cfg, g, x_q, d_q, scale = _stacked(device=TAOX)
+    noise = jax.random.normal(jax.random.PRNGKey(9), g.shape,
+                              dtype=jnp.float32)
+    batched = xbar_outer_update(g, x_q, d_q, scale, cfg, noise=noise,
+                                noise_mode="host", impl="fused")
+    looped = jnp.stack([
+        xbar_outer_update(g[i], x_q[i], d_q[i], scale[i], cfg,
+                          noise=noise[i], noise_mode="host", impl="fused")
+        for i in range(g.shape[0])])
+    np.testing.assert_allclose(np.asarray(batched), np.asarray(looped),
+                               rtol=1e-6, atol=1e-7)
+
+
+def test_fused_impl_matches_interpret_kernel_with_in_kernel_noise():
+    """The jnp twin and the Pallas kernel generate bit-identical noise from
+    the same seed, so their updates agree to float tolerance."""
+    cfg, g, x_q, d_q, scale = _stacked(device=TAOX)
+    seed = jnp.uint32(1234)
+    a = xbar_outer_update(g, x_q, d_q, scale, cfg, seed=seed,
+                          noise_mode="kernel", impl="fused")
+    b = xbar_outer_update(g, x_q, d_q, scale, cfg, seed=seed,
+                          noise_mode="kernel", impl="interpret")
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=1e-5, atol=1e-6)
+
+
+# ------------------------------------------------------------ in-kernel PRNG
+
+def test_in_kernel_prng_reproducible_and_seed_sensitive():
+    cfg, g, x_q, d_q, scale = _stacked(device=TAOX)
+    upd = lambda s: xbar_outer_update(g, x_q, d_q, scale, cfg,
+                                      seed=jnp.uint32(s),
+                                      noise_mode="kernel", impl="fused")
+    np.testing.assert_array_equal(np.asarray(upd(7)), np.asarray(upd(7)))
+    assert float(jnp.max(jnp.abs(upd(7) - upd(8)))) > 0.0
+
+
+def test_in_kernel_prng_distribution_sanity():
+    """The counter PRNG's normals: correct moments and tails, no adjacent
+    correlation, decorrelated across layers and tiles."""
+    cfg = CrossbarConfig(rows=64, cols=64, device=TAOX, adc=AdcConfig())
+    z = np.asarray(field_normals(jnp.uint32(42), (2, 256, 256), cfg))
+    flat = z.ravel()
+    assert abs(flat.mean()) < 0.01
+    assert abs(flat.std() - 1.0) < 0.01
+    assert abs((np.abs(flat) > 1.96).mean() - 0.05) < 0.005
+    assert abs(np.corrcoef(flat[:-1], flat[1:])[0, 1]) < 0.01
+    assert abs(np.corrcoef(z[0].ravel(), z[1].ravel())[0, 1]) < 0.01
+
+
+def test_in_kernel_noise_statistics_match_device_model():
+    """With a linearized device, (g_new - g - dg_req) / sigma over all
+    cells must be standard normal — same law the host-field path obeys."""
+    dev = LINEARIZED  # dg = dg_req + sigma * noise, no state dependence
+    cfg, g, x_q, d_q, scale = _stacked(lyr=2, k=128, n=128, b=4,
+                                       rows=64, cols=64, device=dev)
+    scale = 0.02 * jnp.ones_like(scale)  # small: no rail clipping
+    g = 0.5 * jnp.ones_like(g)           # mid-window
+    g_new = xbar_outer_update(g, x_q, d_q, scale, cfg,
+                              seed=jnp.uint32(3), noise_mode="kernel",
+                              impl="fused")
+    dg_req = scale[:, None, None] * jnp.einsum("lbk,lbn->lkn", x_q, d_q)
+    sigma = dev.write_noise * dev.pulse_dg * jnp.sqrt(
+        jnp.abs(dg_req) / dev.pulse_dg)
+    zed = np.asarray((g_new - g - dg_req))[np.asarray(sigma) > 1e-9]
+    zed = zed / np.asarray(sigma)[np.asarray(sigma) > 1e-9]
+    assert abs(zed.mean()) < 0.02
+    assert abs(zed.std() - 1.0) < 0.02
+
+
+# --------------------------------------------------- hoisted symbolic tapes
+
+def test_split_merge_roundtrip():
+    cfg = _cfg()
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    diff, frozen = split_tapes(params, 8)
+    merged = merge_tapes(diff, frozen)
+    ref = with_tapes(params, 8)
+    assert jax.tree_util.tree_structure(merged) \
+        == jax.tree_util.tree_structure(ref)
+    for a, b in zip(jax.tree_util.tree_leaves(merged),
+                    jax.tree_util.tree_leaves(ref)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_hoisted_grads_carry_only_tapes_for_containers():
+    """The grads tree of the hoisted loss must hold exactly the tape
+    cotangents for analog containers — no g/ref/w_scale leaves at all."""
+    cfg = _cfg()
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    batch = _batch(cfg)
+    n_tokens = batch["tokens"].size
+    diff, frozen = split_tapes(params, n_tokens)
+    (_, _), grads = jax.value_and_grad(
+        lambda d: M.loss_fn(merge_tapes(d, frozen), batch, cfg),
+        has_aux=True)(diff)
+
+    def walk(p, g):
+        if is_analog_container(p):
+            assert set(g) == {"x_tape", "d_tape"}
+        elif isinstance(p, dict):
+            for k in p:
+                walk(p[k], g[k])
+    walk(params, grads)
+
+
+def test_hoisted_grads_match_with_tapes_reference():
+    """Hoisting g/ref/w_scale out of the differentiated tree changes what
+    cotangents exist, not their values: tapes and digital grads must be
+    identical to the legacy with_tapes gradient."""
+    cfg = _cfg()
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    batch = _batch(cfg)
+    n_tokens = batch["tokens"].size
+
+    diff, frozen = split_tapes(params, n_tokens)
+    (loss_h, _), grads_h = jax.value_and_grad(
+        lambda d: M.loss_fn(merge_tapes(d, frozen), batch, cfg),
+        has_aux=True)(diff)
+    (loss_r, _), grads_r = jax.value_and_grad(
+        M.loss_fn, has_aux=True)(with_tapes(params, n_tokens), batch, cfg)
+
+    np.testing.assert_allclose(float(loss_h), float(loss_r), rtol=1e-6)
+
+    def walk(gh, gr):
+        if isinstance(gh, dict) and "x_tape" in gh:
+            np.testing.assert_allclose(np.asarray(gh["x_tape"]),
+                                       np.asarray(gr["x_tape"]),
+                                       rtol=1e-6, atol=1e-7)
+            np.testing.assert_allclose(np.asarray(gh["d_tape"]),
+                                       np.asarray(gr["d_tape"]),
+                                       rtol=1e-6, atol=1e-7)
+        elif isinstance(gh, dict):
+            for k in gh:
+                walk(gh[k], gr[k])
+        else:
+            np.testing.assert_allclose(np.asarray(gh), np.asarray(gr),
+                                       rtol=1e-6, atol=1e-7)
+    walk(grads_h, grads_r)
+
+
+# ----------------------------------------------------- refactored train step
+
+def test_step_impl_paths_agree():
+    """The fused host path and the Pallas interpreter produce the same
+    trained conductances for a noiseless device."""
+    cfg = _cfg()
+    batch = _batch(cfg)
+
+    def one(impl):
+        state = init_state(jax.random.PRNGKey(0), cfg)
+        step = make_analog_sgd_step(cfg, lr=0.05, impl=impl)
+        new, _ = step(state, batch, jax.random.PRNGKey(5))
+        return new["params"]["layers"]["ffn"]["w_upgate"]["g"]
+
+    np.testing.assert_allclose(np.asarray(one("fused")),
+                               np.asarray(one("interpret")),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_step_noise_modes_reproduce_per_seed():
+    """kernel-mode noise: same step key reproduces, different keys diverge;
+    host mode still works behind the flag."""
+    cfg = _cfg(analog_device="taox")
+    batch = _batch(cfg)
+
+    def one(key, noise_mode):
+        state = init_state(jax.random.PRNGKey(0), cfg)
+        step = make_analog_sgd_step(cfg, lr=0.05, noise_mode=noise_mode)
+        new, _ = step(state, batch, key)
+        return new["params"]["layers"]["ffn"]["w_upgate"]["g"]
+
+    a = one(jax.random.PRNGKey(3), "kernel")
+    b = one(jax.random.PRNGKey(3), "kernel")
+    c = one(jax.random.PRNGKey(4), "kernel")
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert float(jnp.max(jnp.abs(a - c))) > 0.0
+    h = one(jax.random.PRNGKey(3), "host")
+    assert h.shape == a.shape and bool(jnp.all(jnp.isfinite(h)))
+
+
+def test_refactored_step_compiles_once_and_learns():
+    """No-retrace guard on the hoisted/split step + loss decreases."""
+    cfg = _cfg()
+    state = init_state(jax.random.PRNGKey(0), cfg)
+    step = make_analog_sgd_step(cfg, lr=0.1)
+    stream = make_token_stream(50_000, cfg.vocab, seed=0)
+    key = jax.random.PRNGKey(1)
+    losses = []
+    for i in range(15):
+        x, y = batch_tokens(stream, 8, 16, i)
+        key, ks = jax.random.split(key)
+        state, mets = step(state, {"tokens": jnp.asarray(x),
+                                   "labels": jnp.asarray(y)}, ks)
+        losses.append(float(mets["loss"]))
+    assert step.compiles == 1
+    assert np.isfinite(losses).all()
+    assert np.mean(losses[-5:]) < losses[0]
