@@ -10,17 +10,52 @@ Trains the same small LM twice from identical initial weights:
 Emits ``BENCH_analog_train.json`` with both loss curves, the projected
 per-step energy / pJ-per-MAC on the analog, digital-ReRAM and SRAM cores
 (hwmodel/arch_cost.train_step_cost), an ideal-device/high-bit forward
-parity check against the digital model, and the compile count of the
-jitted step (must be 1).
+parity check against the digital model, the compile count of the jitted
+step (must be 1), and warm-step throughput (tok/s + simulated GMAC/s).
 
-    PYTHONPATH=src python benchmarks/analog_train_bench.py --smoke
+``--mesh DxM`` runs the analog side sharded over a DATAxMODEL device mesh
+(docs/analog_pipeline.md §Sharding); on a CPU host the benchmark sets the
+host-platform device-count flag for you, so
+
+    PYTHONPATH=src python benchmarks/analog_train_bench.py --smoke --mesh 2x4
+
+simulates 8 devices in one process.  The sharded run is bit-identical to
+``--mesh 1x1`` by construction — the interesting outputs are the
+throughput rows and the per-shard cost roll-up under ``cost["mesh"]``.
 """
 from __future__ import annotations
 
 import argparse
 import json
 import os
+import sys
 import time
+
+
+def _pre_init_mesh_flag(argv=None):
+    """``--mesh`` needs the host device count set BEFORE jax initialises;
+    peek at argv and extend XLA_FLAGS when the platform has no real
+    multi-device backend configured."""
+    argv = argv if argv is not None else sys.argv[1:]
+    for i, a in enumerate(argv):
+        mesh = None
+        if a == "--mesh" and i + 1 < len(argv):
+            mesh = argv[i + 1]
+        elif a.startswith("--mesh="):
+            mesh = a.split("=", 1)[1]
+        if not mesh:
+            continue
+        n = 1
+        for f in mesh.split("x"):
+            n *= int(f)
+        flags = os.environ.get("XLA_FLAGS", "")
+        if n > 1 and "xla_force_host_platform_device_count" not in flags:
+            os.environ["XLA_FLAGS"] = (
+                flags + f" --xla_force_host_platform_device_count={n}"
+            ).strip()
+
+
+_pre_init_mesh_flag()
 
 import jax
 import jax.numpy as jnp
@@ -44,23 +79,53 @@ def bench_config(args):
         # Small enough for CPU, big enough that the FFN spans several
         # physical tiles (the per-tile ADC boundary is the point).
         kw.update(analog_rows=64, analog_cols=64)
+    if args.tile:
+        # Explicit tile geometry — the --mesh scaling runs use 16x16 so
+        # the smoke model's 64-wide projections split across shards
+        # instead of degrading to replication.
+        kw.update(analog_rows=args.tile, analog_cols=args.tile)
     return base.replace(**kw)
 
 
-def run_analog(cfg, stream, args):
+def sim_gmacs_per_step(cfg, n_tokens: int) -> float:
+    """Simulated crossbar GMACs of one training step: VMM + MVM + OPU per
+    projection (3 passes over the weight-stationary MACs)."""
+    from repro.hwmodel.arch_cost import model_projections
+    macs = sum(p.k * p.n * p.count * p.active
+               for p in model_projections(cfg))
+    return 3.0 * macs * n_tokens / 1e9
+
+
+def run_analog(cfg, stream, args, mesh=None):
     state = init_state(jax.random.PRNGKey(args.seed), cfg)
-    step = make_analog_sgd_step(cfg, lr=args.lr)
+    step = make_analog_sgd_step(cfg, lr=args.lr, mesh=mesh)
+    if mesh is not None:
+        state = step.shard_state(state)
     key = jax.random.PRNGKey(args.seed + 1)
     losses, t0 = [], time.perf_counter()
+    t_warm = None
     for i in range(args.steps):
         x, y = batch_tokens(stream, args.batch, args.seq, i)
         key, ks = jax.random.split(key)
         state, mets = step(state, {"tokens": jnp.asarray(x),
                                    "labels": jnp.asarray(y)}, ks)
         losses.append(float(mets["loss"]))
-    return {"loss": losses, "wall_s": time.perf_counter() - t0,
+        if i == 0:
+            t_warm = time.perf_counter()  # compile + first step done
+    wall = time.perf_counter() - t0
+    tok_step = args.batch * args.seq
+    if args.steps >= 2:
+        # warm throughput: exclude compile + first step
+        warm_wall = max(time.perf_counter() - t_warm, 1e-9)
+        warm_steps = args.steps - 1
+    else:  # a single step has no warm window; report whole-run rates
+        warm_wall, warm_steps = max(wall, 1e-9), args.steps
+    return {"loss": losses, "wall_s": wall,
             "compiles": step.compiles, "cost": step.cost,
-            "g_rail_frac": float(mets["g_rail_frac"])}
+            "g_rail_frac": float(mets["g_rail_frac"]),
+            "tok_per_s": warm_steps * tok_step / warm_wall,
+            "sim_gmacs_per_s": warm_steps
+            * sim_gmacs_per_step(cfg, tok_step) / warm_wall}
 
 
 def run_numeric(cfg, stream, args):
@@ -112,8 +177,16 @@ def main(argv=None):
     ap.add_argument("--device", default="taox-nonoise",
                     help="ideal | taox | taox-nonoise | linearized")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--mesh", default="1x1",
+                    help="DATAxMODEL mesh for the sharded analog step, "
+                         "e.g. 2x4 (CPU hosts get the device-count flag "
+                         "set automatically)")
+    ap.add_argument("--tile", type=int, default=0,
+                    help="square physical tile size override "
+                         "(0 = arch default / smoke 64)")
     ap.add_argument("--out", default="BENCH_analog_train.json")
     args = ap.parse_args(argv)
+    _pre_init_mesh_flag(argv)  # no-op unless argv was passed explicitly
     # Smoke-scale models don't need activation remat; it only inflates
     # compile time and recompute for BOTH runs (models/transformer._remat).
     # Respect an explicit REPRO_REMAT from the caller.
@@ -130,15 +203,24 @@ def main(argv=None):
         max(200_000, args.steps * args.batch * (args.seq + 1) + 1),
         cfg.vocab, seed=args.seed)
 
-    analog = run_analog(cfg, stream, args)
+    d, m = (int(x) for x in args.mesh.split("x"))
+    mesh = None
+    if d * m > 1:
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh((d, m), ("data", "model"))
+
+    analog = run_analog(cfg, stream, args, mesh=mesh)
     numeric = run_numeric(cfg, stream, args)
     parity = parity_check(cfg, args)
 
     result = {
         "arch": cfg.name, "smoke": args.smoke, "device": args.device,
         "remat": os.environ.get("REPRO_REMAT", "full"),
+        "mesh": args.mesh, "devices": d * m,
         "bits": args.bits, "steps": args.steps,
         "batch": args.batch, "seq": args.seq, "lr": args.lr,
+        "tok_per_s": analog["tok_per_s"],
+        "sim_gmacs_per_s": analog["sim_gmacs_per_s"],
         "analog_loss": analog["loss"],
         "numeric_loss": numeric["loss"],
         "analog_wall_s": analog["wall_s"],
@@ -152,9 +234,11 @@ def main(argv=None):
     with open(args.out, "w") as f:
         json.dump(result, f, indent=1)
 
-    print(f"analog[{args.device}/{args.bits}b]: "
+    print(f"analog[{args.device}/{args.bits}b, mesh {args.mesh}]: "
           f"loss {analog['loss'][0]:.3f} -> {analog['loss'][-1]:.3f} "
-          f"({analog['wall_s']:.1f}s, compiles={analog['compiles']})")
+          f"({analog['wall_s']:.1f}s, compiles={analog['compiles']}, "
+          f"{analog['tok_per_s']:.0f} tok/s, "
+          f"{analog['sim_gmacs_per_s']:.2f} sim-GMAC/s)")
     print(f"numeric:          loss {numeric['loss'][0]:.3f} -> "
           f"{numeric['loss'][-1]:.3f} ({numeric['wall_s']:.1f}s)")
     pj = analog["cost"]["pj_per_mac"]

@@ -29,9 +29,24 @@ import sys
 
 
 def load_rows(path: str) -> dict:
+    """Rows by name; malformed entries are skipped with a notice instead
+    of raising (a bench that failed to emit a row must not crash the gate
+    with a KeyError — the row simply doesn't take part in the comparison,
+    like a retired/new row)."""
     with open(path) as f:
         data = json.load(f)
-    return {r["name"]: r for r in data["rows"]}
+    rows = {}
+    for r in data.get("rows", []):
+        name = r.get("name")
+        if name is None or not isinstance(r.get("us_per_call"),
+                                          (int, float)) \
+                or r["us_per_call"] <= 0:
+            print(f"bench gate: malformed row skipped in {path}: {r!r}")
+            continue
+        rows[name] = r
+    if not data.get("rows"):
+        print(f"bench gate: no 'rows' array in {path}")
+    return rows
 
 
 def main(argv=None) -> int:

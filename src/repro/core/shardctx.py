@@ -1,0 +1,64 @@
+"""Process-wide sharding context shared by model code and the crossbar sim.
+
+``models/layers.py`` historically owned the activation-sharding context
+(mesh + data-parallel axes) used to re-constrain activations at block
+boundaries.  Device-mode analog training needs the same context one layer
+lower — ``core/xbar_ops._tiled_read`` must know whether a mesh is active to
+pin its cross-tile digital accumulation to a shard-invariant order — and
+``core`` must not import ``models`` or ``launch``.  The context therefore
+lives here; ``models/layers.set_shard_context`` delegates to it.
+
+Determinism contract (see docs/analog_pipeline.md §Sharding):
+
+The sharded analog step is required to produce *bit-identical* conductances
+to the single-device step.  Every floating-point reduction therefore either
+(a) runs over unsharded dims only (the within-tile analog integration, the
+batch/token outer-product contraction, all loss/metric math over replicated
+activations), or (b) is preceded by :func:`replicate_for_exact_reduce`,
+which all-gathers the per-tile partial sums — an exact, arithmetic-free
+collective — so the reduction itself executes replicated, over the full
+axis, in the same order as on one device.  No partial-sum + all-reduce
+(whose association depends on the mesh) is ever emitted on the analog path.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+
+_CTX: dict = {"mesh": None, "dp": None, "tp": None}
+
+
+def set_shard_context(mesh, dp_axes, tp_axis: str = "model") -> None:
+    """Install the active mesh.  ``dp_axes`` may be ``None`` for layouts
+    that keep the batch replicated (the sharded analog step)."""
+    _CTX.update(mesh=mesh, dp=dp_axes, tp=tp_axis)
+
+
+def clear_shard_context() -> None:
+    _CTX.update(mesh=None, dp=None, tp=None)
+
+
+def get_shard_context() -> Tuple[Optional[object], Optional[object], object]:
+    return _CTX["mesh"], _CTX["dp"], _CTX["tp"]
+
+
+def current_mesh():
+    return _CTX["mesh"]
+
+
+def replicate_for_exact_reduce(x: jax.Array) -> jax.Array:
+    """Constrain ``x`` to full replication before a cross-shard reduction.
+
+    A reduction over a sharded axis lowers to partial sums + an all-reduce
+    whose association depends on the mesh shape, so its float result can
+    differ from the single-device reduction in the last bits.  Forcing the
+    *operand* replicated turns the only cross-device traffic into an
+    all-gather (bitwise exact); the reduction then runs locally over the
+    full axis in single-device order.  No-op when no mesh is installed.
+    """
+    mesh = _CTX["mesh"]
+    if mesh is None:
+        return x
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P()))

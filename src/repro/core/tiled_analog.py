@@ -32,6 +32,14 @@ exactly the tapes plus the digital gradients, and the analog optimizer
 hands the tapes straight to the fused Pallas kernel
 ``kernels/xbar_update.py`` — the (K, N) gradient never exists in HBM; on
 the hardware it never exists at all.
+
+Sharding: on a device mesh the containers split at whole-tile granularity
+(row-tiles over the FSDP axes, column-tiles over ``model`` —
+``launch/sharding.analog_container_pspec``) and the tapes follow their
+container's split, so each shard's rank-k write consumes only the tape
+slices it owns.  The sharded train step is bit-identical to the
+single-device step; the full pipeline narrative, including the
+determinism contract, is in docs/analog_pipeline.md.
 """
 from __future__ import annotations
 

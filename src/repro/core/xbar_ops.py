@@ -27,6 +27,7 @@ import jax.numpy as jnp
 from .adc import AdcConfig, adc_quantize, integrator_saturation, quantize_input
 from .crossbar import CrossbarConfig, pad_to_tiles
 from .device import DeviceConfig, apply_update
+from .shardctx import replicate_for_exact_reduce
 
 Array = jax.Array
 
@@ -71,7 +72,15 @@ def _tiled_read(x_int: Array, diff: Array, cfg: CrossbarConfig,
                                    g_max=cfg.device.gmax,
                                    reduce_axes=(0, 3))
     q = adc_quantize(q, sat, cfg.adc)
-    # Digital accumulation across reduction tiles.
+    # Digital accumulation across reduction tiles.  Under a sharded mesh
+    # the reduction-tile axis may be sharded (row-tiles of the container);
+    # summing it as partial-sum + all-reduce would associate differently
+    # per mesh shape, so the sharded analog step's bit-exact contract pins
+    # the accumulation order: gather the per-tile ADC outputs (exact, no
+    # arithmetic) and reduce locally over the full axis in single-device
+    # order.  The ADC boundary is the determinism boundary — everything
+    # before it is tile-local.  No-op when no mesh context is installed.
+    q = replicate_for_exact_reduce(q)
     return q.sum(axis=1).reshape(b, np_)
 
 
@@ -87,7 +96,15 @@ def vmm(x: Array, g: Array, g_ref: Array, w_scale: Array,
     g = _read_conductance(g, cfg, key)
     diff = pad_to_tiles(g - g_ref, cfg.rows, cfg.cols)
     q = _tiled_read(x_int, diff, cfg, transpose=False)[:, : g.shape[1]]
-    return (q * (x_scale / w_scale)).astype(in_dtype)
+    # Pin the read output replicated (no-op without a mesh context): the
+    # conductances are the only sharded operands of the analog step, so
+    # pinning every array read/write boundary keeps the whole digital
+    # interior (attention, norms, loss) replicated — GSPMD propagation in
+    # a larger graph is otherwise free to carry the tile sharding into
+    # downstream contractions, where a cross-shard reduction would break
+    # the bit-exact contract.
+    return replicate_for_exact_reduce(
+        (q * (x_scale / w_scale)).astype(in_dtype))
 
 
 def mvm(d: Array, g: Array, g_ref: Array, w_scale: Array,
@@ -99,7 +116,10 @@ def mvm(d: Array, g: Array, g_ref: Array, w_scale: Array,
     g = _read_conductance(g, cfg, key)
     diff = pad_to_tiles(g - g_ref, cfg.rows, cfg.cols)
     q = _tiled_read(d_int, diff, cfg, transpose=True)[:, : g.shape[0]]
-    return (q * (d_scale / w_scale)).astype(in_dtype)
+    # Same boundary pin as vmm — the MVM cotangent re-enters the
+    # (replicated) digital backward.
+    return replicate_for_exact_reduce(
+        (q * (d_scale / w_scale)).astype(in_dtype))
 
 
 def quantize_update_operands(

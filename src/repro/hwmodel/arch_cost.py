@@ -225,7 +225,8 @@ def report(cfgs: List[ModelConfig], bits: int = 8) -> List[ArchCost]:
 
 
 def train_step_cost(cfg: ModelConfig, n_tokens: int, bits: int = 8,
-                    ctx_len: Optional[int] = None) -> Dict[str, object]:
+                    ctx_len: Optional[int] = None,
+                    n_shards: int = 1) -> Dict[str, object]:
     """Projected hardware cost of ONE training step of ``n_tokens`` tokens.
 
     Joins the model's layer shapes with the paper's per-kernel numbers so a
@@ -238,8 +239,17 @@ def train_step_cost(cfg: ModelConfig, n_tokens: int, bits: int = 8,
     3x the inference MACs (forward + activation-grad + weight-grad); the
     analog step charges VMM + MVM + OPU per projection, the same 3-pass
     count realised in-array.
+
+    ``n_shards`` > 1 adds a per-shard -> whole-array roll-up under the
+    ``"mesh"`` key for sharded analog training (PANTHER-style inter-tile
+    parallelism): total energy is mesh-invariant (the same writes happen,
+    just on different owners) while tiles/area/energy divide across
+    shards.  Latency does not: the model already assumes all tiles of a
+    projection fire in parallel in-array, so ``t_step_us`` is
+    mesh-invariant and the mesh dict carries no latency entry.
     """
     ctx_len = ctx_len or 4096
+    n_shards = max(1, int(n_shards))
     ac = analyze_arch(cfg, bits=bits, ctx_len=ctx_len)
     macs = sum(p.k * p.n * p.count * p.active
                for p in model_projections(cfg))
@@ -254,7 +264,7 @@ def train_step_cost(cfg: ModelConfig, n_tokens: int, bits: int = 8,
     lat = AnalogCore(bits=bits).latency
     t_token = (lat["vmm"] + lat["mvm"] + lat["opu"]) \
         * sum(p.count * p.active for p in model_projections(cfg))
-    return {
+    out = {
         "n_tokens": n_tokens,
         "bits": bits,
         "tile_geometry": f"{TABLE_I.rows}x{TABLE_I.cols} (paper Table I)",
@@ -269,3 +279,17 @@ def train_step_cost(cfg: ModelConfig, n_tokens: int, bits: int = 8,
         "t_step_us": t_token * n_tokens * 1e6,  # serial layer pipeline
         "digital_mac_frac": ac.digital_mac_frac,
     }
+    if n_shards > 1:
+        out["mesh"] = {
+            "n_shards": n_shards,
+            "tiles_per_shard": math.ceil(ac.tiles / n_shards),
+            "area_mm2_per_shard": ac.area_mm2 / n_shards,
+            "e_step_per_shard_uj": {k: v / n_shards
+                                    for k, v in e_uj.items()},
+            # No latency entry: the latency model already assumes every
+            # tile of a projection fires in parallel (the paper's
+            # O(1)-in-array-size claim), so splitting those tiles across
+            # shards does not shorten the serial layer pipeline —
+            # t_step_us above is mesh-invariant.
+        }
+    return out

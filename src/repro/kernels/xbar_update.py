@@ -37,6 +37,30 @@ Three modes (``noise_mode``):
   exactly for a given ``jax.random`` key (the kernel-vs-reference
   equivalence tests depend on it).
 
+Switch matrix (every ``impl`` x ``noise_mode`` pair is valid):
+
+    impl \\ noise_mode   "none"        "kernel"            "host"
+    "pallas"            Mosaic        Mosaic + ctr PRNG   Mosaic + field
+    "interpret"         oracle        oracle + ctr PRNG   oracle + field
+    "fused"             jnp twin      jnp + field_normals jnp + field
+
+All nine cells produce bit-identical conductances for the same operands
+(and, for "kernel", the same scalar seed) — the PRNG is plain uint32/f32
+arithmetic with no carried state, so the backend cannot reorder it.
+
+Sharding
+--------
+:func:`xbar_sharded_update` runs the same layer-batched update under
+``shard_map`` on a device mesh: each shard owns whole ``rows x cols``
+tiles of the container (specs from
+``launch/sharding.analog_update_specs``), the token contraction of the
+outer product stays shard-local (tapes ride in pre-sliced), and the
+counter PRNG is made *shard-invariant* by offsetting the (layer, tile)
+counters with the shard's global base tile coordinates
+(``tile_offsets``).  One seed therefore produces bit-identical
+conductances on a 1-device and an N-device mesh — the acceptance contract
+of the sharded analog train step (tests/test_sharded_analog.py).
+
 Execution paths (``impl``)
 --------------------------
 ``"pallas"`` compiles the kernel with Mosaic (TPU), ``"interpret"`` runs it
@@ -56,6 +80,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
+from jax.sharding import PartitionSpec as P
 
 from repro.core.crossbar import CrossbarConfig
 from repro.core.device import DeviceConfig
@@ -131,16 +156,24 @@ def _tile_normals(seed: Array, rows: int, cols: int) -> Array:
     return z0
 
 
-def field_normals(seed, shape, cfg: CrossbarConfig) -> Array:
+def field_normals(seed, shape, cfg: CrossbarConfig,
+                  tile_offsets=(0, 0, 0)) -> Array:
     """(L, K, N) standard-normal field, bit-identical to what the kernel
     epilogue generates per (layer, tile).  Used by the fused jnp path and by
-    the distribution/reproducibility tests; never needed on TPU."""
+    the distribution/reproducibility tests; never needed on TPU.
+
+    ``tile_offsets`` = (layer, row-tile, col-tile) base coordinates of this
+    block in a larger (sharded) container: a shard holding tiles
+    ``[k0:k0+tk, n0:n0+tn]`` of layer ``l0`` passes ``(l0, k0, n0)`` and
+    gets exactly the corresponding slice of the global field, making the
+    noise invariant to how the container is sharded."""
     lyr, k, n = shape
     rows, cols = cfg.rows, cfg.cols
     tk, tn = -(-k // rows), -(-n // cols)
-    li = jax.lax.broadcasted_iota(jnp.uint32, (lyr, tk, tn), 0)
-    ki = jax.lax.broadcasted_iota(jnp.uint32, (lyr, tk, tn), 1)
-    ni = jax.lax.broadcasted_iota(jnp.uint32, (lyr, tk, tn), 2)
+    l0, k0, n0 = (_u32(o) for o in tile_offsets)
+    li = jax.lax.broadcasted_iota(jnp.uint32, (lyr, tk, tn), 0) + l0
+    ki = jax.lax.broadcasted_iota(jnp.uint32, (lyr, tk, tn), 1) + k0
+    ni = jax.lax.broadcasted_iota(jnp.uint32, (lyr, tk, tn), 2) + n0
     seeds = _tile_seed(seed, li, ki, ni)[..., None, None]
     z = _tile_normals(seeds, rows, cols)  # (L, tk, tn, rows, cols)
     z = z.transpose(0, 1, 3, 2, 4).reshape(lyr, tk * rows, tn * cols)
@@ -218,7 +251,15 @@ def _update_kernel(*refs, cfg: CrossbarConfig, n_bsteps: int,
         dg_req = scale_ref[0, 0] * o_ref[0, :, :]
         if noise_mode == "kernel":
             rows, cols = o_ref.shape[-2:]
-            seed = _tile_seed(seed_ref[0, 0], lid, kid, nid)
+            # seed_ref is (1, 4): [base seed, layer/row/col tile offsets].
+            # Offsets are the shard's global base tile coordinates (zero
+            # when unsharded), so the per-tile PRNG stream is indexed by
+            # *global* grid position and one seed gives the same noise on
+            # any mesh.
+            seed = _tile_seed(seed_ref[0, 0],
+                              _u32(lid) + seed_ref[0, 1],
+                              _u32(kid) + seed_ref[0, 2],
+                              _u32(nid) + seed_ref[0, 3])
             noise = _tile_normals(seed, rows, cols)
         elif noise_mode == "host":
             noise = noise_ref[0, :, :]
@@ -228,7 +269,7 @@ def _update_kernel(*refs, cfg: CrossbarConfig, n_bsteps: int,
                                           cfg.device)
 
 
-def _pallas_update(g, x_q, d_q, scale, noise, seed, cfg, block_b,
+def _pallas_update(g, x_q, d_q, scale, noise, seed, offs, cfg, block_b,
                    noise_mode, interpret):
     lyr, k, n = g.shape
     b = x_q.shape[1]
@@ -254,8 +295,9 @@ def _pallas_update(g, x_q, d_q, scale, noise, seed, cfg, block_b,
         in_specs.append(pl.BlockSpec((1, cfg.rows, cfg.cols),
                                      lambda l_, k_, n_, b_: (l_, k_, n_)))
     elif noise_mode == "kernel":
-        inputs.append(jnp.reshape(_u32(seed), (1, 1)))
-        in_specs.append(pl.BlockSpec((1, 1), lambda l_, k_, n_, b_: (0, 0)))
+        inputs.append(jnp.reshape(
+            jnp.stack([_u32(seed)] + [_u32(o) for o in offs]), (1, 4)))
+        in_specs.append(pl.BlockSpec((1, 4), lambda l_, k_, n_, b_: (0, 0)))
     inputs.append(jnp.reshape(scale, (lyr, 1)))
     in_specs.append(pl.BlockSpec((1, 1), lambda l_, k_, n_, b_: (l_, 0)))
 
@@ -272,26 +314,27 @@ def _pallas_update(g, x_q, d_q, scale, noise, seed, cfg, block_b,
     return out[:, :k, :n]
 
 
-def _fused_update(g, x_q, d_q, scale, noise, seed, cfg, noise_mode):
+def _fused_update(g, x_q, d_q, scale, noise, seed, offs, cfg, noise_mode):
     """Single-sweep jnp twin of the kernel: one layer-batched einsum plus
     the identical epilogue (and, in kernel noise mode, the identical
     counter-PRNG bits).  The fast path on hosts without Mosaic."""
     dg_req = scale[:, None, None] * jnp.einsum(
         "lbk,lbn->lkn", x_q, d_q, preferred_element_type=jnp.float32)
     if noise_mode == "kernel":
-        noise = field_normals(seed, g.shape, cfg)
+        noise = field_normals(seed, g.shape, cfg, tile_offsets=offs)
     elif noise_mode == "none":
         noise = None
     return _device_epilogue(g, dg_req, noise, cfg.device)
 
 
-def _dispatch_update(g, x_q, d_q, scale, noise, seed, cfg, block_b, impl,
-                     noise_mode):
+def _dispatch_update(g, x_q, d_q, scale, noise, seed, offs, cfg, block_b,
+                     impl, noise_mode):
     if impl == "fused":
-        return _fused_update(g, x_q, d_q, scale, noise, seed, cfg,
+        return _fused_update(g, x_q, d_q, scale, noise, seed, offs, cfg,
                              noise_mode)
-    return _pallas_update(g, x_q, d_q, scale, noise, seed, cfg, block_b,
-                          noise_mode, interpret=(impl == "interpret"))
+    return _pallas_update(g, x_q, d_q, scale, noise, seed, offs, cfg,
+                          block_b, noise_mode,
+                          interpret=(impl == "interpret"))
 
 
 _outer_update = functools.partial(jax.jit, static_argnames=(
@@ -299,7 +342,7 @@ _outer_update = functools.partial(jax.jit, static_argnames=(
 
 
 def _resolve_update_args(g, x_q, d_q, scale, cfg, noise, seed, noise_mode,
-                         impl, interpret):
+                         impl, interpret, tile_offsets=None):
     squeeze = g.ndim == 2
     if squeeze:
         g, x_q, d_q = g[None], x_q[None], d_q[None]
@@ -307,6 +350,9 @@ def _resolve_update_args(g, x_q, d_q, scale, cfg, noise, seed, noise_mode,
             noise = noise[None]
     lyr = g.shape[0]
     dev = cfg.device
+    if tile_offsets is None:
+        tile_offsets = (0, 0, 0)
+    offs = tuple(_u32(o) for o in tile_offsets)
 
     if noise_mode is None:
         if dev.write_noise <= 0.0:
@@ -349,7 +395,8 @@ def _resolve_update_args(g, x_q, d_q, scale, cfg, noise, seed, noise_mode,
         seed = _u32(seed)
     scale = jnp.broadcast_to(
         jnp.asarray(scale, jnp.float32).reshape(-1), (lyr,))
-    return g, x_q, d_q, scale, noise, seed, noise_mode, impl, squeeze
+    return (g, x_q, d_q, scale, noise, seed, offs, noise_mode, impl,
+            squeeze)
 
 
 def xbar_outer_update(g: Array, x_q: Array, d_q: Array, scale,
@@ -359,7 +406,8 @@ def xbar_outer_update(g: Array, x_q: Array, d_q: Array, scale,
                       interpret: Optional[bool] = None,
                       seed: Optional[Array] = None,
                       noise_mode: Optional[str] = None,
-                      impl: Optional[str] = None) -> Array:
+                      impl: Optional[str] = None,
+                      tile_offsets=None) -> Array:
     """G <- device(G, scale * sum_b outer(x_q_b, d_q_b)), layer-batched.
 
     ``g``: (K, N) or scan-stacked (L, K, N) conductances; ``x_q``: (B, K)
@@ -375,13 +423,19 @@ def xbar_outer_update(g: Array, x_q: Array, d_q: Array, scale,
     ``impl``: "pallas" | "interpret" | "fused" | None ("auto": Mosaic on
     TPU, the fused jnp twin elsewhere).  ``interpret=True/False`` is the
     legacy spelling of "interpret"/"pallas".
+
+    ``tile_offsets``: (layer, row-tile, col-tile) global base coordinates
+    of this block when it is a shard of a larger container — shifts the
+    in-kernel counter-PRNG streams so shard-local updates reproduce the
+    whole-array noise (see :func:`field_normals`).  Default (0, 0, 0).
     """
     in_dtype = g.dtype
-    (g, x_q, d_q, scale, noise, seed, noise_mode, impl,
+    (g, x_q, d_q, scale, noise, seed, offs, noise_mode, impl,
      squeeze) = _resolve_update_args(g, x_q, d_q, scale, cfg, noise, seed,
-                                     noise_mode, impl, interpret)
-    out = _outer_update(g, x_q, d_q, scale, noise, seed, cfg, block_b,
-                        impl, noise_mode)
+                                     noise_mode, impl, interpret,
+                                     tile_offsets)
+    out = _outer_update(g, x_q, d_q, scale, noise, seed, offs, cfg,
+                        block_b, impl, noise_mode)
     if squeeze:
         out = out[0]
     return out.astype(in_dtype)
@@ -393,17 +447,131 @@ def xbar_outer_update_inline(g: Array, x_q: Array, d_q: Array, scale,
                              block_b: Optional[int] = None,
                              seed: Optional[Array] = None,
                              noise_mode: Optional[str] = None,
-                             impl: Optional[str] = None) -> Array:
+                             impl: Optional[str] = None,
+                             tile_offsets=None) -> Array:
     """``xbar_outer_update`` without the jit wrapper, for callers already
     inside a jitted computation (the analog train step): the update inlines
     into the caller's graph, so per-container epilogues fuse with the rest
     of the step instead of becoming separate pjit subcomputations."""
     in_dtype = g.dtype
-    (g, x_q, d_q, scale, noise, seed, noise_mode, impl,
+    (g, x_q, d_q, scale, noise, seed, offs, noise_mode, impl,
      squeeze) = _resolve_update_args(g, x_q, d_q, scale, cfg, noise, seed,
-                                     noise_mode, impl, None)
-    out = _dispatch_update(g, x_q, d_q, scale, noise, seed, cfg, block_b,
-                           impl, noise_mode)
+                                     noise_mode, impl, None, tile_offsets)
+    out = _dispatch_update(g, x_q, d_q, scale, noise, seed, offs, cfg,
+                           block_b, impl, noise_mode)
     if squeeze:
         out = out[0]
     return out.astype(in_dtype)
+
+
+# --------------------------------------------------------------------------
+# Sharded update (shard_map over the container tile grid)
+# --------------------------------------------------------------------------
+
+def _shard_map_fn():
+    """jax.shard_map (>= 0.5) or jax.experimental.shard_map (0.4.x)."""
+    sm = getattr(jax, "shard_map", None)
+    if sm is not None:
+        return sm
+    from jax.experimental.shard_map import shard_map
+    return shard_map
+
+
+def _wrap_shard_map(body, mesh, in_specs, out_specs):
+    """shard_map with replication checking off, across jax versions
+    (check_rep -> check_vma rename; disabled because the bodies use
+    axis_index/psum patterns the static checkers reject or over-restrict)."""
+    sm = _shard_map_fn()
+    for kw in ({"check_rep": False}, {"check_vma": False}, {}):
+        try:
+            return sm(body, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, **kw)
+        except TypeError:
+            continue
+    raise TypeError("no compatible shard_map signature found")
+
+
+def _flat_axis_index(mesh, names) -> Array:
+    """Global shard index over one or more mesh axes, row-major (matches
+    how a dim sharded over ("pod", "data") is laid out)."""
+    if isinstance(names, str):
+        names = (names,)
+    idx = jnp.uint32(0)
+    for a in names:
+        idx = idx * jnp.uint32(mesh.shape[a]) + _u32(jax.lax.axis_index(a))
+    return idx
+
+
+def xbar_sharded_update(g: Array, x_q: Array, d_q: Array, scale,
+                        cfg: CrossbarConfig, mesh, specs,
+                        noise: Optional[Array] = None,
+                        block_b: Optional[int] = None,
+                        seed: Optional[Array] = None,
+                        noise_mode: Optional[str] = None,
+                        impl: Optional[str] = None) -> Array:
+    """The layer-batched update, run under ``shard_map`` on ``mesh``.
+
+    ``specs`` maps {"g", "x_tape", "d_tape", "scale"} to tile-aligned
+    PartitionSpecs (``launch/sharding.analog_update_specs``).  Each shard
+    receives whole (rows x cols) tiles of its container block plus the
+    matching slices of the tape operands, so the rank-k write is entirely
+    local: the token contraction runs over the full (replicated) batch and
+    no cross-device reduction exists on this path.  The per-(layer, tile)
+    counter-PRNG seeds are offset by the shard's global base tile
+    coordinates (``tile_offsets``), which makes one scalar seed produce
+    bit-identical conductances on any mesh — including the degenerate
+    1-device mesh and the plain unsharded call.
+
+    Works with every ``impl`` path: Mosaic compiles one kernel per shard
+    on TPU; the fused jnp twin serves host-platform meshes in CI.
+    """
+    squeeze = g.ndim == 2
+    if squeeze:  # normalise to the stacked layout so specs index uniformly
+        g, x_q, d_q = g[None], x_q[None], d_q[None]
+        if noise is not None:
+            noise = noise[None]
+        scale = jnp.asarray(scale, jnp.float32).reshape(1)
+        g_spec = P(None, *specs["g"])
+        x_spec = P(None, *specs["x_tape"])
+        d_spec = P(None, *specs["d_tape"])
+        s_spec = P(None)
+    else:
+        g_spec, x_spec, d_spec = specs["g"], specs["x_tape"], specs["d_tape"]
+        s_spec = specs["scale"]
+        scale = jnp.broadcast_to(
+            jnp.asarray(scale, jnp.float32).reshape(-1), (g.shape[0],))
+    rows, cols = cfg.rows, cfg.cols
+    row_axes, col_axes = g_spec[-2], g_spec[-1]
+    lead_axes = g_spec[0] if len(g_spec) > 2 else None
+
+    def _off(names, n_local_tiles):
+        if names is None:
+            return jnp.uint32(0)
+        return _flat_axis_index(mesh, names) * jnp.uint32(n_local_tiles)
+
+    use_seed = seed is not None
+    use_noise = noise is not None
+
+    def body(g_l, x_l, d_l, s_l, *rest):
+        rest = list(rest)
+        noise_l = rest.pop(0) if use_noise else None
+        seed_l = rest.pop(0) if use_seed else None
+        offs = (_off(lead_axes, g_l.shape[0]),
+                _off(row_axes, g_l.shape[1] // rows),
+                _off(col_axes, g_l.shape[2] // cols))
+        return xbar_outer_update_inline(
+            g_l, x_l, d_l, s_l, cfg, noise=noise_l, block_b=block_b,
+            seed=seed_l, noise_mode=noise_mode, impl=impl,
+            tile_offsets=offs)
+
+    operands = [g.astype(jnp.float32), x_q.astype(jnp.float32),
+                d_q.astype(jnp.float32), scale]
+    in_specs = [g_spec, x_spec, d_spec, s_spec]
+    if use_noise:
+        operands.append(noise.astype(jnp.float32))
+        in_specs.append(g_spec)
+    if use_seed:
+        operands.append(_u32(seed))
+        in_specs.append(P())
+    out = _wrap_shard_map(body, mesh, tuple(in_specs), g_spec)(*operands)
+    return (out[0] if squeeze else out).astype(g.dtype)

@@ -1,22 +1,22 @@
-"""Sharding policy: parameters, optimizer state, batches and caches.
+"""Sharding policy: parameters, optimizer state, batches, caches, and
+tiled-crossbar analog containers.
 
-Baseline policy (EXPERIMENTS.md §Perf iterates on this):
-  * TP (Megatron): attention/FFN projections column/row-split over
-    ``model``; embeddings vocab-split.
-  * FSDP: the non-TP dimension of every large weight shards over the
-    data-parallel axes (pod x data) — required to fit the 90B/107B configs.
-  * EP: MoE expert dim shards over ``model``.
-  * SP: decode caches shard sequence over ``model`` when the KV-head count
-    cannot cover it (flash-decoding partial-softmax combine makes this
-    exact); SSD/hybrid states shard heads.
-  * DP: batch over (pod, data).
+The full policy narrative — TP/FSDP/EP/SP/DP rules, the divisibility
+degradation, and the analog container tile-grid specs — lives in
+``docs/sharding.md``.  In one line each:
 
-Every rule degrades to replication when divisibility fails (e.g. whisper's
-51865 vocab), so any (arch x mesh) pair lowers.
+  * TP over ``model``, FSDP over (pod, data), EP experts over ``model``,
+    SP cache sequence over ``model``, DP batch over (pod, data);
+  * analog containers shard at *whole-tile* granularity: row-tiles over
+    the FSDP axes, column-tiles over ``model`` (mirroring the projection's
+    TP split; flipped for row-parallel consumers), layer dim unsharded
+    (it is the scan axis);
+  * every rule degrades to replication when divisibility fails, so any
+    (arch x mesh) pair lowers.
 """
 from __future__ import annotations
 
-from typing import Tuple
+from typing import Dict, Tuple
 
 import jax
 from jax.sharding import NamedSharding, PartitionSpec as P
@@ -26,6 +26,13 @@ import os
 from repro.configs.base import ModelConfig
 
 from .mesh import dp_axes
+
+#: Leaf names of a tiled-crossbar container (plus its in-step tape slots).
+ANALOG_LEAVES = ("g", "ref", "w_scale", "x_tape", "d_tape")
+#: Projections that are TP row-parallel consumers: their *row* (K) tiles
+#: follow the model axis and their column (N) tiles the FSDP axes, so the
+#: analog split mirrors the digital spec2d("model", dp) rule.
+_ROW_PARALLEL = ("wo", "w_down", "out_proj")
 
 
 def _axis_size(mesh, names) -> int:
@@ -50,6 +57,86 @@ def _fit(mesh, dim: int, names):
     return None
 
 
+def _tile_fit(mesh, dim: int, names, tile: int):
+    """names if they divide ``dim`` at whole-*tile* granularity, else None.
+
+    Analog containers may only split between physical crossbar tiles: a
+    shard must own whole ``rows x cols`` arrays so the update kernel's
+    per-(layer, tile) PRNG streams and the per-tile ADC stay local to one
+    owner.  ``dim % (size * tile) == 0`` is therefore required — anything
+    else degrades to replication, exactly like :func:`_fit`.
+    """
+    if names is None:
+        return None
+    size = _axis_size(mesh, names)
+    if size > 1 and dim % (size * tile) == 0:
+        return names if isinstance(names, str) or len(names) > 1 \
+            else names[0]
+    return None
+
+
+def _analog_row_parallel(sp) -> bool:
+    """Whether the projection owning this container is a TP row-parallel
+    consumer (its K tiles take the model axis) — from the path keys."""
+    proj = next((str(k) for k in reversed(sp)
+                 if str(k) not in ANALOG_LEAVES), "")
+    return proj in _ROW_PARALLEL
+
+
+def analog_container_pspec(sp, shape, cfg: ModelConfig, mesh,
+                           leaf: str) -> P:
+    """PartitionSpec for one leaf of a tiled-crossbar container.
+
+    Tile grid split (docs/sharding.md §Analog containers): column-tiles
+    over ``model`` and row-tiles over the FSDP axes for column-parallel
+    producers (wqkv, w_upgate, wq/wk/wv, wkv_b, ...); flipped for
+    row-parallel consumers (wo, w_down, out_proj) so the analog layout
+    mirrors the TP split of the digital weight.  The layer dim of a
+    scan-stacked container is never sharded (it is the scan axis — a
+    sharded L would gather a full (K, N) block every scan step), and
+    ``w_scale`` is replicated.  Tape slots follow their container: x_tape
+    shards its K like g's rows, d_tape its N like g's columns.
+    """
+    rows, cols = cfg.analog_rows, cfg.analog_cols
+    dp = dp_axes(mesh)
+    row_axes, col_axes = (("model", dp) if _analog_row_parallel(sp)
+                          else (dp, "model"))
+    lead = [None] * (len(shape) - 2)
+    if leaf in ("g", "ref"):
+        return P(*lead, _tile_fit(mesh, shape[-2], row_axes, rows),
+                 _tile_fit(mesh, shape[-1], col_axes, cols))
+    if leaf == "x_tape":            # (..., T, K): K follows g's row split
+        return P(*lead, None, _tile_fit(mesh, shape[-1], row_axes, rows))
+    if leaf == "d_tape":            # (..., T, N): N follows g's col split
+        return P(*lead, None, _tile_fit(mesh, shape[-1], col_axes, cols))
+    return P(*([None] * len(shape)))        # w_scale: replicated
+
+
+def analog_update_specs(path: Tuple[str, ...], g_shape, cfg: ModelConfig,
+                        mesh) -> Dict[str, P]:
+    """PartitionSpecs for the shard_map'd rank-k write of one container.
+
+    ``path`` is the container's key path in the parameter tree (used to
+    pick the producer/consumer orientation); ``g_shape`` the (possibly
+    scan-stacked) conductance shape.  Returns specs for g (also ref), the
+    two tape operands and the per-layer scale, all tile-aligned so every
+    shard owns whole tiles and the outer-product contraction (over tokens)
+    stays local.
+    """
+    sp = list(path)
+    lead = g_shape[:-2]
+    k, n = g_shape[-2:]
+    tapes_lead = (*lead, 1)  # (L, T, ...) / (T, ...): T never sharded
+    return {
+        "g": analog_container_pspec(sp, g_shape, cfg, mesh, "g"),
+        "x_tape": analog_container_pspec(sp, (*tapes_lead, k), cfg, mesh,
+                                         "x_tape"),
+        "d_tape": analog_container_pspec(sp, (*tapes_lead, n), cfg, mesh,
+                                         "d_tape"),
+        "scale": P(*([None] * len(lead))),
+    }
+
+
 def param_pspec(path: Tuple, leaf, cfg: ModelConfig, mesh) -> P:
     """PartitionSpec for one parameter leaf (path from tree_map_with_path)."""
     keys = [getattr(k, "key", getattr(k, "idx", "")) for k in path]
@@ -72,6 +159,13 @@ def param_pspec(path: Tuple, leaf, cfg: ModelConfig, mesh) -> P:
         out.append(_fit(mesh, shape[-2], d0_axes))
         out.append(_fit(mesh, shape[-1], d1_axes))
         return P(*out)
+
+    # Tiled-crossbar containers (analog device mode): tile-granular split,
+    # before every digital rule — including REPRO_FLAT_DP, whose arbitrary
+    # largest-dim split would cut tiles in half.
+    last_key = str(sp[-1]) if sp else ""
+    if cfg.analog_training and last_key in ANALOG_LEAVES:
+        return analog_container_pspec(sp, shape, cfg, mesh, last_key)
 
     # K6 (perf): pure ZeRO-3 — shard the largest divisible dim over the
     # flattened mesh; no tensor parallelism anywhere.
@@ -124,6 +218,31 @@ def params_shardings(abstract_params, cfg: ModelConfig, mesh):
     def spec(path, leaf):
         # resolve nested attn dicts: path keys include the projection name
         return NamedSharding(mesh, param_pspec(path, leaf, cfg, mesh))
+    return jax.tree_util.tree_map_with_path(spec, abstract_params)
+
+
+def analog_params_shardings(abstract_params, cfg: ModelConfig, mesh):
+    """Parameter shardings for the *sharded analog train step*.
+
+    Tiled-crossbar containers split at tile granularity
+    (:func:`analog_container_pspec`); every digital leaf — embeddings,
+    norms, the logits head, exactly the parameters the paper keeps on the
+    digital core — stays **replicated**.  The digital TP rules of
+    :func:`param_pspec` would shard e.g. the tied embedding over
+    (model, data) and turn the logits contraction into a partial-sum +
+    all-reduce, whose association depends on the mesh; the analog step's
+    bit-exact contract (same seed, any mesh, identical conductances)
+    requires replicated digital compute instead.  The parallel axes of the
+    analog step are the container tile grid, not the batch.
+    """
+    def spec(path, leaf):
+        keys = [str(getattr(k, "key", getattr(k, "idx", ""))) for k in path]
+        last = keys[-1] if keys else ""
+        if last in ANALOG_LEAVES:
+            return NamedSharding(
+                mesh, analog_container_pspec(keys, leaf.shape, cfg, mesh,
+                                             last))
+        return NamedSharding(mesh, P(*([None] * leaf.ndim)))
     return jax.tree_util.tree_map_with_path(spec, abstract_params)
 
 

@@ -43,29 +43,29 @@ def cdtype(cfg: ModelConfig):
 # sharding inside long scans; drivers install a context (mesh + DP axes)
 # before tracing and the stacks re-constrain activations at block
 # boundaries.  No-op when no context is installed (tests, single device).
+# The context itself lives in ``core.shardctx`` so the crossbar sim can
+# consult the same mesh (sharded analog training); these re-exports keep
+# the historical import site working.
 # --------------------------------------------------------------------------
 
-_SHARD_CTX: dict = {"mesh": None, "dp": None, "tp": None}
-
-
-def set_shard_context(mesh, dp_axes, tp_axis="model") -> None:
-    _SHARD_CTX.update(mesh=mesh, dp=dp_axes, tp=tp_axis)
-
-
-def clear_shard_context() -> None:
-    _SHARD_CTX.update(mesh=None, dp=None, tp=None)
+from repro.core.shardctx import (clear_shard_context,  # noqa: F401
+                                 get_shard_context, set_shard_context)
 
 
 def shard_batch_dim(x: Array) -> Array:
     """Constrain dim0 (batch) to the data-parallel axes.
+
+    A context with ``dp_axes=None`` (the sharded *analog* step, which keeps
+    the batch replicated and parallelises over the container tile grid) is
+    a no-op here.
 
     K5 (perf): REPRO_SEQ_SHARD=1 additionally shards the sequence dim over
     the model axis at block boundaries (Megatron-SP): the TP boundary then
     carries reduce-scatter + all-gather instead of all-reduce — half the
     link bytes — and norms/elementwise run on 1/TP of the tokens."""
     import os
-    mesh, dp = _SHARD_CTX["mesh"], _SHARD_CTX["dp"]
-    if mesh is None or x.ndim < 2:
+    mesh, dp, tp = get_shard_context()
+    if mesh is None or dp is None or x.ndim < 2:
         return x
     size = 1
     for a in (dp if isinstance(dp, tuple) else (dp,)):
@@ -75,8 +75,8 @@ def shard_batch_dim(x: Array) -> Array:
     from jax.sharding import NamedSharding, PartitionSpec as P
     rest = [None] * (x.ndim - 1)
     if (os.environ.get("REPRO_SEQ_SHARD") and x.ndim >= 3
-            and x.shape[1] % mesh.shape[_SHARD_CTX["tp"]] == 0):
-        rest[0] = _SHARD_CTX["tp"]
+            and x.shape[1] % mesh.shape[tp] == 0):
+        rest[0] = tp
     spec = P(dp, *rest)
     return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
 

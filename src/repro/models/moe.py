@@ -78,15 +78,14 @@ def moe_apply(p: dict, x: Array, cfg: ModelConfig
 def _shard_ge(buf: Array) -> Array:
     """Constrain a (G, E, ...) dispatch buffer to (dp, model, ...) so the
     expert einsum and its backward stay shard-local (K4-explicit)."""
-    from .layers import _SHARD_CTX
-    mesh, dp = _SHARD_CTX["mesh"], _SHARD_CTX["dp"]
-    if mesh is None:
+    from repro.core.shardctx import get_shard_context
+    mesh, dp, tp = get_shard_context()
+    if mesh is None or dp is None:
         return buf
     import numpy as _np
     from jax.sharding import NamedSharding, PartitionSpec as P
     dp_t = dp if isinstance(dp, tuple) else (dp,)
     dp_size = int(_np.prod([mesh.shape[a] for a in dp_t]))
-    tp = _SHARD_CTX["tp"]
     spec = [None] * buf.ndim
     if buf.shape[0] % dp_size == 0:
         spec[0] = dp

@@ -26,6 +26,21 @@ it compiles exactly once and updates conductances in place:
 The step also carries a hardware cost roll-up: layer shapes joined with
 ``hwmodel/arch_cost`` project the energy/latency of each step on the
 analog accelerator vs digital-ReRAM vs SRAM cores (``step.cost``).
+
+Multi-device sharding
+---------------------
+Pass ``mesh=`` to run the step sharded (docs/analog_pipeline.md
+§Sharding).  The parallel axis is the container *tile grid*, not the
+batch: conductances/reference arrays shard at whole-tile granularity —
+column-tiles over ``model``, row-tiles over the FSDP axes, flipped for
+row-parallel consumers (``launch/sharding.analog_container_pspec``) — the
+rank-k write runs under ``shard_map`` with shard-invariant counter-PRNG
+seeds (``kernels/xbar_update.xbar_sharded_update``), and activations stay
+replicated so no floating-point reduction ever crosses a shard boundary
+(``core/shardctx.py`` spells out the determinism contract).  A 1-device
+and an N-device run of the same seed therefore produce *bit-identical*
+conductances (tests/test_sharded_analog.py).  Use :meth:`shard_state` to
+lay an initial state out on the mesh.
 """
 from __future__ import annotations
 
@@ -35,15 +50,37 @@ from typing import Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+import numpy as np
+
 from repro.configs.base import ModelConfig
+from repro.core import shardctx
 from repro.core.tiled_analog import (crossbar_from_model,
                                      is_analog_container, merge_tapes,
                                      split_tapes)
 from repro.hwmodel.arch_cost import train_step_cost
-from repro.kernels.xbar_update import _mix32, xbar_outer_update_inline
+from repro.kernels.xbar_update import (_flat_axis_index, _mix32,
+                                       _wrap_shard_map,
+                                       xbar_outer_update_inline,
+                                       xbar_sharded_update)
 from repro.models import model as M
 
 Array = jax.Array
+
+
+def _spec_names(entry) -> tuple:
+    """PartitionSpec entry -> tuple of mesh axis names (() if None)."""
+    if entry is None:
+        return ()
+    return entry if isinstance(entry, tuple) else (entry,)
+
+
+def _gather_dim(x: Array, names, axis: int) -> Array:
+    """all_gather one sharded dim back to full size (inside shard_map).
+    Minor axis first so a dim sharded over ("pod", "data") reassembles
+    pod-major, matching the at-rest layout.  Arithmetic-free — exact."""
+    for a in reversed(names):
+        x = jax.lax.all_gather(x, a, axis=axis, tiled=True)
+    return x
 
 
 def init_state(key: Array, cfg: ModelConfig) -> dict:
@@ -67,11 +104,19 @@ class AnalogTrainStep:
     "interpret" | "fused" | None = auto: Mosaic on TPU, the fused jnp twin
     elsewhere); ``noise_mode`` selects in-kernel counter-PRNG write noise
     ("kernel", the default) or the legacy host-generated field ("host").
+
+    ``mesh`` (optional) runs the step sharded over a device mesh with
+    ``data``/``model`` axes: containers split at tile granularity, the
+    rank-k write runs under shard_map, and the result is bit-identical to
+    the single-device step for the same seed (see the module docstring).
+    The state should be laid out with :meth:`shard_state` first; the batch
+    and key are replicated automatically.
     """
 
     def __init__(self, cfg: ModelConfig, lr: float,
                  interpret: Optional[bool] = None, bits: int = 8,
-                 impl: Optional[str] = None, noise_mode: str = "kernel"):
+                 impl: Optional[str] = None, noise_mode: str = "kernel",
+                 mesh=None, exact: bool = True):
         if not cfg.analog_training:
             raise ValueError("cfg must have analog=True, "
                              "analog_mode='device'")
@@ -85,8 +130,16 @@ class AnalogTrainStep:
             impl = "interpret" if interpret else "pallas"
         self.impl = impl or "auto"
         self.noise_mode = noise_mode
+        self.mesh = mesh
+        self.exact = exact
         self.cost: Optional[dict] = None
-        self._step = jax.jit(self._step_impl, donate_argnums=(0,))
+        # With a mesh the jit carries explicit in/out shardings (built at
+        # first call, when the state structure is known) so the parameter
+        # layout is pinned across steps — GSPMD would otherwise be free to
+        # re-lay out e.g. the embedding on step 2, retracing the step and
+        # resharding the logits contraction mid-run.
+        self._step = None if mesh is not None \
+            else jax.jit(self._step_impl, donate_argnums=(0,))
 
     # ------------------------------------------------------------------ api
 
@@ -95,13 +148,92 @@ class AnalogTrainStep:
         if self.cost is None:
             self.cost = train_step_cost(
                 self.cfg, n_tokens=int(batch["tokens"].size),
-                bits=self.bits, ctx_len=batch["tokens"].shape[-1])
+                bits=self.bits, ctx_len=batch["tokens"].shape[-1],
+                n_shards=self.mesh.size if self.mesh is not None else 1)
+        if self.mesh is None:
+            return self._step(state, batch, key)
+        if self._step is None:
+            self._build_sharded_step(state, batch)
+        if not self.exact:
+            # The TP read path relies on the shard context: the crossbar
+            # sim pins its cross-tile accumulations and read outputs at
+            # trace time (core/shardctx.replicate_for_exact_reduce).
+            prev = shardctx.get_shard_context()
+            shardctx.set_shard_context(self.mesh, None)
+            try:
+                return self._step(state, batch, key)
+            finally:
+                shardctx.set_shard_context(*prev)
         return self._step(state, batch, key)
+
+    def _build_sharded_step(self, state, batch):
+        """First call with a mesh: pin the jit's in/out shardings (so the
+        parameter layout is stable across steps — GSPMD would otherwise be
+        free to re-lay out e.g. the embedding on step 2 and retrace), and
+        in exact mode wrap the whole step body in shard_map."""
+        from jax.sharding import PartitionSpec as P
+        repl = self._replicated()
+        state_sh = self.state_shardings(state)
+        if self.exact:
+            # Record each container's partition specs + global shape; the
+            # shard_map body sees only local tile blocks.
+            self._cspecs = {}
+            self._collect_cspecs(state["params"], ())
+            state_spec = jax.tree.map(lambda s: s.spec, state_sh)
+            batch_spec = jax.tree.map(lambda _: P(), batch)
+            fn = _wrap_shard_map(self._step_impl, self.mesh,
+                                 (state_spec, batch_spec, P()),
+                                 (state_spec, P()))
+        else:
+            fn = self._step_impl
+        # ``repl`` is a pytree *prefix* covering the batch / metrics dicts.
+        self._step = jax.jit(fn, donate_argnums=(0,),
+                             in_shardings=(state_sh, repl, repl),
+                             out_shardings=(state_sh, repl))
+
+    def _collect_cspecs(self, p, path):
+        from repro.launch.sharding import analog_update_specs
+        if is_analog_container(p):
+            self._cspecs[path] = (
+                analog_update_specs(path, p["g"].shape, self.cfg,
+                                    self.mesh),
+                tuple(p["g"].shape))
+            return
+        if isinstance(p, dict):
+            for k, v in p.items():
+                self._collect_cspecs(v, path + (k,))
 
     @property
     def compiles(self) -> Optional[int]:
+        if self._step is None:
+            return 0
         size = getattr(self._step, "_cache_size", None)
         return size() if size is not None else None
+
+    # ------------------------------------------------------- mesh layout
+
+    def _replicated(self):
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        return NamedSharding(self.mesh, P())
+
+    def state_shardings(self, state: dict):
+        """NamedShardings for a train state on this step's mesh: analog
+        containers tile-sharded per the policy, everything else (digital
+        leaves, the step counter) replicated."""
+        from repro.launch import sharding as S
+        return {
+            "params": S.analog_params_shardings(state["params"], self.cfg,
+                                                self.mesh),
+            "step": self._replicated(),
+        }
+
+    def shard_state(self, state: dict) -> dict:
+        """Lay an (unsharded) train state out on the mesh.  Containers
+        split at tile granularity; shapes that don't divide degrade to
+        replication exactly like the digital policy."""
+        if self.mesh is None:
+            return state
+        return jax.device_put(state, self.state_shardings(state))
 
     # ------------------------------------------------------------- internals
 
@@ -110,9 +242,29 @@ class AnalogTrainStep:
         params = state["params"]
         n_tokens = batch["tokens"].size  # static under jit
 
+        # Sharded + exact (the default contract): this body runs INSIDE
+        # shard_map — each device holds its local tile blocks of every
+        # container and executes, after an arithmetic-free all-gather of
+        # the conductances for the read path, literally the single-device
+        # program: same shapes, same ops, no partitioner choices anywhere.
+        # That structural identity — not sharding annotations — is what
+        # makes the sharded step bit-identical to the 1-device step; GSPMD
+        # layout decisions are graph-global and reassociate reductions at
+        # the ulp level even over fully replicated operands.  The rank-k
+        # write below then updates only the local tile block (tapes
+        # sliced, PRNG counters globally offset).  ``exact=False`` skips
+        # the shard_map wrapper and keeps the containers sharded through a
+        # GSPMD read path instead: true tensor-parallel VMM/MVM
+        # (activations pinned replicated at every container boundary,
+        # cross-tile ADC sums pinned to global order — core/xbar_ops) at
+        # the cost of that ulp-level drift.
+        read_params = params
+        if self.mesh is not None and self.exact:
+            read_params = self._gather_containers(params, ())
+
         # Hoist g/ref/w_scale out of the differentiated arguments: the grads
         # tree holds exactly the tape cotangents + digital gradients.
-        diff, frozen = split_tapes(params, n_tokens)
+        diff, frozen = split_tapes(read_params, n_tokens)
         (loss, metrics), grads = jax.value_and_grad(
             lambda d: M.loss_fn(merge_tapes(d, frozen), batch, cfg),
             has_aux=True)(diff)
@@ -137,6 +289,27 @@ class AnalogTrainStep:
         out["g_rail_frac"] = sum(rail) / len(rail)
         return {"params": new_params, "step": state["step"] + 1}, out
 
+    def _gather_containers(self, p, path):
+        """Reassemble full conductance/reference arrays from local tile
+        blocks for the read path (inside shard_map).  all_gather moves
+        bits, never adds floats — the gathered array is exactly the
+        single-device array."""
+        if is_analog_container(p):
+            g_spec = self._cspecs[path][0]["g"]
+            out = dict(p)
+            for leaf in ("g", "ref"):
+                x = p[leaf]
+                for d, entry in enumerate(g_spec):
+                    names = _spec_names(entry)
+                    if names:
+                        x = _gather_dim(x, names, d)
+                out[leaf] = x
+            return out
+        if isinstance(p, dict):
+            return {k: self._gather_containers(v, path + (k,))
+                    for k, v in p.items()}
+        return p
+
     def _update(self, p, g, key, seed_base, path, rail):
         if is_analog_container(p):
             return self._update_container(p, g, key, seed_base, path, rail)
@@ -148,7 +321,10 @@ class AnalogTrainStep:
 
     def _update_container(self, p, tapes, key, seed_base, path, rail):
         """The paper's Fig. 3c parallel write, fused on the (L, tiles)
-        grid: one kernel sweep per container, scan-stacked or not."""
+        grid: one kernel sweep per container, scan-stacked or not.  On a
+        mesh each shard writes only the tiles it owns (tape slices local,
+        PRNG counters globally indexed)."""
+        smap = self.mesh is not None and self.exact
         noise = seed = None
         mode = "none"
         if seed_base is not None:
@@ -157,25 +333,99 @@ class AnalogTrainStep:
                 zlib.crc32("/".join(path).encode())))
         elif self.xcfg.device.write_noise > 0.0:
             mode = "host"
-            noise = jax.random.normal(_path_key(key, path), p["g"].shape,
+            shape = self._cspecs[path][1] if smap else p["g"].shape
+            noise = jax.random.normal(_path_key(key, path), shape,
                                       dtype=jnp.float32)
         scale = jnp.asarray(-self.lr, jnp.float32) \
             * jnp.asarray(p["w_scale"], jnp.float32)
+        if smap:
+            g_new, railed, total = self._local_block_update(
+                p, tapes, scale, noise, seed, mode, path)
+            rail.append(railed / total)
+        else:
+            if self.mesh is not None:  # GSPMD TP path: nested shard_map
+                from repro.launch.sharding import analog_update_specs
+                specs = analog_update_specs(path, p["g"].shape, self.cfg,
+                                            self.mesh)
+                g_new = xbar_sharded_update(
+                    p["g"], tapes["x_tape"], tapes["d_tape"], scale,
+                    self.xcfg, self.mesh, specs, noise=noise, seed=seed,
+                    noise_mode=mode, impl=self.impl)
+            else:
+                g_new = xbar_outer_update_inline(
+                    p["g"], tapes["x_tape"], tapes["d_tape"], scale,
+                    self.xcfg, noise=noise, seed=seed, noise_mode=mode,
+                    impl=self.impl)
+            dev = self.xcfg.device
+            span = dev.gmax - dev.gmin
+            # sums of 0/1 floats are order-exact, so this mean matches the
+            # single-device value bit for bit even over a sharded array
+            rail.append(jnp.mean(
+                (g_new <= dev.gmin + 1e-3 * span)
+                | (g_new >= dev.gmax - 1e-3 * span)).astype(jnp.float32))
+        return {**p, "g": g_new}
+
+    def _local_block_update(self, p, tapes, scale, noise, seed, mode, path):
+        """Rank-k write of one shard's tile block (inside shard_map):
+        slice the (replicated) tapes and noise to the block this shard
+        owns, offset the counter-PRNG by the block's global base tile
+        coordinates, and run the plain layer-batched kernel on the local
+        conductances.  Returns (g_new, railed_count, total_cells) with the
+        count psum'd over the sharded axes — 0/1 sums are order-exact, so
+        the rail fraction matches the single-device metric bitwise."""
+        specs, gshape = self._cspecs[path]
+        mesh = self.mesh
+        rows, cols = self.xcfg.rows, self.xcfg.cols
+        g_spec = specs["g"]
+        lead = len(gshape) - 2
+        names_r = _spec_names(g_spec[-2])
+        names_c = _spec_names(g_spec[-1])
+        g_loc = p["g"]
+        k_loc, n_loc = g_loc.shape[-2:]
+
+        def slice_dim(x, names, size_loc, axis):
+            if not names:
+                return x
+            start = (_flat_axis_index(mesh, names)
+                     * jnp.uint32(size_loc)).astype(jnp.int32)
+            return jax.lax.dynamic_slice_in_dim(x, start, size_loc,
+                                                axis=axis)
+
+        x_loc = slice_dim(tapes["x_tape"], names_r, k_loc, -1)
+        d_loc = slice_dim(tapes["d_tape"], names_c, n_loc, -1)
+        if noise is not None:
+            noise = slice_dim(noise, names_r, k_loc, lead)
+            noise = slice_dim(noise, names_c, n_loc, lead + 1)
+        offs = (0,
+                _flat_axis_index(mesh, names_r) * jnp.uint32(k_loc // rows)
+                if names_r else 0,
+                _flat_axis_index(mesh, names_c) * jnp.uint32(n_loc // cols)
+                if names_c else 0)
         g_new = xbar_outer_update_inline(
-            p["g"], tapes["x_tape"], tapes["d_tape"], scale, self.xcfg,
-            noise=noise, seed=seed, noise_mode=mode, impl=self.impl)
+            g_loc, x_loc, d_loc, scale, self.xcfg, noise=noise, seed=seed,
+            noise_mode=mode, impl=self.impl, tile_offsets=offs)
         dev = self.xcfg.device
         span = dev.gmax - dev.gmin
-        rail.append(jnp.mean(
-            (g_new <= dev.gmin + 1e-3 * span)
-            | (g_new >= dev.gmax - 1e-3 * span)).astype(jnp.float32))
-        return {**p, "g": g_new}
+        railed = jnp.sum(((g_new <= dev.gmin + 1e-3 * span)
+                          | (g_new >= dev.gmax - 1e-3 * span))
+                         .astype(jnp.float32))
+        used = tuple(a for e in g_spec for a in _spec_names(e))
+        if used:
+            railed = jax.lax.psum(railed, used)
+        return g_new, railed, float(np.prod(gshape))
 
 
 def make_analog_sgd_step(cfg: ModelConfig, lr: float,
                          interpret: Optional[bool] = None,
                          bits: int = 8, impl: Optional[str] = None,
-                         noise_mode: str = "kernel") -> AnalogTrainStep:
-    """The analog-SGD training step for a device-mode transformer config."""
+                         noise_mode: str = "kernel",
+                         mesh=None, exact: bool = True) -> AnalogTrainStep:
+    """The analog-SGD training step for a device-mode transformer config.
+
+    ``mesh``: optional jax mesh with ``data``/``model`` axes — runs the
+    step sharded over the container tile grid (bit-identical to the
+    single-device step when ``exact=True``, the default; see
+    :class:`AnalogTrainStep`)."""
     return AnalogTrainStep(cfg, lr, interpret=interpret, bits=bits,
-                           impl=impl, noise_mode=noise_mode)
+                           impl=impl, noise_mode=noise_mode, mesh=mesh,
+                           exact=exact)
