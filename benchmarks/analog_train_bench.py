@@ -13,6 +13,12 @@ per-step energy / pJ-per-MAC on the analog, digital-ReRAM and SRAM cores
 parity check against the digital model, the compile count of the jitted
 step (must be 1), and warm-step throughput (tok/s + simulated GMAC/s).
 
+``--configs a,b,c`` benchmarks several architectures in one run (the
+registry makes every family train in situ — MoE expert stacks, SSD
+in/out projections, hybrid shared blocks included); per-arch results land
+under ``runs`` and a ``rows`` array (one ``{name, us_per_call,
+sim_gmacs}`` row per arch) feeds the ``check_bench.py`` regression gate.
+
 ``--mesh DxM`` runs the analog side sharded over a DATAxMODEL device mesh
 (docs/analog_pipeline.md §Sharding); on a CPU host the benchmark sets the
 host-platform device-count flag for you, so
@@ -70,8 +76,8 @@ from repro.train.analog_lm import init_state, make_analog_sgd_step
 Array = jax.Array
 
 
-def bench_config(args):
-    base = get_config(args.arch, smoke=args.smoke)
+def bench_config(args, arch=None):
+    base = get_config(arch or args.arch, smoke=args.smoke)
     kw = dict(dtype="float32", analog=True, analog_mode="device",
               analog_device=args.device,
               analog_in_bits=args.bits, analog_out_bits=args.bits)
@@ -102,17 +108,23 @@ def run_analog(cfg, stream, args, mesh=None):
     if mesh is not None:
         state = step.shard_state(state)
     key = jax.random.PRNGKey(args.seed + 1)
-    losses, t0 = [], time.perf_counter()
+    losses, step_walls, t0 = [], [], time.perf_counter()
     t_warm = None
     for i in range(args.steps):
         x, y = batch_tokens(stream, args.batch, args.seq, i)
         key, ks = jax.random.split(key)
+        t_s = time.perf_counter()
         state, mets = step(state, {"tokens": jnp.asarray(x),
                                    "labels": jnp.asarray(y)}, ks)
-        losses.append(float(mets["loss"]))
+        losses.append(float(mets["loss"]))  # sync point
+        step_walls.append(time.perf_counter() - t_s)
         if i == 0:
             t_warm = time.perf_counter()  # compile + first step done
     wall = time.perf_counter() - t0
+    # median warm step: robust to load spikes on shared runners (feeds
+    # the check_bench regression row)
+    warm = sorted(step_walls[1:]) or step_walls
+    med_step = warm[len(warm) // 2]
     tok_step = args.batch * args.seq
     if args.steps >= 2:
         # warm throughput: exclude compile + first step
@@ -124,6 +136,7 @@ def run_analog(cfg, stream, args, mesh=None):
             "compiles": step.compiles, "cost": step.cost,
             "g_rail_frac": float(mets["g_rail_frac"]),
             "tok_per_s": warm_steps * tok_step / warm_wall,
+            "median_step_us": med_step * 1e6,
             "sim_gmacs_per_s": warm_steps
             * sim_gmacs_per_step(cfg, tok_step) / warm_wall}
 
@@ -184,6 +197,10 @@ def main(argv=None):
     ap.add_argument("--tile", type=int, default=0,
                     help="square physical tile size override "
                          "(0 = arch default / smoke 64)")
+    ap.add_argument("--configs", default=None,
+                    help="comma-separated arch list to benchmark in one "
+                         "run (overrides --arch); per-arch results land "
+                         "under 'runs' + check_bench-compatible 'rows'")
     ap.add_argument("--out", default="BENCH_analog_train.json")
     args = ap.parse_args(argv)
     _pre_init_mesh_flag(argv)  # no-op unless argv was passed explicitly
@@ -198,53 +215,69 @@ def main(argv=None):
     if args.seq is None:
         args.seq = 16 if args.smoke else 256
 
-    cfg = bench_config(args)
-    stream = make_token_stream(
-        max(200_000, args.steps * args.batch * (args.seq + 1) + 1),
-        cfg.vocab, seed=args.seed)
-
     d, m = (int(x) for x in args.mesh.split("x"))
     mesh = None
     if d * m > 1:
         from repro.launch.mesh import make_mesh
         mesh = make_mesh((d, m), ("data", "model"))
 
-    analog = run_analog(cfg, stream, args, mesh=mesh)
-    numeric = run_numeric(cfg, stream, args)
-    parity = parity_check(cfg, args)
+    archs = [a for a in (args.configs or args.arch).split(",") if a]
+    runs, rows = {}, []
+    for arch in archs:
+        cfg = bench_config(args, arch)
+        stream = make_token_stream(
+            max(200_000, args.steps * args.batch * (args.seq + 1) + 1),
+            cfg.vocab, seed=args.seed)
+        analog = run_analog(cfg, stream, args, mesh=mesh)
+        numeric = run_numeric(cfg, stream, args)
+        parity = parity_check(cfg, args)
+        runs[arch] = {
+            "arch": cfg.name, "family": cfg.family,
+            "tok_per_s": analog["tok_per_s"],
+            "sim_gmacs_per_s": analog["sim_gmacs_per_s"],
+            "analog_loss": analog["loss"],
+            "numeric_loss": numeric["loss"],
+            "analog_wall_s": analog["wall_s"],
+            "numeric_wall_s": numeric["wall_s"],
+            "analog_compiles": analog["compiles"],
+            "g_rail_frac": analog["g_rail_frac"],
+            "cost": analog["cost"],
+            "pj_per_mac": analog["cost"]["pj_per_mac"],
+            "parity_rel_err": parity,
+        }
+        tok_step = args.batch * args.seq
+        rows.append({
+            "name": f"analog_train_step_{cfg.name}",
+            "us_per_call": analog["median_step_us"],
+            "sim_gmacs": sim_gmacs_per_step(cfg, tok_step),
+        })
+        print(f"{cfg.name} analog[{args.device}/{args.bits}b, mesh "
+              f"{args.mesh}]: loss {analog['loss'][0]:.3f} -> "
+              f"{analog['loss'][-1]:.3f} ({analog['wall_s']:.1f}s, "
+              f"compiles={analog['compiles']}, "
+              f"{analog['tok_per_s']:.0f} tok/s, "
+              f"{analog['sim_gmacs_per_s']:.2f} sim-GMAC/s)")
+        print(f"{cfg.name} numeric:          loss "
+              f"{numeric['loss'][0]:.3f} -> {numeric['loss'][-1]:.3f} "
+              f"({numeric['wall_s']:.1f}s)")
+        pj = analog["cost"]["pj_per_mac"]
+        print("projected train energy, pJ/MAC: "
+              + "  ".join(f"{k}={v:.3f}" for k, v in pj.items()))
+        print(f"ideal/16-bit forward parity rel err: {parity:.2e}")
 
+    # legacy single-run layout at the top level (first arch) + runs/rows
     result = {
-        "arch": cfg.name, "smoke": args.smoke, "device": args.device,
+        "smoke": args.smoke, "device": args.device,
         "remat": os.environ.get("REPRO_REMAT", "full"),
         "mesh": args.mesh, "devices": d * m,
         "bits": args.bits, "steps": args.steps,
         "batch": args.batch, "seq": args.seq, "lr": args.lr,
-        "tok_per_s": analog["tok_per_s"],
-        "sim_gmacs_per_s": analog["sim_gmacs_per_s"],
-        "analog_loss": analog["loss"],
-        "numeric_loss": numeric["loss"],
-        "analog_wall_s": analog["wall_s"],
-        "numeric_wall_s": numeric["wall_s"],
-        "analog_compiles": analog["compiles"],
-        "g_rail_frac": analog["g_rail_frac"],
-        "cost": analog["cost"],
-        "pj_per_mac": analog["cost"]["pj_per_mac"],
-        "parity_rel_err": parity,
+        **runs[archs[0]],
+        "runs": runs,
+        "rows": rows,
     }
     with open(args.out, "w") as f:
         json.dump(result, f, indent=1)
-
-    print(f"analog[{args.device}/{args.bits}b, mesh {args.mesh}]: "
-          f"loss {analog['loss'][0]:.3f} -> {analog['loss'][-1]:.3f} "
-          f"({analog['wall_s']:.1f}s, compiles={analog['compiles']}, "
-          f"{analog['tok_per_s']:.0f} tok/s, "
-          f"{analog['sim_gmacs_per_s']:.2f} sim-GMAC/s)")
-    print(f"numeric:          loss {numeric['loss'][0]:.3f} -> "
-          f"{numeric['loss'][-1]:.3f} ({numeric['wall_s']:.1f}s)")
-    pj = analog["cost"]["pj_per_mac"]
-    print("projected train energy, pJ/MAC: "
-          + "  ".join(f"{k}={v:.3f}" for k, v in pj.items()))
-    print(f"ideal/16-bit forward parity rel err: {parity:.2e}")
     print(f"wrote {args.out}")
     return result
 

@@ -65,6 +65,11 @@ def main(argv=None) -> int:
 
     base = load_rows(args.baseline)
     fresh = load_rows(args.fresh)
+    if not fresh:
+        # A bench that produced NO usable rows is a broken bench, not a
+        # retired row set — passing here would silently disable the gate.
+        print("bench gate FAILED: fresh file has no usable rows")
+        return 1
     shared = sorted(set(base) & set(fresh))
     if not shared:
         print("bench gate: no shared rows — nothing to compare")

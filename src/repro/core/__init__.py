@@ -8,10 +8,12 @@ from . import endurance
 from .device import (IDEAL, LINEARIZED, TAOX, TAOX_NONOISE, DeviceConfig,
                      LutDevice, VoltageModel, apply_update,
                      lut_from_analytic, lut_from_pulse_train)
+from . import analog_registry
 from .tiled_analog import (DEVICE_MODELS, analog_project,
-                           crossbar_from_model, is_analog_container,
-                           merge_tapes, program_linear, split_tapes,
-                           tile_info, with_tapes)
+                           analog_project_batched, crossbar_from_model,
+                           is_analog_container, merge_tapes, pop_tapes,
+                           program_linear, program_stacked, push_tapes,
+                           split_tapes, tile_info, with_tapes)
 from .periodic_carry import (pc_backward, pc_carry, pc_effective_weights,
                              pc_forward, pc_init, pc_update)
 from .xbar_ops import mvm, outer_update, quantize_update_operands, vmm
@@ -26,7 +28,8 @@ __all__ = [
     "lut_from_pulse_train", "vmm", "mvm", "outer_update",
     "quantize_update_operands", "pc_init", "pc_forward", "pc_backward",
     "pc_update", "pc_carry", "pc_effective_weights", "DEVICE_MODELS",
-    "analog_project", "crossbar_from_model", "is_analog_container",
-    "program_linear", "tile_info", "with_tapes", "split_tapes",
-    "merge_tapes",
+    "analog_project", "analog_project_batched", "analog_registry",
+    "crossbar_from_model", "is_analog_container", "program_linear",
+    "program_stacked", "tile_info", "with_tapes", "split_tapes",
+    "merge_tapes", "pop_tapes", "push_tapes",
 ]

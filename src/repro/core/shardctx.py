@@ -22,6 +22,7 @@ axis, in the same order as on one device.  No partial-sum + all-reduce
 """
 from __future__ import annotations
 
+from contextlib import contextmanager as _contextmanager
 from typing import Optional, Tuple
 
 import jax
@@ -45,6 +46,24 @@ def get_shard_context() -> Tuple[Optional[object], Optional[object], object]:
 
 def current_mesh():
     return _CTX["mesh"]
+
+
+@_contextmanager
+def suspended_shard_context():
+    """Temporarily clear the mesh context during tracing.
+
+    Used around the vmapped per-expert crossbar reads of expert-batched
+    containers: the exact-reduce pins are defined for tile-sharded single
+    arrays and are not meaningful (or batchable) inside ``jax.vmap`` —
+    expert containers parallelise over whole experts instead, and the
+    GSPMD (``exact=False``) read path accepts float-ulp drift anyway.
+    """
+    prev = get_shard_context()
+    clear_shard_context()
+    try:
+        yield
+    finally:
+        set_shard_context(*prev)
 
 
 def replicate_for_exact_reduce(x: jax.Array) -> jax.Array:

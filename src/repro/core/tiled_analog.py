@@ -54,6 +54,7 @@ from .adc import AdcConfig
 from .crossbar import CrossbarConfig, make_reference, tile_grid, \
     weights_to_conductance
 from .device import IDEAL, LINEARIZED, TAOX, TAOX_NONOISE, DeviceConfig
+from .shardctx import suspended_shard_context
 from .xbar_ops import mvm, quantize_update_operands, vmm
 
 Array = jax.Array
@@ -102,6 +103,17 @@ def program_linear(w: Array, cfg: CrossbarConfig,
     return {"g": g, "ref": ref, "w_scale": w_scale}
 
 
+def program_stacked(w: Array, cfg: CrossbarConfig,
+                    w_max: Optional[float] = None) -> dict:
+    """Program a stack of weight matrices — (E, K, N) expert stacks or any
+    deeper lead dims — onto per-matrix tile grids.  Each matrix gets its
+    own calibration (``w_max``/``w_scale``), exactly as if programmed
+    alone: on the hardware every expert owns its own arrays."""
+    if w.ndim == 2:
+        return program_linear(w, cfg, w_max=w_max)
+    return jax.vmap(lambda ww: program_stacked(ww, cfg, w_max=w_max))(w)
+
+
 def is_analog_container(p) -> bool:
     return isinstance(p, dict) and {"g", "ref", "w_scale"} <= set(p)
 
@@ -136,12 +148,45 @@ def _symbolic_zero(x: Array) -> SymbolicZero:
                                              jnp.result_type(x)))
 
 
+def _vmm_any(x: Array, g: Array, ref: Array, w_scale, cfg) -> Array:
+    """VMM for a plain (K, N) container or an expert-batched (E, K, N)
+    stack (x then carries a matching leading dim: one activation batch per
+    expert's array).  The batched read runs with the shard context
+    suspended — each expert's array is read whole on its owner; the
+    GSPMD-exact-reduce pins only apply to tile-sharded single arrays."""
+    if g.ndim == 2:
+        return vmm(x, g, ref, w_scale, cfg)
+    with suspended_shard_context():
+        return jax.vmap(
+            lambda xx, gg, rr, ws: vmm(xx, gg, rr, ws, cfg)
+        )(x, g, ref, w_scale)
+
+
+def _mvm_any(d: Array, g: Array, ref: Array, w_scale, cfg) -> Array:
+    if g.ndim == 2:
+        return mvm(d, g, ref, w_scale, cfg)
+    with suspended_shard_context():
+        return jax.vmap(
+            lambda dd, gg, rr, ws: mvm(dd, gg, rr, ws, cfg)
+        )(d, g, ref, w_scale)
+
+
+def _quantize_operands_any(x: Array, d: Array, cfg):
+    """Write-driver quantisation, per matrix of a batched container: the
+    full-scale calibration of the temporal/voltage coders is per physical
+    array, so each expert quantises against its own operand range."""
+    if x.ndim == 2:
+        return quantize_update_operands(x, d, cfg)
+    return jax.vmap(lambda xx, dd: quantize_update_operands(xx, dd, cfg)
+                    )(x, d)
+
+
 @partial(jax.custom_vjp, nondiff_argnums=(6,))
 def _taped_matmul(g: Array, ref: Array, w_scale: Array,
                   x_tape: Array, d_tape: Array, x: Array,
                   cfg: CrossbarConfig) -> Array:
     del x_tape, d_tape
-    return vmm(x, g, ref, w_scale, cfg)
+    return _vmm_any(x, g, ref, w_scale, cfg)
 
 
 def _taped_fwd(g, ref, w_scale, x_tape, d_tape, x, cfg):
@@ -149,7 +194,7 @@ def _taped_fwd(g, ref, w_scale, x_tape, d_tape, x, cfg):
     # CustomVJPPrimal(value, perturbed); the tapes' values are never read.
     del x_tape, d_tape
     g, ref, w_scale, x = g.value, ref.value, w_scale.value, x.value
-    y = vmm(x, g, ref, w_scale, cfg)
+    y = _vmm_any(x, g, ref, w_scale, cfg)
     return y, (g, ref, w_scale, x)
 
 
@@ -160,12 +205,12 @@ def _taped_bwd(cfg, res, dy):
     dy32 = dy.astype(jnp.float32)
     # Error backprop: transpose read of the SAME (quantised, saturated,
     # ADC'd) conductances the forward pass saw.
-    dx = mvm(dy32, g, ref, w_scale, cfg)
+    dx = _mvm_any(dy32, g, ref, w_scale, cfg)
     # The write drivers' operands, quantised exactly as the hardware does
     # (rows: temporal code, columns: voltage code).  They flow out through
     # the tape leaves; g/ref/w_scale get *symbolic* zero cotangents — the
     # dense (K, N) gradient is never formed, not even as a zeros fill.
-    x_q, d_q = quantize_update_operands(x.astype(jnp.float32), dy32, cfg)
+    x_q, d_q = _quantize_operands_any(x.astype(jnp.float32), dy32, cfg)
     return (_symbolic_zero(g), _symbolic_zero(ref), _symbolic_zero(w_scale),
             x_q, d_q, dx.astype(x.dtype))
 
@@ -200,7 +245,66 @@ def analog_project(p: dict, x: Array, cfg: CrossbarConfig) -> Array:
     return y.reshape(*lead, n).astype(x.dtype)
 
 
-def make_tapes(p: dict, n_tokens: int) -> dict:
+def analog_project_batched(p: dict, x: Array, cfg: CrossbarConfig) -> Array:
+    """Apply an expert-batched container (g: (E, K, N)) to expert-batched
+    activations x: (E, T, K) -> (E, T, N).
+
+    Each expert's matrix is its own physical tile grid reading its own
+    dispatch rows — one application of the whole stack per step, so the
+    tape leaves ((E, T, K)/(E, T, N)) carry exactly the per-expert write
+    operands and the stack updates as extra layers of the layer-batched
+    rank-k write (``core.analog_registry.flatten_lead``).
+    """
+    e, k, n = p["g"].shape
+    if x.shape[0] != e or x.shape[-1] != k:
+        raise ValueError(f"expert-batched x {x.shape} does not match "
+                         f"container {p['g'].shape}")
+    x_tape = p.get("x_tape")
+    d_tape = p.get("d_tape")
+    if x_tape is None:
+        x_tape = jnp.zeros(x.shape, jnp.float32)
+    if d_tape is None:
+        d_tape = jnp.zeros((e, x.shape[1], n), jnp.float32)
+    y = _taped_matmul(p["g"], p["ref"], p["w_scale"], x_tape, d_tape,
+                      x.astype(jnp.float32), cfg)
+    return y.astype(x.dtype)
+
+
+def pop_tapes(params):
+    """Strip the tape leaves off every container in a (sub)tree.
+
+    Returns ``(clean, tapes, found)``: ``clean`` is the tree without
+    x_tape/d_tape, ``tapes`` mirrors it with ``{"x_tape", "d_tape"}``
+    dicts at container sites (empty dicts elsewhere), ``found`` says
+    whether any tape leaf existed.  Used by the hybrid stack to turn the
+    shared block's per-application tape dim into scan xs — each group
+    boundary consumes its own slice (:func:`push_tapes`) so a weight set
+    applied G times per step tapes G distinct operand blocks.
+    """
+    if is_analog_container(params):
+        tapes = {k: params[k] for k in ("x_tape", "d_tape") if k in params}
+        clean = {k: v for k, v in params.items()
+                 if k not in ("x_tape", "d_tape")}
+        return clean, tapes, bool(tapes)
+    if isinstance(params, dict):
+        out = {k: pop_tapes(v) for k, v in params.items()}
+        return ({k: v[0] for k, v in out.items()},
+                {k: v[1] for k, v in out.items()},
+                any(v[2] for v in out.values()))
+    return params, {}, False
+
+
+def push_tapes(params, tapes):
+    """Inverse of :func:`pop_tapes`: re-inject (sliced) tape leaves next
+    to their containers."""
+    if is_analog_container(params):
+        return {**params, **tapes}
+    if isinstance(params, dict):
+        return {k: push_tapes(v, tapes.get(k, {})) for k, v in params.items()}
+    return params
+
+
+def make_tapes(p: dict, n_tokens) -> dict:
     """Zero tape *slots* for one container (shapes (T, K) / (T, N)).
 
     Tape lifecycle: the train step allocates these slots (inside jit they
@@ -211,28 +315,44 @@ def make_tapes(p: dict, n_tokens: int) -> dict:
     consumes those cotangents as the drive operands of the fused parallel
     write (``kernels/xbar_update.py``).  One allocation site, one writer,
     one consumer.
+
+    ``n_tokens`` may be a tuple: the operand-row shape between the
+    container's own lead dims and the feature dim — ``(T,)`` for the
+    ordinary once-per-step application, ``(reps, T)`` for a weight set
+    applied ``reps`` times per step (the hybrid shared block), or the
+    per-expert ``(capacity,)`` of an expert-batched container (see
+    ``core.analog_registry.tape_lead``).
     """
     k, n = p["g"].shape[-2:]
     lead = p["g"].shape[:-2]  # scan-stacked containers carry (L, K, N)
-    return {"x_tape": jnp.zeros((*lead, n_tokens, k), jnp.float32),
-            "d_tape": jnp.zeros((*lead, n_tokens, n), jnp.float32)}
+    rows = n_tokens if isinstance(n_tokens, tuple) else (n_tokens,)
+    return {"x_tape": jnp.zeros((*lead, *rows, k), jnp.float32),
+            "d_tape": jnp.zeros((*lead, *rows, n), jnp.float32)}
 
 
-def with_tapes(params, n_tokens: int):
+def with_tapes(params, n_tokens: int, tokens_for=None, path=()):
     """Recursively inject tape leaves next to every analog container.
+
+    ``tokens_for(path, g_shape)`` optionally resolves the per-container
+    operand-row shape (expert capacity, shared-block reps); the default is
+    ``n_tokens`` rows everywhere, which is correct for trees whose every
+    container is applied once to the full token batch.
 
     Prefer :func:`split_tapes` in training code — differentiating a
     ``with_tapes`` tree asks for cotangents of every g/ref/w_scale leaf,
     which ``jax.grad`` then instantiates as dense zeros at the boundary.
     """
     if is_analog_container(params):
-        return {**params, **make_tapes(params, n_tokens)}
+        rows = tokens_for(path, params["g"].shape) if tokens_for \
+            else n_tokens
+        return {**params, **make_tapes(params, rows)}
     if isinstance(params, dict):
-        return {k: with_tapes(v, n_tokens) for k, v in params.items()}
+        return {k: with_tapes(v, n_tokens, tokens_for, path + (k,))
+                for k, v in params.items()}
     return params
 
 
-def split_tapes(params, n_tokens: int):
+def split_tapes(params, n_tokens: int, tokens_for=None, path=()):
     """Partition a parameter tree for the hoisted analog gradient.
 
     Returns ``(diff, frozen)``: ``diff`` carries every digital leaf plus,
@@ -243,12 +363,20 @@ def split_tapes(params, n_tokens: int):
     conductance cotangent — the grads tree holds exactly the tapes and the
     digital gradients, and no (K, N) zero array exists even at the jaxpr
     level (the taped VJP emits symbolic zeros internally).
+
+    ``tokens_for``: per-container operand-row resolver, as in
+    :func:`with_tapes` — the analog train step passes the registry's
+    family-aware resolver so MoE expert tapes are capacity-sized and the
+    hybrid shared block tapes one slot per group application.
     """
     if is_analog_container(params):
-        return (make_tapes(params, n_tokens),
+        rows = tokens_for(path, params["g"].shape) if tokens_for \
+            else n_tokens
+        return (make_tapes(params, rows),
                 {k: params[k] for k in ("g", "ref", "w_scale")})
     if isinstance(params, dict):
-        split = {k: split_tapes(v, n_tokens) for k, v in params.items()}
+        split = {k: split_tapes(v, n_tokens, tokens_for, path + (k,))
+                 for k, v in params.items()}
         return ({k: v[0] for k, v in split.items()},
                 {k: v[1] for k, v in split.items()})
     return params, None

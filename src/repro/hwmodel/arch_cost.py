@@ -8,15 +8,23 @@ embeddings excluded) maps onto 1024x1024 differential crossbar tiles;
 activation-activation compute (QK^T, PV, the SSD scan, softmax/norms)
 stays on the digital core and is charged at the synthesized MAC cost.
 
+The projection inventory is derived from the ACTUAL parameter tree via
+the family-agnostic analog registry (``core/analog_registry``), so the
+cost roll-up cannot drift from the model code — and in device mode a
+matrix the registry cannot place raises instead of silently being
+charged as digital.
+
 Honest accounting included:
   * tile padding waste (a 2560x6912 layer occupies 3x7 tiles),
   * MoE: only active experts fire (energy) but all experts occupy area,
+  * hybrid shared blocks: one weight set, G applications per token,
   * attention/scan digital MACs at 1.46 pJ (paper §IV.J),
   * training charges VMM + MVM + OPU per projection; inference VMM only.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 import math
 from typing import Dict, List, Optional
 
@@ -35,100 +43,79 @@ class Projection:
     k: int
     n: int
     count: int = 1          # instances per model (layers folded in)
-    active: float = 1.0     # fraction firing per token (MoE top-k)
+    active: float = 1.0     # applications per token: MoE top-k fraction
+    #                         (< 1), hybrid shared-block reuse (> 1)
 
 
+@functools.lru_cache(maxsize=None)
 def model_projections(cfg: ModelConfig) -> List[Projection]:
-    d, hd = cfg.d_model, cfg.resolved_head_dim
+    """Every weight-stationary matmul of the model, enumerated from the
+    ACTUAL parameter tree (``jax.eval_shape`` of ``init_params`` — shapes
+    only, nothing is allocated) and classified by the analog registry.
+
+    Deriving from the tree instead of re-implementing per-family shape
+    arithmetic keeps the cost roll-up structurally in sync with the
+    model code: fused layouts (wqkv, w_upgate, the fused cross-attention
+    array), MoE expert stacks (count = layers x experts, ``active`` =
+    top-k fraction), SSD in/out projections, and the hybrid shared block
+    (count = 1, ``active`` = applications per token) are all counted
+    exactly as built.
+
+    A matrix the registry can classify neither as a crossbar projection
+    nor as a digital-core parameter is an error **in device mode** —
+    silently charging it as digital would under-report tiles and energy
+    (the historical failure mode of the hand-written enumeration).  In
+    digital/fakequant projections it is skipped with the same semantics
+    as before.
+    """
+    import jax
+
+    from repro.core import analog_registry as registry
+    from repro.core.tiled_analog import is_analog_container
+    from repro.models import model as M
+
+    params = jax.eval_shape(
+        lambda: M.init_params(jax.random.PRNGKey(0), cfg))
     ps: List[Projection] = []
-    L = cfg.n_layers
+    unknown: List[str] = []
 
-    def attn(prefix: str, count: int, d_in: int = None,
-             fused: bool = True):
-        # mirror models/layers.attn_init: self-attention programs q/k/v on
-        # one column-concatenated array; cross-attention keeps them split
-        di = d_in or d
-        if fused:
-            ps.append(Projection(
-                f"{prefix}.wqkv", di,
-                (cfg.n_heads + 2 * cfg.n_kv_heads) * hd, count))
+    def emit(path, shape):
+        kind = registry.classify_param(path)
+        if kind == "digital":
+            return
+        if kind is None:
+            unknown.append("/".join(path) + f" {tuple(shape)}")
+            return
+        k, n = shape[-2:]
+        count = int(math.prod(shape[:-2])) if len(shape) > 2 else 1
+        active = 1.0
+        if kind == registry.EXPERT_BATCHED and cfg.n_experts:
+            active = cfg.top_k / cfg.n_experts
         else:
-            ps.append(Projection(f"{prefix}.wq", di, cfg.n_heads * hd,
-                                 count))
-            ps.append(Projection(f"{prefix}.wk", di,
-                                 cfg.n_kv_heads * hd, count))
-            ps.append(Projection(f"{prefix}.wv", di,
-                                 cfg.n_kv_heads * hd, count))
-        ps.append(Projection(f"{prefix}.wo", cfg.n_heads * hd, d, count))
+            active = float(registry.tape_reps(path, cfg))
+        ps.append(Projection("/".join(path), int(k), int(n), count,
+                             active=active))
 
-    if cfg.family in ("ssm", "hybrid"):
-        d_in = cfg.ssm_expand * d
-        h = d_in // cfg.ssm_head_dim
-        proj_out = 2 * d_in + 2 * cfg.ssm_groups * cfg.ssm_state + h
-        ps.append(Projection("ssm.in_proj", d, proj_out, L))
-        ps.append(Projection("ssm.out_proj", d_in, d, L))
-        if cfg.attn_every:
-            n_groups = L // cfg.attn_every
-            ps.append(Projection("shared.in", 2 * d, d, 1))
-            attn("shared.attn", 1)
-            shared_up = ("shared.ffn.upgate", d, 2 * cfg.d_ff) \
-                if cfg.gated else ("shared.ffn.up", d, cfg.d_ff)
-            for nm, kk, nn in (shared_up,
-                               ("shared.ffn.down", cfg.d_ff, d)):
-                ps.append(Projection(nm, kk, nn, 1))
-        return ps
+    def walk(p, path):
+        if is_analog_container(p):
+            emit(path, p["g"].shape)
+            return
+        if isinstance(p, dict):
+            if set(p) == {"w"}:
+                emit(path, p["w"].shape)
+                return
+            for key, v in p.items():
+                walk(v, path + (str(key),))
+            return
+        if getattr(p, "ndim", 0) >= 2:
+            emit(path, p.shape)
 
-    n_self = L
-    if cfg.cross_attn_every:
-        n_cross = L // cfg.cross_attn_every
-        n_self = L - n_cross
-        attn("cross", n_cross, fused=False)
-        cross_up = ("cross.ffn.upgate", d, 2 * cfg.d_ff) if cfg.gated \
-            else ("cross.ffn.up", d, cfg.d_ff)
-        for nm, kk, nn in (cross_up,
-                           ("cross.ffn.down", cfg.d_ff, d)):
-            ps.append(Projection(nm, kk, nn, n_cross))
-    if cfg.use_mla:
-        qk = cfg.qk_nope_dim + cfg.qk_rope_dim
-        ps.append(Projection("mla.wq", d, cfg.n_heads * qk, n_self))
-        ps.append(Projection("mla.wkv_a", d,
-                             cfg.kv_lora_rank + cfg.qk_rope_dim, n_self))
-        ps.append(Projection("mla.wkv_b", cfg.kv_lora_rank,
-                             cfg.n_heads * (cfg.qk_nope_dim
-                                            + cfg.v_head_dim), n_self))
-        ps.append(Projection("mla.wo", cfg.n_heads * cfg.v_head_dim, d,
-                             n_self))
-    else:
-        attn("attn", n_self)
-    if cfg.n_encoder_layers:
-        attn("enc.attn", cfg.n_encoder_layers)
-        enc_up = ("enc.ffn.upgate", d, 2 * cfg.d_ff) if cfg.gated \
-            else ("enc.ffn.up", d, cfg.d_ff)
-        for nm, kk, nn in (enc_up,
-                           ("enc.ffn.down", cfg.d_ff, d)):
-            ps.append(Projection(nm, kk, nn, cfg.n_encoder_layers))
-
-    # mirror models/layers.ffn_init: gated FFNs program up+gate on one
-    # double-width array sharing the row drives
-    ffn_names = (("upgate", 2 * cfg.d_ff),) if cfg.gated \
-        else (("up", cfg.d_ff),)
-    if cfg.n_experts:
-        ffe = cfg.d_ff_expert or cfg.d_ff
-        act_frac = cfg.top_k / cfg.n_experts
-        for nm, nn in (("up", ffe), ("gate", ffe)):
-            ps.append(Projection(f"moe.{nm}", d, nn,
-                                 n_self * cfg.n_experts, active=act_frac))
-        ps.append(Projection("moe.down", ffe, d, n_self * cfg.n_experts,
-                             active=act_frac))
-        if cfg.n_shared_experts:
-            sff = cfg.n_shared_experts * ffe
-            for nm, nn in (("up", sff), ("gate", sff)):
-                ps.append(Projection(f"moe.shared.{nm}", d, nn, n_self))
-            ps.append(Projection("moe.shared.down", sff, d, n_self))
-    else:
-        for nm, nn in ffn_names:
-            ps.append(Projection(f"ffn.{nm}", d, nn, n_self))
-        ps.append(Projection("ffn.down", cfg.d_ff, d, n_self))
+    walk(params, ())
+    if unknown and cfg.analog_training:
+        raise ValueError(
+            "device-mode cost roll-up cannot classify these matrices "
+            "(counting them as digital would under-report tiles/energy): "
+            f"{unknown}")
     return ps
 
 

@@ -14,7 +14,11 @@ Grid layout
 leading *layer* grid dimension so one ``pallas_call`` sweeps a whole
 scan-stacked ``(L, K, N)`` parameter container (every projection of every
 transformer layer) instead of launching L kernels from a Python loop and
-re-stacking the results.  Per-layer scalars (the folded ``-lr * w_scale``
+re-stacking the results.  Containers with richer lead dims ride the same
+grid: the registry (``core/analog_registry.flatten_lead``) flattens an
+MoE expert stack ``(L, E, K, N)`` expert-outermost onto the layer axis —
+the rank-k write of layers x experts is still one launch — and collapses
+the per-application tape dim of reused weight sets into the batch axis.  Per-layer scalars (the folded ``-lr * w_scale``
 and the PRNG seed) ride in as (L, 1)/(1, 1) blocks indexed by the layer
 grid coordinate.  The output block doubles as the outer-product accumulator
 until the last batch step, when the device epilogue transforms it into the

@@ -24,15 +24,10 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 import os
 
 from repro.configs.base import ModelConfig
+from repro.core import analog_registry as registry
+from repro.core.analog_registry import ANALOG_LEAVES  # noqa: F401  (re-export)
 
 from .mesh import dp_axes
-
-#: Leaf names of a tiled-crossbar container (plus its in-step tape slots).
-ANALOG_LEAVES = ("g", "ref", "w_scale", "x_tape", "d_tape")
-#: Projections that are TP row-parallel consumers: their *row* (K) tiles
-#: follow the model axis and their column (N) tiles the FSDP axes, so the
-#: analog split mirrors the digital spec2d("model", dp) rule.
-_ROW_PARALLEL = ("wo", "w_down", "out_proj")
 
 
 def _axis_size(mesh, names) -> int:
@@ -75,41 +70,42 @@ def _tile_fit(mesh, dim: int, names, tile: int):
     return None
 
 
-def _analog_row_parallel(sp) -> bool:
-    """Whether the projection owning this container is a TP row-parallel
-    consumer (its K tiles take the model axis) — from the path keys."""
-    proj = next((str(k) for k in reversed(sp)
-                 if str(k) not in ANALOG_LEAVES), "")
-    return proj in _ROW_PARALLEL
+#: Logical-axis names of the registry's container layouts -> mesh axes.
+#: "ep" (the expert dim) consumes the model axis, mirroring the digital
+#: EP rule; "fsdp" resolves to the (pod, data) axes of the mesh.
+def _logical_axes(mesh, logical):
+    if logical is None:
+        return None
+    if logical in ("tp", "ep"):
+        return "model"
+    if logical == "fsdp":
+        return dp_axes(mesh)
+    raise KeyError(logical)
 
 
 def analog_container_pspec(sp, shape, cfg: ModelConfig, mesh,
                            leaf: str) -> P:
     """PartitionSpec for one leaf of a tiled-crossbar container.
 
-    Tile grid split (docs/sharding.md §Analog containers): column-tiles
-    over ``model`` and row-tiles over the FSDP axes for column-parallel
-    producers (wqkv, w_upgate, wq/wk/wv, wkv_b, ...); flipped for
-    row-parallel consumers (wo, w_down, out_proj) so the analog layout
-    mirrors the TP split of the digital weight.  The layer dim of a
-    scan-stacked container is never sharded (it is the scan axis — a
-    sharded L would gather a full (K, N) block every scan step), and
-    ``w_scale`` is replicated.  Tape slots follow their container: x_tape
-    shards its K like g's rows, d_tape its N like g's columns.
+    The *policy* lives in ``core.analog_registry.leaf_layout`` — per-dim
+    (logical axis, tile granularity) derived from the container's path
+    (consumer kind): column-tiles over ``model`` and row-tiles over the
+    FSDP axes for column-parallel producers, flipped for row-parallel
+    consumers (wo, w_down, out_proj), and for expert-batched containers
+    the expert dim over ``model`` (EP) with row-tiles over FSDP and
+    columns replicated.  This function only translates logical axes onto
+    the concrete mesh, degrading any dim that does not divide at
+    whole-tile granularity to replication (:func:`_tile_fit`).  The layer
+    dim of a scan-stacked container is never sharded (it is the scan
+    axis); ``w_scale`` follows its container's lead dims (per-expert
+    scales live with their experts).  Tape slots follow their container:
+    x_tape shards its K like g's rows, d_tape its N like g's columns.
     """
     rows, cols = cfg.analog_rows, cfg.analog_cols
-    dp = dp_axes(mesh)
-    row_axes, col_axes = (("model", dp) if _analog_row_parallel(sp)
-                          else (dp, "model"))
-    lead = [None] * (len(shape) - 2)
-    if leaf in ("g", "ref"):
-        return P(*lead, _tile_fit(mesh, shape[-2], row_axes, rows),
-                 _tile_fit(mesh, shape[-1], col_axes, cols))
-    if leaf == "x_tape":            # (..., T, K): K follows g's row split
-        return P(*lead, None, _tile_fit(mesh, shape[-1], row_axes, rows))
-    if leaf == "d_tape":            # (..., T, N): N follows g's col split
-        return P(*lead, None, _tile_fit(mesh, shape[-1], col_axes, cols))
-    return P(*([None] * len(shape)))        # w_scale: replicated
+    kind = registry.classify(sp)
+    layout = registry.leaf_layout(kind, len(shape), leaf, rows, cols)
+    return P(*[_tile_fit(mesh, dim, _logical_axes(mesh, logical), tile)
+               for dim, (logical, tile) in zip(shape, layout)])
 
 
 def analog_update_specs(path: Tuple[str, ...], g_shape, cfg: ModelConfig,
@@ -117,23 +113,25 @@ def analog_update_specs(path: Tuple[str, ...], g_shape, cfg: ModelConfig,
     """PartitionSpecs for the shard_map'd rank-k write of one container.
 
     ``path`` is the container's key path in the parameter tree (used to
-    pick the producer/consumer orientation); ``g_shape`` the (possibly
-    scan-stacked) conductance shape.  Returns specs for g (also ref), the
-    two tape operands and the per-layer scale, all tile-aligned so every
-    shard owns whole tiles and the outer-product contraction (over tokens)
-    stays local.
+    pick the registry consumer kind); ``g_shape`` the (possibly
+    scan-stacked / expert-batched) conductance shape.  Returns specs for g
+    (also ref), the two tape operands, the per-layer scale and the
+    container's ``w_scale``, all tile-aligned so every shard owns whole
+    tiles and the outer-product contraction (over tokens) stays local.
     """
     sp = list(path)
     lead = g_shape[:-2]
     k, n = g_shape[-2:]
     tapes_lead = (*lead, 1)  # (L, T, ...) / (T, ...): T never sharded
+    w_scale_spec = analog_container_pspec(sp, lead, cfg, mesh, "w_scale")
     return {
         "g": analog_container_pspec(sp, g_shape, cfg, mesh, "g"),
         "x_tape": analog_container_pspec(sp, (*tapes_lead, k), cfg, mesh,
                                          "x_tape"),
         "d_tape": analog_container_pspec(sp, (*tapes_lead, n), cfg, mesh,
                                          "d_tape"),
-        "scale": P(*([None] * len(lead))),
+        "scale": w_scale_spec,
+        "w_scale": w_scale_spec,
     }
 
 

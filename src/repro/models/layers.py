@@ -21,8 +21,9 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core import AdcConfig
 from repro.core.adc import quantize_dequantize
-from repro.core.tiled_analog import (analog_project, crossbar_from_model,
-                                     is_analog_container, program_linear,
+from repro.core.tiled_analog import (analog_project, analog_project_batched,
+                                     crossbar_from_model,
+                                     is_analog_container, program_stacked,
                                      readout)
 
 Array = jax.Array
@@ -98,9 +99,11 @@ def embed_init(key: Array, vocab: int, d: int) -> Array:
 
 def proj_from_weights(w: Array, cfg: ModelConfig) -> dict:
     """Wrap explicit weights as projection params (digital dict, or the
-    weights programmed onto a tiled-crossbar container in device mode)."""
+    weights programmed onto a tiled-crossbar container in device mode).
+    Stacked weights — e.g. an (E, K, N) expert stack — program one tile
+    grid (and one calibration) per matrix."""
     if cfg.analog_training:
-        return program_linear(w, crossbar_from_model(cfg))
+        return program_stacked(w, crossbar_from_model(cfg))
     return {"w": w}
 
 
@@ -172,6 +175,20 @@ def project(p: dict, x: Array, cfg: ModelConfig) -> Array:
     return y.astype(x.dtype)
 
 
+def expert_project(p, x: Array, cfg: ModelConfig) -> Array:
+    """Expert-batched linear layer: x (E, T, K) -> (E, T, N).
+
+    ``p`` is either a raw (E, K, N) weight stack (digital / fakequant MoE)
+    or an expert-batched tiled-crossbar container (device mode) — each
+    expert's matrix lives on its own tile grid, read/written with the
+    expert dim riding the layer-batched kernel grid
+    (core/analog_registry).
+    """
+    if is_analog_container(p):
+        return analog_project_batched(p, x, crossbar_from_model(cfg))
+    return jnp.einsum("etk,ekn->etn", x, p.astype(x.dtype))
+
+
 def _adc_fake_quant(q: Array, adc: AdcConfig) -> Array:
     sat = adc.sat_sigmas * jnp.sqrt(
         jnp.mean(jnp.square(q), axis=-1, keepdims=True) + 1e-12)
@@ -209,14 +226,16 @@ def attn_init(key: Array, cfg: ModelConfig, d_in: Optional[int] = None,
               fused: bool = True) -> dict:
     """Attention projections.
 
-    ``fused=True`` (self-attention, the default) lays q/k/v out on ONE
-    column-concatenated projection ``wqkv`` — the same init draws as the
-    unfused layout, stacked side by side.  One matmul (one crossbar VMM
-    sweep, one MVM backward, one wide rank-k parallel write) drives all
-    three heads' worth of columns; on the simulated hardware this is
-    exactly a wider array sharing the same row drives.  Cross-attention
-    (q from x, k/v from another stream) needs separate containers: pass
-    ``fused=False``.
+    ``fused=True`` (the default) lays q/k/v out on ONE column-concatenated
+    projection ``wqkv`` — the same init draws as the unfused layout,
+    stacked side by side.  One matmul (one crossbar VMM sweep, one MVM
+    backward, one wide rank-k parallel write) drives all three heads'
+    worth of columns; on the simulated hardware this is exactly a wider
+    array sharing the same row drives.  Cross-attention (q from x, k/v
+    from another stream of the same width) uses the same wide array: both
+    token streams drive it in a single application and each stream keeps
+    its own column block (see ``attention``).  ``fused=False`` keeps the
+    legacy split layout (one container per projection).
     """
     d = d_in or cfg.d_model
     hd = cfg.resolved_head_dim
@@ -351,12 +370,27 @@ def attention(p: dict, x: Array, cfg: ModelConfig, *, causal: bool = True,
     b, sq = x.shape[0], x.shape[1]
     append = cache is not None and x_kv is None and (
         sq == 1 or positions is not None)
-    if "wqkv" in p:  # fused self-attention projection (one VMM sweep)
+    if "wqkv" in p:  # fused projection (one VMM sweep)
         nq, nkv = cfg.n_heads * hd, cfg.n_kv_heads * hd
-        qkv = project(p["wqkv"], x, cfg)
-        q = _split_heads(qkv[..., :nq], cfg.n_heads)
-        k_self = _split_heads(qkv[..., nq:nq + nkv], cfg.n_kv_heads)
-        v_self = _split_heads(qkv[..., nq + nkv:], cfg.n_kv_heads)
+        if x_kv is None:
+            qkv = project(p["wqkv"], x, cfg)
+            q = _split_heads(qkv[..., :nq], cfg.n_heads)
+            k_self = _split_heads(qkv[..., nq:nq + nkv], cfg.n_kv_heads)
+            v_self = _split_heads(qkv[..., nq + nkv:], cfg.n_kv_heads)
+        else:
+            # Fused cross-attention: ONE wide array serves q (driven by
+            # the x stream) and k/v (driven by the x_kv stream).  Both
+            # streams go through in a single application — concatenated
+            # along tokens — so the taped backward deposits one operand
+            # block per step (a container must not be applied twice); the
+            # unused column blocks of each stream carry zero cotangents
+            # and add nothing to the rank-k write.
+            both = jnp.concatenate([x, x_kv.astype(x.dtype)], axis=1)
+            qkv = project(p["wqkv"], both, cfg)
+            q = _split_heads(qkv[:, :sq, :nq], cfg.n_heads)
+            k_self = _split_heads(qkv[:, sq:, nq:nq + nkv],
+                                  cfg.n_kv_heads)
+            v_self = _split_heads(qkv[:, sq:, nq + nkv:], cfg.n_kv_heads)
     else:
         q = _split_heads(project(p["wq"], x, cfg), cfg.n_heads)
         k_self = v_self = None
@@ -385,7 +419,7 @@ def attention(p: dict, x: Array, cfg: ModelConfig, *, causal: bool = True,
             o = _cached_sdpa(q, k, v, positions)
         new_cache = {"k": k, "v": v, "len": idx + sq}
     else:
-        if k_self is not None and x_kv is None:
+        if k_self is not None:
             k, v = k_self, v_self
         else:
             k = _split_heads(project(p["wk"], kv_src, cfg),

@@ -42,18 +42,23 @@ def init_params(key: Array, cfg: ModelConfig) -> dict:
     return tf.decoder_init(key, cfg)
 
 
-def readout_digital(params, cfg: ModelConfig):
+def readout_digital(params, cfg: ModelConfig, path=()):
     """Serial read of an analog-device model back to digital weights.
 
-    Walks the parameter tree and converts every tiled-crossbar container to
-    a plain ``{"w": (g - ref) / w_scale}`` dict, so the same checkpoint can
-    be evaluated (or fine-tuned) with ``cfg.replace(analog=False)``.  A
-    no-op on digital trees.
+    Walks the parameter tree and converts every tiled-crossbar container
+    back to its digital layout — a plain ``{"w": (g - ref) / w_scale}``
+    dict for projections, the raw (E, K, N) weight stack for expert-
+    batched containers (the registry decides which is which) — so the
+    same checkpoint can be evaluated (or fine-tuned) with
+    ``cfg.replace(analog=False)``.  A no-op on digital trees.
     """
+    from repro.core.analog_registry import EXPERT_BATCHED, classify
     if is_analog_container(params):
-        return proj_readout(params, cfg)
+        rd = proj_readout(params, cfg)
+        return rd["w"] if classify(path) == EXPERT_BATCHED else rd
     if isinstance(params, dict):
-        return {k: readout_digital(v, cfg) for k, v in params.items()}
+        return {k: readout_digital(v, cfg, path + (k,))
+                for k, v in params.items()}
     return params
 
 

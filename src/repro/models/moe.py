@@ -16,31 +16,40 @@ from typing import Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core.analog_registry import expert_capacity
+from repro.core.tiled_analog import (crossbar_from_model,
+                                     is_analog_container, readout)
 
-from .layers import dense_init, ffn, ffn_init, project
+from .layers import (dense_init, expert_project, ffn, ffn_init,
+                     proj_from_weights, project)
 
 Array = jax.Array
 
 
 def moe_init(key: Array, cfg: ModelConfig) -> dict:
+    """Router (digital — it gates, it never carries a stationary matmul
+    worth a tile grid) + per-expert FFN matrices.  In analog device mode
+    the expert stacks are programmed onto *expert-batched* tiled-crossbar
+    containers — one tile grid and one calibration per expert, the expert
+    dim riding the layer-batched update kernel grid (PANTHER-style: every
+    stationary weight matrix lives in-array, not just attention/FFN)."""
     ffe = cfg.d_ff_expert or cfg.d_ff
     ks = jax.random.split(key, 4)
     e_keys = jax.random.split(ks[0], 3)
+
+    def estack(k, d_in, d_out):
+        w = jax.vmap(lambda kk: dense_init(kk, d_in, d_out))(
+            jax.random.split(k, cfg.n_experts))
+        return proj_from_weights(w, cfg) if cfg.analog_training else w
+
     p = {
         "router": {"w": dense_init(ks[1], cfg.d_model, cfg.n_experts)},
         "experts": {
-            "w_up": jax.vmap(
-                lambda k: dense_init(k, cfg.d_model, ffe))(
-                jax.random.split(e_keys[0], cfg.n_experts)),
-            "w_gate": jax.vmap(
-                lambda k: dense_init(k, cfg.d_model, ffe))(
-                jax.random.split(e_keys[1], cfg.n_experts)),
-            "w_down": jax.vmap(
-                lambda k: dense_init(k, ffe, cfg.d_model))(
-                jax.random.split(e_keys[2], cfg.n_experts)),
+            "w_up": estack(e_keys[0], cfg.d_model, ffe),
+            "w_gate": estack(e_keys[1], cfg.d_model, ffe),
+            "w_down": estack(e_keys[2], ffe, cfg.d_model),
         },
     }
     if cfg.n_shared_experts:
@@ -50,9 +59,7 @@ def moe_init(key: Array, cfg: ModelConfig) -> dict:
 
 
 def _capacity(n_tokens: int, cfg: ModelConfig) -> int:
-    c = int(np.ceil(cfg.capacity_factor * n_tokens * cfg.top_k
-                    / cfg.n_experts))
-    return max(8, -(-c // 8) * 8)  # pad to a lane-friendly multiple
+    return expert_capacity(n_tokens, cfg)
 
 
 def moe_apply(p: dict, x: Array, cfg: ModelConfig
@@ -65,6 +72,12 @@ def moe_apply(p: dict, x: Array, cfg: ModelConfig
     movement is the expert-dim resharding (the true EP all-to-all), instead
     of global gathers of the (T·k, d) dispatch tensors."""
     groups = int(os.environ.get("REPRO_MOE_GROUPS", "1"))
+    if cfg.analog_training:
+        # Device mode always dispatches globally: the grouped/vmapped
+        # formulations would apply (or batch-trace) each expert container
+        # more than once per step, breaking the one-application tape
+        # contract of core/tiled_analog.
+        return _moe_apply_flat(p, x, cfg)
     if groups > 1 and x.shape[0] % groups == 0:
         if os.environ.get("REPRO_MOE_EXPLICIT"):
             return _moe_apply_grouped(p, x, cfg, groups)
@@ -199,13 +212,15 @@ def _moe_apply_flat(p: dict, x: Array, cfg: ModelConfig
     buf = buf.at[se, pos_w].set(xt[st], mode="drop")
 
     # --- expert FFN, batched over the (shardable) expert dim -----------------
+    # expert_project dispatches: raw (E, d, f) einsum stacks (digital /
+    # fakequant) or expert-batched crossbar containers (device mode —
+    # forward VMM / backward MVM per expert array, capacity-sized tapes).
     ew = p["experts"]
-    up = jnp.einsum("ecd,edf->ecf", buf, ew["w_up"].astype(x.dtype))
-    gate = jnp.einsum("ecd,edf->ecf", buf, ew["w_gate"].astype(x.dtype))
+    up = expert_project(ew["w_up"], buf, cfg)
+    gate = expert_project(ew["w_gate"], buf, cfg)
     act = jax.nn.gelu if cfg.act == "gelu" else jax.nn.silu
     hidden = act(gate) * up
-    out_buf = jnp.einsum("ecf,efd->ecd", hidden,
-                         ew["w_down"].astype(x.dtype))
+    out_buf = expert_project(ew["w_down"], hidden, cfg)
 
     # --- combine -------------------------------------------------------------
     gathered = out_buf[se, pos_w] * (sw * keep.astype(x.dtype))[:, None]
@@ -227,6 +242,9 @@ def moe_dense_reference(p: dict, x: Array, cfg: ModelConfig) -> Array:
     gates = jnp.zeros_like(probs)
     gates = jax.vmap(lambda g, i, v: g.at[i].set(v))(gates, top_i, top_p)
     ew = p["experts"]
+    if is_analog_container(ew["w_up"]):  # serial-read containers (tests)
+        xc = crossbar_from_model(cfg)
+        ew = {k: readout(ew[k], xc) for k in ("w_up", "w_gate", "w_down")}
     act = jax.nn.gelu if cfg.act == "gelu" else jax.nn.silu
     up = jnp.einsum("td,edf->etf", xt, ew["w_up"].astype(xt.dtype))
     gate = jnp.einsum("td,edf->etf", xt, ew["w_gate"].astype(xt.dtype))

@@ -18,7 +18,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 
-from .layers import dense_init, project, rmsnorm, rmsnorm_init
+from .layers import proj_init, project, rmsnorm, rmsnorm_init
 
 Array = jax.Array
 
@@ -34,9 +34,12 @@ def ssm_init(key: Array, cfg: ModelConfig) -> dict:
     d_in, h, n, g = _dims(cfg)
     ks = jax.random.split(key, 6)
     conv_dim = d_in + 2 * g * n
+    # in/out projections go through proj_init so device-mode analog
+    # training programs them onto tiled-crossbar containers like every
+    # other weight-stationary matmul (the conv / A / dt parameters stay on
+    # the digital core — they feed the SSD scan, not a VMM).
     return {
-        "in_proj": {"w": dense_init(
-            ks[0], d, 2 * d_in + 2 * g * n + h)},
+        "in_proj": proj_init(ks[0], d, 2 * d_in + 2 * g * n + h, cfg),
         "conv_w": 0.1 * jax.random.normal(
             ks[1], (cfg.ssm_conv, conv_dim), dtype=jnp.float32),
         "conv_b": jnp.zeros((conv_dim,), dtype=jnp.float32),
@@ -46,7 +49,7 @@ def ssm_init(key: Array, cfg: ModelConfig) -> dict:
             jnp.exp(jax.random.uniform(
                 ks[2], (h,), minval=np.log(1e-3), maxval=np.log(1e-1))))),
         "norm": rmsnorm_init(d_in),
-        "out_proj": {"w": dense_init(ks[3], d_in, d)},
+        "out_proj": proj_init(ks[3], d_in, d, cfg),
     }
 
 

@@ -23,13 +23,14 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.core.tiled_analog import pop_tapes, push_tapes
 
 from . import moe as moe_mod
 from . import ssm as ssm_mod
 from .layers import (
     _chunked_sdpa, _split_heads, attention, attn_init, cdtype, dense_init,
-    embed_init, ffn, ffn_init, mla_attention, mla_init, project, rmsnorm,
-    rmsnorm_init, shard_batch_dim)
+    embed_init, ffn, ffn_init, mla_attention, mla_init, proj_init, project,
+    rmsnorm, rmsnorm_init, shard_batch_dim)
 
 Array = jax.Array
 
@@ -97,8 +98,11 @@ def moe_block(p: dict, x: Array, cfg: ModelConfig, positions, cache):
 
 def cross_block_init(key: Array, cfg: ModelConfig) -> dict:
     k1, k2 = jax.random.split(key)
+    # xattn uses the fused wqkv layout: one wide array driven by both
+    # token streams in a single application (layers.attention) — the last
+    # per-projection sim chains are gone.
     return {"ln1": rmsnorm_init(cfg.d_model),
-            "xattn": attn_init(k1, cfg, fused=False),
+            "xattn": attn_init(k1, cfg),
             "ln2": rmsnorm_init(cfg.d_model), "ffn": ffn_init(k2, cfg),
             "gate_attn": jnp.zeros((), jnp.float32),
             "gate_ffn": jnp.zeros((), jnp.float32)}
@@ -267,7 +271,7 @@ def audio_init(key: Array, cfg: ModelConfig) -> dict:
         return {"ln1": rmsnorm_init(cfg.d_model),
                 "attn": attn_init(k1, cfg),
                 "lnx": rmsnorm_init(cfg.d_model),
-                "xattn": attn_init(k2, cfg, fused=False),
+                "xattn": attn_init(k2, cfg),  # fused wqkv cross-attention
                 "ln2": rmsnorm_init(cfg.d_model),
                 "ffn": ffn_init(k3, cfg)}
 
@@ -317,17 +321,37 @@ def audio_decode(p: dict, tokens: Array, enc, cfg: ModelConfig, *,
         h = h + h1
         # cross-attention with cached K/V
         hn = rmsnorm(lp["lnx"], h, cfg.norm_eps)
-        if enc is None:
-            ck, cv = c["ck"].astype(h.dtype), c["cv"].astype(h.dtype)
-        else:
-            ck = _split_heads(project(lp["xattn"]["wk"], enc, cfg),
-                              cfg.n_kv_heads)
-            cv = _split_heads(project(lp["xattn"]["wv"], enc, cfg),
-                              cfg.n_kv_heads)
-        q = _split_heads(project(lp["xattn"]["wq"], hn, cfg), cfg.n_heads)
+        xp = lp["xattn"]
+        hd = cfg.resolved_head_dim
+        nq, nkv = cfg.n_heads * hd, cfg.n_kv_heads * hd
+        if "wqkv" in xp:
+            # Fused cross-attention: the decoder stream and (at prefill)
+            # the encoder stream drive ONE wide array in a single
+            # application; decode steps project only the decoder token
+            # and read K/V from the cache.
+            if enc is None:
+                ck, cv = c["ck"].astype(h.dtype), c["cv"].astype(h.dtype)
+                q = _split_heads(project(xp["wqkv"], hn, cfg)[..., :nq],
+                                 cfg.n_heads)
+            else:
+                both = jnp.concatenate([hn, enc.astype(hn.dtype)], axis=1)
+                qkv = project(xp["wqkv"], both, cfg)
+                sq = hn.shape[1]
+                q = _split_heads(qkv[:, :sq, :nq], cfg.n_heads)
+                ck = _split_heads(qkv[:, sq:, nq:nq + nkv],
+                                  cfg.n_kv_heads)
+                cv = _split_heads(qkv[:, sq:, nq + nkv:], cfg.n_kv_heads)
+        else:  # legacy split layout
+            if enc is None:
+                ck, cv = c["ck"].astype(h.dtype), c["cv"].astype(h.dtype)
+            else:
+                ck = _split_heads(project(xp["wk"], enc, cfg),
+                                  cfg.n_kv_heads)
+                cv = _split_heads(project(xp["wv"], enc, cfg),
+                                  cfg.n_kv_heads)
+            q = _split_heads(project(xp["wq"], hn, cfg), cfg.n_heads)
         o = _chunked_sdpa(q, ck, cv, causal=False)
-        h = h + project(lp["xattn"]["wo"],
-                        o.reshape(*h.shape[:-1], -1), cfg)
+        h = h + project(xp["wo"], o.reshape(*h.shape[:-1], -1), cfg)
         h = h + ffn(lp["ffn"], rmsnorm(lp["ln2"], h, cfg.norm_eps), cfg)
         new_c = None
         if c is not None:
@@ -357,8 +381,8 @@ def ssm_stack_init(key: Array, cfg: ModelConfig) -> dict:
         p["lm_head"] = {"w": dense_init(ks[2], cfg.d_model, cfg.vocab)}
     if cfg.attn_every:  # zamba2 shared attention block
         kk = jax.random.split(ks[3], 3)
-        p["shared_in"] = {"w": dense_init(kk[0], 2 * cfg.d_model,
-                                          cfg.d_model)}
+        p["shared_in"] = proj_init(kk[0], 2 * cfg.d_model, cfg.d_model,
+                                   cfg)
         p["shared_ln"] = rmsnorm_init(cfg.d_model)
         p["shared_ln2"] = rmsnorm_init(cfg.d_model)
         p["shared_attn"] = attn_init(kk[1], cfg)
@@ -397,21 +421,35 @@ def ssm_stack_apply(p: dict, tokens: Array, cfg: ModelConfig, *,
     else:
         g_states = t_states = None
 
-    def shared_block(h, cache):
+    # The shared block is ONE weight set applied at every group boundary.
+    # Its analog containers therefore tape per *application*: the train
+    # step allocates tapes with a leading (n_groups,) dim
+    # (core/analog_registry.tape_reps), which we peel off here and scan
+    # over, so each group boundary deposits its own write-driver operands
+    # (summed outer products over applications = the rank-k write a
+    # reused array receives).  Inference / digital trees carry no tapes
+    # and take the plain path.
+    shared_p = {"in": p["shared_in"], "attn": p["shared_attn"],
+                "ffn": p["shared_ffn"]}
+    shared_clean, shared_tapes, has_tapes = pop_tapes(shared_p)
+
+    def shared_block(h, cache, tp=None):
+        sp = shared_clean if tp is None else push_tapes(shared_clean, tp)
         h = shard_batch_dim(h)
         inp = jnp.concatenate([h, x0], axis=-1)
-        h_in = inp @ p["shared_in"]["w"].astype(h.dtype)
+        h_in = project(sp["in"], inp, cfg)
         h1, new_cache = attention(
-            p["shared_attn"], rmsnorm(p["shared_ln"], h_in, cfg.norm_eps),
+            sp["attn"], rmsnorm(p["shared_ln"], h_in, cfg.norm_eps),
             cfg, positions=positions, cache=cache)
         h = h + h1
-        h = h + ffn(p["shared_ffn"],
+        h = h + ffn(sp["ffn"],
                     rmsnorm(p["shared_ln2"], h, cfg.norm_eps), cfg)
         return h, new_cache
 
     def group(carry, xs):
         h = carry
-        gp, gs, sc = xs
+        gp, gs, sc = xs[:3]
+        tp = xs[3] if len(xs) > 3 else None
 
         def inner(hh, ixs):
             lp, st = ixs
@@ -419,11 +457,13 @@ def ssm_stack_apply(p: dict, tokens: Array, cfg: ModelConfig, *,
             return hh, new_st
 
         h, new_gs = jax.lax.scan(_remat(inner), h, (gp, gs))
-        h, new_sc = shared_block(h, sc)
+        h, new_sc = shared_block(h, sc, tp)
         return h, (new_gs, new_sc)
 
-    x, (new_g_states, new_shared) = jax.lax.scan(
-        group, x, (grouped, g_states, shared_caches))
+    xs = (grouped, g_states, shared_caches)
+    if has_tapes:
+        xs = xs + (shared_tapes,)
+    x, (new_g_states, new_shared) = jax.lax.scan(group, x, xs)
 
     def inner(hh, ixs):
         lp, st = ixs

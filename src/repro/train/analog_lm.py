@@ -1,4 +1,4 @@
-"""In-situ analog training for the transformer family (scaling the paper's
+"""In-situ analog training for every model family (scaling the paper's
 §VI MLP experiment to real workloads).
 
 One ``AnalogTrainStep`` is the whole training rule, jitted and donated so
@@ -20,8 +20,19 @@ it compiles exactly once and updates conductances in place:
      with write noise generated in-kernel from one scalar seed per
      container (``noise_mode="kernel"``; the legacy pre-generated field
      path stays behind ``noise_mode="host"``),
-  4. digital leaves (embeddings, norms, the logits head) take plain SGD —
-     the paper keeps exactly these on the digital core.
+  4. digital leaves (embeddings, norms, routers, the logits head) take
+     plain SGD — the paper keeps exactly these on the digital core.
+
+The mapping from parameter path to container / tape route / update view
+is the family-agnostic registry (``core/analog_registry.py``): MoE
+expert stacks are expert-batched (L, E, K, N) containers whose expert
+dim flattens onto the kernel's layer grid (one ``pallas_call`` per
+container, capacity-sized per-expert tapes), SSD in/out projections are
+ordinary scan-stacked containers, the hybrid shared block tapes one
+operand slot per group application, and the fused cross-attention array
+is driven by both token streams in one application.  The first call
+audits the tree — an unmapped projection-family matrix raises instead
+of silently training digitally.
 
 The step also carries a hardware cost roll-up: layer shapes joined with
 ``hwmodel/arch_cost`` project the energy/latency of each step on the
@@ -53,6 +64,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core import analog_registry as registry
 from repro.core import shardctx
 from repro.core.tiled_analog import (crossbar_from_model,
                                      is_analog_container, merge_tapes,
@@ -146,6 +158,11 @@ class AnalogTrainStep:
     def __call__(self, state: dict, batch: Dict[str, Array], key: Array
                  ) -> Tuple[dict, Dict[str, Array]]:
         if self.cost is None:
+            # First call: audit the tree — every projection-family matrix
+            # must be a crossbar container (core/analog_registry); a tree
+            # that would train one digitally while claiming analog fails
+            # here, loudly, before any step runs.
+            registry.validate_device_params(state["params"], self.cfg)
             self.cost = train_step_cost(
                 self.cfg, n_tokens=int(batch["tokens"].size),
                 bits=self.bits, ctx_len=batch["tokens"].shape[-1],
@@ -194,6 +211,7 @@ class AnalogTrainStep:
     def _collect_cspecs(self, p, path):
         from repro.launch.sharding import analog_update_specs
         if is_analog_container(p):
+            # p["g"] may be laid out sharded already; .shape is global.
             self._cspecs[path] = (
                 analog_update_specs(path, p["g"].shape, self.cfg,
                                     self.mesh),
@@ -263,8 +281,14 @@ class AnalogTrainStep:
             read_params = self._gather_containers(params, ())
 
         # Hoist g/ref/w_scale out of the differentiated arguments: the grads
-        # tree holds exactly the tape cotangents + digital gradients.
-        diff, frozen = split_tapes(read_params, n_tokens)
+        # tree holds exactly the tape cotangents + digital gradients.  The
+        # registry resolves each container's tape route: capacity-sized
+        # slots per expert, one slot block per application for the hybrid
+        # shared weights, n_tokens rows everywhere else.
+        diff, frozen = split_tapes(
+            read_params, n_tokens,
+            tokens_for=lambda path, shape: registry.tape_lead(
+                path, cfg, n_tokens, batch["tokens"].shape))
         (loss, metrics), grads = jax.value_and_grad(
             lambda d: M.loss_fn(merge_tapes(d, frozen), batch, cfg),
             has_aux=True)(diff)
@@ -276,13 +300,13 @@ class AnalogTrainStep:
             and self.noise_mode == "kernel" else None
         new_params = self._update(params, grads, key, seed_base, (), rail)
         if not rail:
-            # Families whose projections aren't crossbar-mapped yet (ssm /
-            # moe experts) would otherwise train fully digitally while
-            # claiming to be analog — fail loudly instead.
+            # Every family maps through the registry now; an empty rail
+            # means the tree genuinely carries no containers (a digital
+            # tree passed to the analog step) — fail loudly.
             raise ValueError(
                 f"no analog containers in params for family "
-                f"{cfg.family!r}; only crossbar-mapped projections "
-                f"(dense attention/FFN, MLA) support device-mode training")
+                f"{cfg.family!r}; was the state built with "
+                f"analog_mode='device'?")
         out = {"loss": loss, **metrics}
         # fraction of devices pinned at the conductance rails — the
         # leading indicator of window exhaustion (paper §V.A).
@@ -290,16 +314,17 @@ class AnalogTrainStep:
         return {"params": new_params, "step": state["step"] + 1}, out
 
     def _gather_containers(self, p, path):
-        """Reassemble full conductance/reference arrays from local tile
-        blocks for the read path (inside shard_map).  all_gather moves
-        bits, never adds floats — the gathered array is exactly the
+        """Reassemble full conductance/reference/scale arrays from local
+        tile blocks for the read path (inside shard_map).  all_gather
+        moves bits, never adds floats — the gathered array is exactly the
         single-device array."""
         if is_analog_container(p):
-            g_spec = self._cspecs[path][0]["g"]
+            specs = self._cspecs[path][0]
             out = dict(p)
-            for leaf in ("g", "ref"):
+            for leaf, spec_key in (("g", "g"), ("ref", "g"),
+                                   ("w_scale", "w_scale")):
                 x = p[leaf]
-                for d, entry in enumerate(g_spec):
+                for d, entry in enumerate(specs[spec_key]):
                     names = _spec_names(entry)
                     if names:
                         x = _gather_dim(x, names, d)
@@ -321,10 +346,17 @@ class AnalogTrainStep:
 
     def _update_container(self, p, tapes, key, seed_base, path, rail):
         """The paper's Fig. 3c parallel write, fused on the (L, tiles)
-        grid: one kernel sweep per container, scan-stacked or not.  On a
-        mesh each shard writes only the tiles it owns (tape slices local,
-        PRNG counters globally indexed)."""
+        grid: one kernel sweep per container.  The registry flattens the
+        container's lead dims — scan layers, the expert dim of an
+        expert-batched stack (hoisted outermost so an EP shard is a
+        contiguous flattened range), the per-application tape dim of the
+        hybrid shared block (collapsed into the token contraction) — onto
+        the kernel's layer axis, so the write stays ONE ``pallas_call``
+        per container for every family.  On a mesh each shard writes only
+        the tiles it owns (tape slices local, PRNG counters globally
+        indexed)."""
         smap = self.mesh is not None and self.exact
+        kind = registry.classify(path)
         noise = seed = None
         mode = "none"
         if seed_base is not None:
@@ -340,22 +372,22 @@ class AnalogTrainStep:
             * jnp.asarray(p["w_scale"], jnp.float32)
         if smap:
             g_new, railed, total = self._local_block_update(
-                p, tapes, scale, noise, seed, mode, path)
+                p, tapes, scale, noise, seed, mode, path, kind)
             rail.append(railed / total)
         else:
+            g3, x3, d3, s1, n3, unflatten = registry.flatten_lead(
+                kind, p["g"], tapes["x_tape"], tapes["d_tape"], scale,
+                noise)
             if self.mesh is not None:  # GSPMD TP path: nested shard_map
-                from repro.launch.sharding import analog_update_specs
-                specs = analog_update_specs(path, p["g"].shape, self.cfg,
-                                            self.mesh)
-                g_new = xbar_sharded_update(
-                    p["g"], tapes["x_tape"], tapes["d_tape"], scale,
-                    self.xcfg, self.mesh, specs, noise=noise, seed=seed,
-                    noise_mode=mode, impl=self.impl)
+                specs = self._flat_update_specs(path, p["g"].shape, kind)
+                g3_new = xbar_sharded_update(
+                    g3, x3, d3, s1, self.xcfg, self.mesh, specs,
+                    noise=n3, seed=seed, noise_mode=mode, impl=self.impl)
             else:
-                g_new = xbar_outer_update_inline(
-                    p["g"], tapes["x_tape"], tapes["d_tape"], scale,
-                    self.xcfg, noise=noise, seed=seed, noise_mode=mode,
-                    impl=self.impl)
+                g3_new = xbar_outer_update_inline(
+                    g3, x3, d3, s1, self.xcfg, noise=n3, seed=seed,
+                    noise_mode=mode, impl=self.impl)
+            g_new = unflatten(g3_new)
             dev = self.xcfg.device
             span = dev.gmax - dev.gmin
             # sums of 0/1 floats are order-exact, so this mean matches the
@@ -365,14 +397,37 @@ class AnalogTrainStep:
                 | (g_new >= dev.gmax - 1e-3 * span)).astype(jnp.float32))
         return {**p, "g": g_new}
 
-    def _local_block_update(self, p, tapes, scale, noise, seed, mode, path):
+    def _flat_update_specs(self, path, g_shape, kind):
+        """Partition specs for the *flattened* (Lflat, K, N) update view
+        of a container on the GSPMD path: the flattened lead dim carries
+        the expert axis names (layer entries are never sharded, and the
+        hoist makes an EP shard a contiguous block of flattened rows)."""
+        from jax.sharding import PartitionSpec as P
+        from repro.launch.sharding import analog_update_specs
+        specs = analog_update_specs(path, g_shape, self.cfg, self.mesh)
+        lead = len(g_shape) - 2
+        if lead == 0:
+            return specs
+        lead_entries = [e for e in specs["g"][:lead] if e is not None]
+        lead0 = lead_entries[0] if lead_entries else None
+        return {
+            "g": P(lead0, specs["g"][-2], specs["g"][-1]),
+            "x_tape": P(lead0, None, specs["x_tape"][-1]),
+            "d_tape": P(lead0, None, specs["d_tape"][-1]),
+            "scale": P(lead0),
+        }
+
+    def _local_block_update(self, p, tapes, scale, noise, seed, mode,
+                            path, kind):
         """Rank-k write of one shard's tile block (inside shard_map):
         slice the (replicated) tapes and noise to the block this shard
-        owns, offset the counter-PRNG by the block's global base tile
-        coordinates, and run the plain layer-batched kernel on the local
-        conductances.  Returns (g_new, railed_count, total_cells) with the
-        count psum'd over the sharded axes — 0/1 sums are order-exact, so
-        the rail fraction matches the single-device metric bitwise."""
+        owns — including its expert range for expert-batched containers —
+        offset the counter-PRNG by the block's global base (layer, tile)
+        coordinates, flatten the lead dims, and run the plain
+        layer-batched kernel on the local conductances.  Returns
+        (g_new, railed_count, total_cells) with the count psum'd over the
+        sharded axes — 0/1 sums are order-exact, so the rail fraction
+        matches the single-device metric bitwise."""
         specs, gshape = self._cspecs[path]
         mesh = self.mesh
         rows, cols = self.xcfg.rows, self.xcfg.cols
@@ -396,14 +451,39 @@ class AnalogTrainStep:
         if noise is not None:
             noise = slice_dim(noise, names_r, k_loc, lead)
             noise = slice_dim(noise, names_c, n_loc, lead + 1)
-        offs = (0,
+        # Sharded lead dims (the expert axis of an expert-batched
+        # container): slice the replicated tapes/noise to the expert range
+        # this shard owns, and offset the flattened layer index of the
+        # counter PRNG by the range's global base.  The registry hoists
+        # the (single) sharded lead dim outermost, so the offset is one
+        # scalar: base_expert * (flattened rows per expert).
+        lead_off = jnp.uint32(0)
+        for d in range(lead):
+            names_d = _spec_names(g_spec[d])
+            if not names_d:
+                continue
+            size_d = g_loc.shape[d]
+            x_loc = slice_dim(x_loc, names_d, size_d, d)
+            d_loc = slice_dim(d_loc, names_d, size_d, d)
+            if noise is not None:
+                noise = slice_dim(noise, names_d, size_d, d)
+            assert registry.hoist_axis(kind, len(gshape)) in (d, None), (
+                "sharded lead dim must be the registry's hoisted axis")
+            rest = int(np.prod([g_loc.shape[i] for i in range(lead)
+                                if i != d])) if lead > 1 else 1
+            lead_off = lead_off + _flat_axis_index(mesh, names_d) \
+                * jnp.uint32(size_d * rest)
+        g3, x3, d3, s1, n3, unflatten = registry.flatten_lead(
+            kind, g_loc, x_loc, d_loc, scale, noise)
+        offs = (lead_off,
                 _flat_axis_index(mesh, names_r) * jnp.uint32(k_loc // rows)
                 if names_r else 0,
                 _flat_axis_index(mesh, names_c) * jnp.uint32(n_loc // cols)
                 if names_c else 0)
-        g_new = xbar_outer_update_inline(
-            g_loc, x_loc, d_loc, scale, self.xcfg, noise=noise, seed=seed,
+        g3_new = xbar_outer_update_inline(
+            g3, x3, d3, s1, self.xcfg, noise=n3, seed=seed,
             noise_mode=mode, impl=self.impl, tile_offsets=offs)
+        g_new = unflatten(g3_new)
         dev = self.xcfg.device
         span = dev.gmax - dev.gmin
         railed = jnp.sum(((g_new <= dev.gmin + 1e-3 * span)

@@ -127,12 +127,27 @@ def test_analog_container_specs_policy():
     # non-divisible at tile granularity -> replicate that dim
     assert analog_container_pspec(sp, (2, 48, 96), cfg, mesh, "g") \
         == P(None, None, None)
-    # w_scale always replicated; tapes follow their container
+    # w_scale follows its container's lead dims; tapes follow their
+    # container
     specs = analog_update_specs(("layers", "attn", "wqkv"), (2, 64, 256),
                                 cfg, mesh)
     assert specs["scale"] == P(None)
     assert specs["x_tape"] == P(None, None, "data")
     assert specs["d_tape"] == P(None, None, "model")
+    # expert-batched containers: expert dim over model (EP), row tiles
+    # over the FSDP axes, columns replicated, per-expert scales with
+    # their experts
+    sp_e = ["layers", "moe", "experts", "w_up", "g"]
+    assert analog_container_pspec(sp_e, (2, 8, 64, 64), cfg, mesh, "g") \
+        == P(None, "model", "data", None)
+    especs = analog_update_specs(("layers", "moe", "experts", "w_up"),
+                                 (2, 8, 64, 64), cfg, mesh)
+    assert especs["x_tape"] == P(None, "model", None, "data")
+    assert especs["d_tape"] == P(None, "model", None, None)
+    assert especs["scale"] == P(None, "model")
+    # an expert count that doesn't divide the model axis degrades
+    assert analog_container_pspec(sp_e, (2, 6, 64, 64), cfg, mesh, "g") \
+        == P(None, None, "data", None)
 
 
 # ----------------------------------------------------- sharded-vs-single parity
@@ -146,7 +161,7 @@ _PARITY_SCRIPT = """
     from repro.launch.mesh import make_mesh
     from repro.train.analog_lm import init_state, make_analog_sgd_step
 
-    cfg = get_config("lm100m", smoke=True).replace(
+    cfg = get_config(%(arch)r, smoke=True).replace(
         dtype="float32", analog=True, analog_mode="device",
         analog_device="taox", analog_rows=%(rows)r, analog_cols=%(rows)r,
         analog_in_bits=8, analog_out_bits=8)
@@ -170,8 +185,8 @@ _PARITY_SCRIPT = """
         st, m = step(st, batch, k)
 
     assert step.compiles == 1, step.compiles
-    # the containers must actually live sharded on the mesh
-    g = st["params"]["layers"]["ffn"]["w_upgate"]["g"]
+    # the probed container must actually live sharded on the mesh
+    g = st["params"]%(leaf)s["g"]
     assert not g.sharding.is_fully_replicated, g.sharding
     # bit-identical conductances AND digital leaves after 4 noisy steps
     same = jtu.tree_map(lambda a, b: bool(jnp.all(a == b)),
@@ -185,11 +200,17 @@ _PARITY_SCRIPT = """
 """
 
 
+def _parity(arch, shape, rows, leaf):
+    return textwrap.dedent(_PARITY_SCRIPT % {
+        "arch": arch, "shape": shape, "rows": rows, "leaf": leaf})
+
+
 def test_sharded_step_bit_identical_2x4():
     """Acceptance: same seed, 1 device vs a 2x4 mesh -> bit-identical
     conductance containers after 4 steps of the stochastic taox device,
     with the jitted sharded step compiling exactly once."""
-    r = _run(textwrap.dedent(_PARITY_SCRIPT % {"shape": (2, 4), "rows": 16}))
+    r = _run(_parity("lm100m", (2, 4), 16,
+                     '["layers"]["ffn"]["w_upgate"]'))
     assert "PARITY_OK" in r.stdout, r.stdout + r.stderr
 
 
@@ -197,5 +218,16 @@ def test_sharded_step_bit_identical_8x1():
     """Mesh-shape invariance: the pure-FSDP 8x1 layout (row tiles only —
     8x8 physical tiles so the 64-wide smoke projections split 8 ways)
     produces the same bits as 1 device too."""
-    r = _run(textwrap.dedent(_PARITY_SCRIPT % {"shape": (8, 1), "rows": 8}))
+    r = _run(_parity("lm100m", (8, 1), 8,
+                     '["layers"]["ffn"]["w_upgate"]'))
+    assert "PARITY_OK" in r.stdout, r.stdout + r.stderr
+
+
+def test_sharded_step_bit_identical_moe_2x4():
+    """Expert-sharded containers keep the contract: the llama4 smoke MoE
+    on a 2x4 mesh — expert dim over ``model`` (4-way EP, 2 experts per
+    shard), expert row tiles over ``data`` — produces bit-identical
+    conductances to 1 device, probed on an expert container."""
+    r = _run(_parity("llama4-scout-17b-a16e", (2, 4), 16,
+                     '["layers"]["moe"]["experts"]["w_up"]'))
     assert "PARITY_OK" in r.stdout, r.stdout + r.stderr
