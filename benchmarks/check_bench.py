@@ -28,25 +28,30 @@ import statistics
 import sys
 
 
-def load_rows(path: str) -> dict:
-    """Rows by name; malformed entries are skipped with a notice instead
-    of raising (a bench that failed to emit a row must not crash the gate
-    with a KeyError — the row simply doesn't take part in the comparison,
-    like a retired/new row)."""
+def load_rows(path: str) -> tuple:
+    """(usable rows by name, skipped row names).  Malformed entries are
+    skipped with a notice instead of raising (a bench that failed to emit
+    a row must not crash the gate with a KeyError) — but the caller FAILS
+    when nothing usable survives: skipping every row of the gated metric
+    must never turn into a vacuous pass."""
     with open(path) as f:
         data = json.load(f)
-    rows = {}
+    rows, skipped = {}, []
     for r in data.get("rows", []):
         name = r.get("name")
         if name is None or not isinstance(r.get("us_per_call"),
                                           (int, float)) \
                 or r["us_per_call"] <= 0:
             print(f"bench gate: malformed row skipped in {path}: {r!r}")
+            skipped.append(name if name is not None else "<unnamed>")
             continue
         rows[name] = r
     if not data.get("rows"):
         print(f"bench gate: no 'rows' array in {path}")
-    return rows
+    if skipped:
+        print(f"bench gate: {len(skipped)} row(s) skipped in {path}: "
+              + ", ".join(skipped))
+    return rows, skipped
 
 
 def main(argv=None) -> int:
@@ -61,19 +66,37 @@ def main(argv=None) -> int:
                     help="also fail if the raw median fresh/baseline ratio "
                          "exceeds this (use when both files come from the "
                          "same machine)")
+    ap.add_argument("--require", action="append", default=[],
+                    help="row-name prefix that must survive loading in "
+                         "BOTH files (repeatable); guards a gated metric "
+                         "against going entirely missing/malformed")
     args = ap.parse_args(argv)
 
-    base = load_rows(args.baseline)
-    fresh = load_rows(args.fresh)
+    base, _ = load_rows(args.baseline)
+    fresh, _ = load_rows(args.fresh)
     if not fresh:
         # A bench that produced NO usable rows is a broken bench, not a
         # retired row set — passing here would silently disable the gate.
         print("bench gate FAILED: fresh file has no usable rows")
         return 1
+    if not base:
+        # Same logic for the committed side: an empty/corrupt baseline
+        # means every row would be "new (skipped)" — a vacuous pass.
+        print("bench gate FAILED: baseline file has no usable rows")
+        return 1
     shared = sorted(set(base) & set(fresh))
     if not shared:
-        print("bench gate: no shared rows — nothing to compare")
-        return 0
+        # Both sides have rows but none line up: every row of the gated
+        # metric was skipped, which is a broken gate, not a clean one.
+        print("bench gate FAILED: no shared rows — the gated metric "
+              "has nothing to compare")
+        return 1
+    for want in args.require:
+        for side, rows in (("baseline", base), ("fresh", fresh)):
+            if not any(n.startswith(want) for n in rows):
+                print(f"bench gate FAILED: required rows '{want}*' "
+                      f"missing or malformed in {side} file")
+                return 1
     for name in sorted(set(base) - set(fresh)):
         print(f"bench gate: row retired (skipped): {name}")
     for name in sorted(set(fresh) - set(base)):

@@ -34,6 +34,7 @@ from repro.core.xbar_ops import (mvm, outer_update, quantize_update_operands,
                                  vmm)
 from repro.kernels import ops as kops
 from repro.kernels.xbar_update import xbar_outer_update
+from repro.launch.hlo_analysis import count_collectives
 
 
 def _time(fn, *args, n=5):
@@ -66,6 +67,7 @@ def main(argv=None):
         tile, reps = 1024, 5
 
     rows = []
+    collectives = {}
     print("name,us_per_call,derived")
     key = jax.random.PRNGKey(0)
     for k, n, b in shapes:
@@ -126,9 +128,20 @@ def main(argv=None):
         emit(f"micro/outer_update_batched_L{lyr}_{k}x{n}_b{b}",
              _time(f_bat, gl, xl, dl, n=reps), n_macs=lyr * macs)
 
+        # Collective-op mix of the compiled modules (all zero on one
+        # device by construction; the static auditor's RA106 enforces
+        # the sharded invariant — this records the trajectory).
+        for cname, cfn, cargs in (("vmm", f_vmm, (x,)),
+                                  ("outer_update_batched", f_bat,
+                                   (gl, xl, dl))):
+            counts = count_collectives(
+                cfn.lower(*cargs).compile().as_text())
+            collectives[f"micro/{cname}_{k}x{n}_b{b}"] = counts
+
     if args.out:
         with open(args.out, "w") as f:
-            json.dump({"smoke": args.smoke, "rows": rows}, f, indent=1)
+            json.dump({"smoke": args.smoke, "rows": rows,
+                       "collectives": collectives}, f, indent=1)
         print(f"wrote {args.out}")
     return rows
 

@@ -1,0 +1,14 @@
+"""``repro.analysis`` — the three-layer static program auditor.
+
+Layer 1 (``jaxpr_lint``)  traces the shipped entrypoints and enforces the
+jaxpr contracts (RA1xx); Layer 2 (``pallas_lint``) concretely evaluates
+every kernel's BlockSpec index maps over the full grid (RA2xx); Layer 3
+(``ast_rules``) applies repo-specific AST rules (RA3xx).  One CLI:
+
+    python -m repro.analysis --all
+
+Rule catalog and allowlist syntax: ``docs/static_audit.md``.  Importing
+this package is jax-free; the trace layers import jax lazily.
+"""
+from repro.analysis.findings import (Allowlist, Finding, RULES,  # noqa: F401
+                                     report)

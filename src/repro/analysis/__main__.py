@@ -1,0 +1,23 @@
+"""``python -m repro.analysis`` — static-auditor entry point.
+
+The host-device override must land in the environment BEFORE jax is
+imported (jax snapshots XLA_FLAGS at import), so the sharded entries can
+trace/compile on a 2x2 mesh on any host.  That's the whole reason this
+module exists separately from ``cli``.
+"""
+import os
+import sys
+
+_flags = os.environ.get("XLA_FLAGS", "")
+if "xla_force_host_platform_device_count" not in _flags:
+    os.environ["XLA_FLAGS"] = (
+        _flags + " --xla_force_host_platform_device_count=8").strip()
+
+from repro.analysis.cli import main  # noqa: E402  (after XLA_FLAGS)
+
+try:
+    code = main()
+except BrokenPipeError:  # `... | head` closed stdout mid-report
+    os.dup2(os.open(os.devnull, os.O_WRONLY), sys.stdout.fileno())
+    code = 0
+sys.exit(code)

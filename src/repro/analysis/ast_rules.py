@@ -1,0 +1,209 @@
+"""Layer 3 — AST lint rules over ``src/repro`` (RA3xx).
+
+Repo-specific rules a generic linter can't express.  Pure ``ast`` —
+importing this module never imports jax, so the AST layer runs in any
+environment (and first in CI, before the trace-heavy layers).
+
+RA301  no ``jax.config`` mutation in library code.  Flipping
+       ``jax_enable_x64`` / ``jax_default_matmul_precision`` inside
+       ``src/repro`` changes numerics for every caller; config belongs
+       to entrypoints (tests, benchmarks, CLI) only.
+RA302  no host-side RNG or trace-shaped jnp call inside a Pallas kernel
+       body.  Kernel bodies (functions taking ``*_ref`` / ``*refs``
+       args) must use the counter-based PRNG and ``pl`` primitives;
+       ``jax.random.*`` inside a kernel silently falls back to a
+       host callback or fails to lower on real backends.
+RA303  no Python ``for``/``while`` loop whose body calls a container op
+       (vmm/mvm/outer update/analog projections).  Per-layer Python
+       loops unroll the jaxpr; the layer-batched kernel exists so the
+       container dimension stays inside one ``pallas_call``.
+RA304  every ``jax.jit`` in ``train/``, ``serve/``, ``launch/`` must
+       declare ``donate_argnums``/``donate_argnames``.  Step functions
+       that re-bind multi-GB state without donation double peak HBM;
+       read-only jits are allowlisted with a justification.
+"""
+from __future__ import annotations
+
+import ast
+import os
+from typing import Iterator, List, Optional, Sequence
+
+from repro.analysis.findings import Finding, repo_root
+
+#: Calls whose presence inside a Python loop body indicates a per-layer
+#: loop around container ops (RA303).
+_CONTAINER_OPS = {
+    "vmm", "mvm", "outer_update", "xbar_vmm", "xbar_mvm",
+    "xbar_outer_update", "xbar_outer_update_inline", "xbar_sharded_update",
+    "analog_project", "analog_project_batched", "pallas_call",
+}
+
+#: jnp attributes that must not appear in a kernel body (RA302):
+#: shape-dependent ops that break static lowering.
+_KERNEL_BANNED_JNP = {
+    "nonzero", "unique", "where_single_arg",  # dynamic shapes
+}
+
+#: Directories whose jax.jit calls must donate (RA304), relative to the
+#: src root.
+_DONATION_DIRS = ("repro/train", "repro/serve", "repro/launch")
+
+
+def _call_name(node: ast.Call) -> str:
+    """Dotted name of a call target, e.g. 'jax.config.update'."""
+    parts: List[str] = []
+    t = node.func
+    while isinstance(t, ast.Attribute):
+        parts.append(t.attr)
+        t = t.value
+    if isinstance(t, ast.Name):
+        parts.append(t.id)
+    return ".".join(reversed(parts))
+
+
+def _is_kernel_def(node: ast.FunctionDef) -> bool:
+    """A Pallas kernel body: positional args ending in ``_ref``, a
+    ``*refs`` vararg, or a ``_kernel`` name suffix."""
+    args = node.args
+    names = [a.arg for a in args.posonlyargs + args.args]
+    if names and all(n.endswith("_ref") for n in names):
+        return True
+    if args.vararg is not None and args.vararg.arg.endswith("refs"):
+        return True
+    return node.name.endswith("_kernel")
+
+
+def _jit_declares_donation(node: ast.Call) -> bool:
+    return any(kw.arg in ("donate_argnums", "donate_argnames")
+               for kw in node.keywords)
+
+
+class _FileAuditor(ast.NodeVisitor):
+    def __init__(self, rel_path: str, in_donation_dir: bool):
+        self.rel_path = rel_path
+        self.in_donation_dir = in_donation_dir
+        self.findings: List[Finding] = []
+        self._kernel_depth = 0
+        self._loop_depth = 0
+
+    def _emit(self, rule: str, line: int, msg: str) -> None:
+        self.findings.append(
+            Finding(rule, msg, file=self.rel_path, line=line))
+
+    # -- function defs: kernel-body tracking -------------------------------
+    def visit_FunctionDef(self, node: ast.FunctionDef) -> None:
+        # RA304 also covers the bare-decorator spelling `@jax.jit`, which
+        # cannot declare donation at all.
+        if self.in_donation_dir:
+            for dec in node.decorator_list:
+                if isinstance(dec, (ast.Name, ast.Attribute)):
+                    dotted = _call_name(
+                        ast.Call(func=dec, args=[], keywords=[]))
+                    if dotted in ("jax.jit", "jit"):
+                        self._emit("RA304", dec.lineno,
+                                   f"bare @jax.jit on {node.name}() "
+                                   "cannot declare donation")
+        is_kernel = _is_kernel_def(node)
+        self._kernel_depth += is_kernel
+        self.generic_visit(node)
+        self._kernel_depth -= is_kernel
+
+    visit_AsyncFunctionDef = visit_FunctionDef  # type: ignore[assignment]
+
+    # -- loops: container-op tracking (RA303) ------------------------------
+    def _visit_loop(self, node) -> None:
+        self._loop_depth += 1
+        self.generic_visit(node)
+        self._loop_depth -= 1
+
+    visit_For = visit_While = _visit_loop
+
+    # -- calls -------------------------------------------------------------
+    def visit_Call(self, node: ast.Call) -> None:
+        name = _call_name(node)
+        leaf = name.rsplit(".", 1)[-1]
+
+        # RA301: jax.config.update(...) / config.update("jax_*", ...)
+        if name.endswith("config.update") or name == "update_config":
+            is_jax_cfg = name.startswith(("jax.", "config."))
+            if not is_jax_cfg and node.args:
+                a0 = node.args[0]
+                is_jax_cfg = (isinstance(a0, ast.Constant)
+                              and isinstance(a0.value, str)
+                              and a0.value.startswith("jax_"))
+            if is_jax_cfg:
+                self._emit("RA301", node.lineno,
+                           f"jax.config mutation in library code: {name}")
+
+        # RA302: banned calls in kernel bodies
+        if self._kernel_depth:
+            if name.startswith(("jax.random.", "random.")) \
+                    and not name.startswith("random.Random"):
+                self._emit("RA302", node.lineno,
+                           f"host RNG call '{name}' inside a Pallas "
+                           "kernel body (use the counter PRNG)")
+            elif name.startswith("jnp.") and leaf in _KERNEL_BANNED_JNP:
+                self._emit("RA302", node.lineno,
+                           f"dynamic-shape call '{name}' inside a "
+                           "Pallas kernel body")
+
+        # RA303: container op invoked from inside a Python loop
+        if self._loop_depth and leaf in _CONTAINER_OPS:
+            self._emit("RA303", node.lineno,
+                       f"container op '{leaf}' called inside a Python "
+                       "loop (layer batching must stay in-kernel)")
+
+        # RA304: jax.jit without donation in train/serve/launch
+        if self.in_donation_dir and name in ("jax.jit", "jit") \
+                and not _jit_declares_donation(node):
+            self._emit("RA304", node.lineno,
+                       "jax.jit without donate_argnums/donate_argnames "
+                       "in a step-owning module")
+
+        self.generic_visit(node)
+
+    # RA301 also covers attribute-style mutation:
+    #   jax.config.jax_enable_x64 = True
+    def visit_Assign(self, node: ast.Assign) -> None:
+        for t in node.targets:
+            if isinstance(t, ast.Attribute):
+                dotted = _call_name(ast.Call(func=t, args=[], keywords=[]))
+                if dotted.startswith("jax.config."):
+                    self._emit("RA301", node.lineno,
+                               f"jax.config attribute mutation: {dotted}")
+        self.generic_visit(node)
+
+
+def _iter_py_files(src_root: str) -> Iterator[str]:
+    for dirpath, dirnames, filenames in os.walk(src_root):
+        dirnames[:] = [d for d in dirnames
+                       if d not in ("__pycache__", "analysis")]
+        for fn in sorted(filenames):
+            if fn.endswith(".py"):
+                yield os.path.join(dirpath, fn)
+
+
+def audit_ast(root: Optional[str] = None,
+              files: Optional[Sequence[str]] = None) -> List[Finding]:
+    """Run all RA3xx rules.  ``files`` (absolute paths) overrides the
+    default ``src/repro`` walk — used by the fixture tests."""
+    root = root or repo_root()
+    if files is None:
+        files = list(_iter_py_files(os.path.join(root, "src", "repro")))
+    findings: List[Finding] = []
+    for path in files:
+        rel = os.path.relpath(os.path.abspath(path), root)
+        posix = rel.replace(os.sep, "/")
+        in_don = any(f"src/{d}/" in f"{posix}" or posix.startswith(f"src/{d}/")
+                     for d in _DONATION_DIRS)
+        try:
+            with open(path, encoding="utf-8") as f:
+                tree = ast.parse(f.read(), filename=path)
+        except (OSError, SyntaxError) as e:
+            findings.append(Finding("RA301", f"unparseable file: {e}",
+                                    file=rel))
+            continue
+        auditor = _FileAuditor(rel, in_don)
+        auditor.visit(tree)
+        findings.extend(auditor.findings)
+    return findings

@@ -1,0 +1,67 @@
+"""CLI driver for the static auditor (see ``__main__`` for the entry
+point, which must set the host-device override before jax loads)."""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+from typing import List, Tuple
+
+from repro.analysis.findings import (Allowlist, Finding, RULES, report)
+
+
+def _run_layer(name: str, fn) -> Tuple[List[Finding], float]:
+    t0 = time.time()
+    findings = fn()
+    return findings, time.time() - t0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="static auditor: jaxpr contracts (RA1xx), Pallas "
+                    "grid safety (RA2xx), AST rules (RA3xx)")
+    ap.add_argument("--all", action="store_true",
+                    help="run every layer (default if none selected)")
+    ap.add_argument("--jaxpr", action="store_true", help="Layer 1 only")
+    ap.add_argument("--pallas", action="store_true", help="Layer 2 only")
+    ap.add_argument("--ast", action="store_true", help="Layer 3 only")
+    ap.add_argument("--arch", default="lm100m",
+                    help="config traced by the jaxpr layer")
+    ap.add_argument("--list-rules", action="store_true")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for rid, desc in sorted(RULES.items()):
+            print(f"{rid}  {desc}")
+        return 0
+
+    run_all = args.all or not (args.jaxpr or args.pallas or args.ast)
+    findings: List[Finding] = []
+    # AST first: it is jax-free and fails fastest.
+    if run_all or args.ast:
+        from repro.analysis.ast_rules import audit_ast
+        got, dt = _run_layer("ast", audit_ast)
+        print(f"[ast]    {len(got)} raw finding(s) in {dt:.1f}s")
+        findings += got
+    if run_all or args.pallas:
+        from repro.analysis.pallas_lint import audit_pallas
+        got, dt = _run_layer("pallas", audit_pallas)
+        print(f"[pallas] {len(got)} raw finding(s) in {dt:.1f}s")
+        findings += got
+    if run_all or args.jaxpr:
+        from repro.analysis.jaxpr_lint import audit_jaxpr
+        got, dt = _run_layer(
+            "jaxpr", lambda: audit_jaxpr(arch=args.arch))
+        print(f"[jaxpr]  {len(got)} raw finding(s) in {dt:.1f}s")
+        findings += got
+
+    # identical findings (same rule/site/message) collapse to one line
+    findings = list(dict.fromkeys(findings))
+    active, suppressed = Allowlist().split(findings)
+    print(report(active, suppressed))
+    return 1 if active else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

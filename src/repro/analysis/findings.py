@@ -1,0 +1,187 @@
+"""Findings, rule catalog, and the inline-comment allowlist.
+
+Every auditor layer reports :class:`Finding` records carrying a stable
+rule ID (``RA1xx`` jaxpr contracts, ``RA2xx`` Pallas grid safety,
+``RA3xx`` AST lint).  A finding anchored to a repo source line can be
+suppressed *only* by an inline allowlist comment with a non-empty
+justification on that line or the line directly above it:
+
+    railed = jax.lax.psum(railed, used)  # audit: allow RA103 -- 0/1 sums
+                                         # are order-exact (bit-exact docs)
+
+Silent suppressions are rejected: ``# audit: allow RA103`` without a
+justification does not match, and an allowlist comment never suppresses a
+*different* rule ID.  Findings that cannot be resolved to a repo source
+line (e.g. a dtype leak whose frames are all inside jax) are never
+suppressible — they must be fixed.
+
+The catalog below is the single source of truth for shipped rule IDs;
+``docs/static_audit.md`` documents each with its rationale.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import re
+from typing import Dict, Iterable, List, Optional, Tuple
+
+#: Stable rule catalog: id -> one-line description.
+RULES: Dict[str, str] = {
+    # Layer 1 — jaxpr contracts (trace-time, no device execution)
+    "RA101": "no float64/complex128 value anywhere in a traced analog or "
+             "serve program (weak-type / x64 promotion leak)",
+    "RA102": "tape leaves never share a differentiated subtree with "
+             "g/ref/w_scale (the symbolic-zero hoist contract)",
+    "RA103": "no collective inside an exact-mode shard_map body except "
+             "the whitelisted conductance all-gather",
+    "RA104": "jitted step entrypoints actually donate their state "
+             "buffers (input/output aliasing present in the lowering)",
+    "RA105": "clip/round in the ADC sim chain stay primitive-level "
+             "(no pjit-wrapped jnp.clip/jnp.round) and the step jaxpr "
+             "stays under the equation budget",
+    "RA106": "compiled sharded exact-mode modules contain no "
+             "order-sensitive collective (all-to-all / reduce-scatter / "
+             "collective-permute)",
+    # Layer 2 — Pallas grid safety (concrete index-map evaluation)
+    "RA201": "output-block coverage over the full grid is complete and "
+             "race-free (revisits of an output block are consecutive)",
+    "RA202": "every BlockSpec index-map result is in bounds for its "
+             "operand's block grid",
+    "RA203": "operand shapes divide their BlockSpec block shapes (the "
+             "wrapper padded correctly) for every shipped tile geometry",
+    "RA204": "per-(layer, tile) PRNG seed blocks are pairwise unique "
+             "across the container grid and across container paths",
+    # Layer 3 — AST rules (repo-specific, beyond ruff)
+    "RA301": "no jax.config mutation in library code (src/repro)",
+    "RA302": "no host-RNG / dynamic-shape jnp call inside a Pallas "
+             "kernel body (counter-PRNG and pl primitives required)",
+    "RA303": "no Python per-layer loop around container ops (the "
+             "pattern the layer-batched kernel exists to kill)",
+    "RA304": "jax.jit entrypoints in train/serve/launch declare buffer "
+             "donation (donate_argnums/donate_argnames)",
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One auditor finding.  ``file`` is repo-relative when the finding
+    anchors to a source line (allowlistable); ``entry`` names the traced
+    entrypoint / kernel / config that produced it."""
+    rule: str
+    message: str
+    file: Optional[str] = None
+    line: Optional[int] = None
+    entry: Optional[str] = None
+
+    def where(self) -> str:
+        if self.file:
+            loc = f"{self.file}:{self.line}" if self.line else self.file
+        else:
+            loc = self.entry or "<untraceable>"
+        return loc
+
+    def __str__(self) -> str:
+        tail = f" [{self.entry}]" if self.entry and self.file else ""
+        return f"{self.rule} {self.where()}: {self.message}{tail}"
+
+
+# --------------------------------------------------------------------------
+# Allowlist
+# --------------------------------------------------------------------------
+
+#: ``# audit: allow RA103 -- justification`` (separator: -, --, —, or :).
+_ALLOW_RE = re.compile(
+    r"#\s*audit:\s*allow\s+(RA\d{3})\s*(?:[-—:]+\s*(\S.*))?$")
+
+
+def repo_root(start: Optional[str] = None) -> str:
+    """The repository root (directory holding ``src/``), from this file."""
+    here = start or os.path.dirname(os.path.abspath(__file__))
+    d = here
+    for _ in range(8):
+        if os.path.isdir(os.path.join(d, "src")) \
+                and os.path.isfile(os.path.join(d, "pyproject.toml")):
+            return d
+        d = os.path.dirname(d)
+    return here
+
+
+class Allowlist:
+    """Inline-comment allowlist over the repo's source files.
+
+    ``entries[path][lineno] = (rule, justification)``.  A finding at
+    (path, line) is suppressed by a matching-rule entry at ``line`` or
+    ``line - 1`` (comment directly above), and only when the
+    justification is non-empty.
+    """
+
+    def __init__(self, root: Optional[str] = None):
+        self.root = root or repo_root()
+        self._cache: Dict[str, Dict[int, Tuple[str, str]]] = {}
+
+    def _entries(self, rel_path: str) -> Dict[int, Tuple[str, str]]:
+        cached = self._cache.get(rel_path)
+        if cached is not None:
+            return cached
+        out: Dict[int, Tuple[str, str]] = {}
+        full = os.path.join(self.root, rel_path)
+        try:
+            with open(full, encoding="utf-8") as f:
+                for i, text in enumerate(f, start=1):
+                    m = _ALLOW_RE.search(text.rstrip())
+                    if m and m.group(2):  # justification required
+                        out[i] = (m.group(1), m.group(2).strip())
+        except OSError:
+            pass
+        self._cache[rel_path] = out
+        return out
+
+    def justification(self, finding: Finding) -> Optional[str]:
+        """The justification suppressing ``finding``, or None."""
+        if not finding.file or not finding.line:
+            return None
+        entries = self._entries(finding.file)
+        for ln in (finding.line, finding.line - 1):
+            hit = entries.get(ln)
+            if hit and hit[0] == finding.rule:
+                return hit[1]
+        return None
+
+    def split(self, findings: Iterable[Finding]
+              ) -> Tuple[List[Finding], List[Tuple[Finding, str]]]:
+        """(active, suppressed-with-justification)."""
+        active: List[Finding] = []
+        suppressed: List[Tuple[Finding, str]] = []
+        for f in findings:
+            j = self.justification(f)
+            if j is None:
+                active.append(f)
+            else:
+                suppressed.append((f, j))
+        return active, suppressed
+
+
+def relativize(path: Optional[str], root: Optional[str] = None
+               ) -> Optional[str]:
+    """Repo-relative form of ``path``; None for paths outside the repo
+    (jax internals etc. — those findings are not allowlistable)."""
+    if not path:
+        return None
+    root = root or repo_root()
+    ap = os.path.abspath(path)
+    if ap.startswith(root + os.sep):
+        return os.path.relpath(ap, root)
+    return None
+
+
+def report(active: List[Finding],
+           suppressed: List[Tuple[Finding, str]],
+           title: str = "static audit") -> str:
+    lines = []
+    for f, why in suppressed:
+        lines.append(f"  allowlisted {f.rule} {f.where()}: {why}")
+    for f in active:
+        lines.append(f"  FINDING {f}")
+    verdict = "clean" if not active else f"{len(active)} finding(s)"
+    lines.append(f"{title}: {verdict}, {len(suppressed)} allowlisted")
+    return "\n".join(lines)

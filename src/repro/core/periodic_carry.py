@@ -79,6 +79,7 @@ def pc_forward(params: dict, x: Array, cfg: CrossbarConfig,
             else [None] * n_cells)
     y = 0.0
     for c in range(n_cells):
+        # audit: allow RA303 -- n_cells <= 4 place-value cells with distinct significance weights, not a layer stack
         y = y + base ** c * vmm(x, params["g"][c], params["ref"],
                                 params["w_scale"], cfg, key=keys[c])
     return y
@@ -92,6 +93,7 @@ def pc_backward(params: dict, d: Array, cfg: CrossbarConfig,
             else [None] * n_cells)
     dx = 0.0
     for c in range(n_cells):
+        # audit: allow RA303 -- n_cells <= 4 place-value cells with distinct significance weights, not a layer stack
         dx = dx + base ** c * mvm(d, params["g"][c], params["ref"],
                                   params["w_scale"], cfg, key=keys[c])
     return dx

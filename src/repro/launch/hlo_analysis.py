@@ -326,3 +326,57 @@ def analyze(text: str, default_group: int = 1) -> Dict[str, float]:
 
     out = walk("__entry__")
     return out
+
+
+def count_collectives(text: str) -> Dict[str, int]:
+    """Collective-op *counts* per compiled module, loop-multiplied.
+
+    Returns ``{kind: n for kind in COLLECTIVES} + {"total": n}``, where a
+    collective inside a while body counts once per trip (same multipliers
+    as :func:`analyze`).  Start/done pairs of async collectives
+    (``all-gather-start`` / ``all-gather-done``) count once.  Used by the
+    static auditor's RA106 rule and surfaced in ``BENCH_micro.json``.
+    """
+    comps = parse_hlo(text)
+    memo: Dict[str, Dict[str, float]] = {}
+
+    def walk(name: str) -> Dict[str, float]:
+        if name in memo:
+            return memo[name]
+        tot = {k: 0.0 for k in COLLECTIVES}
+        comp = comps.get(name)
+        if comp is None:
+            return tot
+        memo[name] = tot  # guards cycles
+        for ins in comp.instrs:
+            op = ins.opcode
+            if op.endswith("-done"):
+                continue  # counted at the matching -start
+            for base in COLLECTIVES:
+                if op == base or op.startswith(base + "-"):
+                    tot[base] += 1.0
+                    break
+            mult, sub = 1.0, None
+            if op == "while":
+                mb = _BODY_RE.search(ins.rhs)
+                mc = _COND_RE.search(ins.rhs)
+                mt = _TRIP_COUNT_RE.search(ins.rhs)
+                if mb:
+                    sub = mb.group(1)
+                if mt:
+                    mult = float(mt.group(1))
+                elif mc and mc.group(1) in comps:
+                    mult = float(_trip_count(comps[mc.group(1)]))
+            elif op in ("fusion", "call", "conditional", "map"):
+                m = _CALLS_RE.search(ins.rhs)
+                if m:
+                    sub = m.group(1)
+            if sub is not None and sub in comps and sub != name:
+                for k, v in walk(sub).items():
+                    tot[k] += mult * v
+        memo[name] = tot
+        return tot
+
+    counts = {k: int(v) for k, v in walk("__entry__").items()}
+    counts["total"] = sum(counts.values())
+    return counts

@@ -291,7 +291,10 @@ class Engine:
         self.extras = extras or {}
         self.n_slots = n_slots
         self.prefill_chunk = prefill_chunk
-        self._decode = jax.jit(self._decode_impl)
+        # the static loop threads the cache through every decode step, so
+        # its buffers are donated exactly like the continuous engine's
+        self._decode = jax.jit(self._decode_impl, donate_argnums=(1,))
+        # audit: allow RA304 -- prefill builds the cache; no donatable input
         self._prefill = jax.jit(self._prefill_impl)
         self._cont: Dict[int, ContinuousEngine] = {}
 

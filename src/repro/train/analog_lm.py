@@ -491,6 +491,7 @@ class AnalogTrainStep:
                          .astype(jnp.float32))
         used = tuple(a for e in g_spec for a in _spec_names(e))
         if used:
+            # audit: allow RA103 -- metric-only psum of 0/1 counts: integer sums are order-exact, bit-identity unaffected
             railed = jax.lax.psum(railed, used)
         return g_new, railed, float(np.prod(gshape))
 

@@ -3,7 +3,8 @@ import textwrap
 
 import pytest
 
-from repro.launch.hlo_analysis import _shape_bytes, analyze, parse_hlo
+from repro.launch.hlo_analysis import (_shape_bytes, analyze,
+                                       count_collectives, parse_hlo)
 
 SAMPLE = textwrap.dedent("""\
     HloModule jit_f
@@ -71,6 +72,32 @@ def test_traffic_excludes_aliasing_ops():
     # parameter/tuple/gte/while ops contribute nothing.
     per_iter = 4 + 32768 + 16384 + 16384
     assert r["traffic_bytes"] == pytest.approx(10 * per_iter)
+
+
+def test_count_collectives_loop_multiplied():
+    c = count_collectives(SAMPLE)
+    # one all-gather + one all-reduce per body iteration, x10 trips
+    assert c["all-gather"] == 10
+    assert c["all-reduce"] == 10
+    assert c["all-to-all"] == 0 and c["collective-permute"] == 0
+    assert c["total"] == 20
+
+
+def test_count_collectives_async_pairs_count_once():
+    text = SAMPLE.replace(
+        "%ag = f32[64,128]{1,0} all-gather(%gte1), channel_id=1, "
+        "replica_groups=[2,4]<=[8], dimensions={1}",
+        "%ags = f32[64,128]{1,0} all-gather-start(%gte1), channel_id=1, "
+        "replica_groups=[2,4]<=[8], dimensions={1}\n"
+        "      %ag = f32[64,128]{1,0} all-gather-done(%ags)")
+    c = count_collectives(text)
+    assert c["all-gather"] == 10  # -start counted, -done skipped
+
+
+def test_count_collectives_clean_module():
+    c = count_collectives("HloModule m\n\nENTRY %main (p: f32[4]) -> "
+                          "f32[4] {\n  ROOT %p = f32[4] parameter(0)\n}\n")
+    assert c["total"] == 0
 
 
 def test_analyze_real_lowered_module():
