@@ -143,7 +143,7 @@ def run_analog(cfg, stream, args, mesh=None):
 
 def run_numeric(cfg, stream, args):
     """Same model, same init weights, digital fp32 SGD."""
-    dig = cfg.replace(analog=False)
+    dig = cfg.digital()
     opt = optimizer.sgd(args.lr)
     # identical init: program_linear round-trips dense_init exactly, so
     # reading the analog init back out reproduces the digital init.
@@ -173,7 +173,7 @@ def parity_check(cfg, args) -> float:
     batch = {"tokens": jnp.asarray(rng.integers(
         0, cfg.vocab, size=(args.batch, args.seq)), jnp.int32)}
     la, *_ = M.forward(params, batch, ideal)
-    ld, *_ = M.forward(dig, batch, ideal.replace(analog=False))
+    ld, *_ = M.forward(dig, batch, ideal.digital())
     return float(jnp.max(jnp.abs(la - ld)) / jnp.max(jnp.abs(ld)))
 
 

@@ -1,9 +1,9 @@
 #!/usr/bin/env python
-"""Serving benchmark: static vs continuous batching under a Poisson trace.
+"""Serving benchmark: static vs continuous batching, digital vs analog.
 
 Requests arrive with exponential inter-arrival times, ragged prompt
 lengths, and ragged output-length targets (no EOS — each request wants
-exactly its target token count).  Both engines serve the same trace in
+exactly its target token count).  Engines serve the same trace in
 wall-clock time:
 
   * static   — whenever the engine is free, take up to ``--slots`` arrived
@@ -14,10 +14,18 @@ wall-clock time:
   * continuous — slot scheduler: requests are admitted the moment a slot
     frees, prompts prefill in chunks between decode steps.
 
+The analog section programs the same weights onto tiled crossbars and
+serves the trace through the continuous scheduler with in-array VMM
+decode, then joins the throughput/latency numbers with the arch-cost
+pJ/token projection — the benchmark's p99-vs-pJ rows.
+
 Reported: useful tokens/sec (per-request targets only — padding rows and
 overshoot decode steps don't count) and p50/p99 request latency
 (completion - arrival).  Compilation is warmed up before the clock starts
-for both engines.
+for every engine.  Results land both as a flat dict and as a
+``check_bench.py``-compatible ``rows`` array (each row's generic
+lower-is-better scalar goes in ``us_per_call``; the ``unit`` field says
+what it actually is — µs/token, µs of p99, or pJ/token).
 
     PYTHONPATH=src python benchmarks/serve_bench.py            # ~5 min CPU
     PYTHONPATH=src python benchmarks/serve_bench.py --smoke    # fast sanity
@@ -40,8 +48,9 @@ import jax  # noqa: E402
 import numpy as np  # noqa: E402
 
 from repro.configs import get_config  # noqa: E402
+from repro.hwmodel.arch_cost import serve_energy_per_token  # noqa: E402
 from repro.models import model as M  # noqa: E402
-from repro.serve.engine import Engine, SamplingParams  # noqa: E402
+from repro.serve import Engine, SamplingParams, make_engine  # noqa: E402
 
 
 @dataclasses.dataclass
@@ -92,7 +101,7 @@ def run_static(engine: Engine, trace, slots: int, max_prompt: int):
         prompts = [[0] * (max_prompt - len(r.prompt)) + r.prompt
                    for r in batch] + [dummy] * (slots - len(batch))
         mx = max(r.target for r in batch)
-        engine.generate_static(prompts, SamplingParams(max_new_tokens=mx))
+        engine.generate(prompts, SamplingParams(max_new_tokens=mx))
         done_t = time.perf_counter() - t0
         for r in batch:
             lat.append(done_t - r.arrival)
@@ -101,26 +110,26 @@ def run_static(engine: Engine, trace, slots: int, max_prompt: int):
     return useful / span, lat
 
 
-def run_continuous(engine: Engine, trace, slots: int):
-    eng = engine.continuous(slots)
-    eng.reset(0)
+def run_continuous(engine: Engine, trace):
+    engine.reset(0)
     t0 = time.perf_counter()
     i, meta, lat, useful = 0, {}, [], 0
-    while i < len(trace) or eng.has_work():
+    while i < len(trace) or engine.has_work():
         now = time.perf_counter() - t0
         while i < len(trace) and trace[i].arrival <= now:
-            rid = eng.submit(trace[i].prompt,
-                             SamplingParams(max_new_tokens=trace[i].target))
+            rid = engine.submit(
+                trace[i].prompt,
+                SamplingParams(max_new_tokens=trace[i].target))
             meta[rid] = trace[i]
             i += 1
-        if eng.has_work():
-            for rid in eng.step():
+        if engine.has_work():
+            for rid in engine.step():
                 lat.append((time.perf_counter() - t0) - meta[rid].arrival)
                 useful += meta[rid].target
         elif i < len(trace):
             time.sleep(max(0.0, trace[i].arrival - (time.perf_counter() - t0)))
     span = time.perf_counter() - t0
-    return useful / span, lat, eng
+    return useful / span, lat
 
 
 def main(argv=None):
@@ -138,6 +147,16 @@ def main(argv=None):
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--prefill-chunk", type=int, default=8)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--analog", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="also serve the trace from programmed crossbars "
+                         "(continuous scheduler, in-array VMM decode)")
+    ap.add_argument("--analog-device", default="taox",
+                    help="device model for the analog backend rows")
+    ap.add_argument("--analog-tile", type=int, default=64,
+                    help="sim tile size for the analog backend (the "
+                         "energy rows always project at the paper's "
+                         "Table-I 1024x1024 geometry)")
     ap.add_argument("--out", default=None,
                     help="write the result dict to this JSON file "
                          "(e.g. BENCH_serve.json)")
@@ -151,35 +170,84 @@ def main(argv=None):
     max_target = max(r.target for r in trace)
     max_len = -(-max_prompt // args.prefill_chunk) * args.prefill_chunk \
         + max_target + 8
-    engine = Engine(cfg, params, max_len=max_len,
-                    prefill_chunk=args.prefill_chunk)
+    static_eng = make_engine(cfg, params, scheduler="static",
+                             max_len=max_len,
+                             prefill_chunk=args.prefill_chunk)
+    cont_eng = make_engine(cfg, params, max_len=max_len,
+                           n_slots=args.slots,
+                           prefill_chunk=args.prefill_chunk)
 
     # warm up compilation outside the measured window, for both engines
     warm = [list(rng.integers(0, cfg.vocab, size=max_prompt))] * args.slots
-    engine.generate_static(warm, SamplingParams(max_new_tokens=2))
-    engine.continuous(args.slots).serve(warm[:1],
-                                        SamplingParams(max_new_tokens=2))
+    static_eng.generate(warm, SamplingParams(max_new_tokens=2))
+    cont_eng.generate(warm[:1], SamplingParams(max_new_tokens=2))
 
-    tps_s, lat_s = run_static(engine, trace, args.slots, max_prompt)
-    tps_c, lat_c, eng = run_continuous(engine, trace, args.slots)
+    tps_s, lat_s = run_static(static_eng, trace, args.slots, max_prompt)
+    tps_c, lat_c = run_continuous(cont_eng, trace)
 
     p50_s, p99_s = _percentiles(lat_s)
     p50_c, p99_c = _percentiles(lat_c)
     print(f"trace: n={args.n} rate={args.rate}/s slots={args.slots} "
           f"prompts<= {max_prompt} targets<= {max_target}")
-    print(f"{'engine':<12} {'tok/s':>8} {'p50 lat':>9} {'p99 lat':>9}")
-    print(f"{'static':<12} {tps_s:>8.1f} {p50_s:>8.2f}s {p99_s:>8.2f}s")
-    print(f"{'continuous':<12} {tps_c:>8.1f} {p50_c:>8.2f}s {p99_c:>8.2f}s")
+    print(f"{'engine':<16} {'tok/s':>8} {'p50 lat':>9} {'p99 lat':>9}")
+    print(f"{'static':<16} {tps_s:>8.1f} {p50_s:>8.2f}s {p99_s:>8.2f}s")
+    print(f"{'continuous':<16} {tps_c:>8.1f} {p50_c:>8.2f}s {p99_c:>8.2f}s")
     print(f"speedup: {tps_c / tps_s:.2f}x tokens/sec, "
-          f"decode compiles={eng.decode_compiles} "
-          f"metrics={dict(eng.metrics)}")
+          f"decode compiles={cont_eng.decode_compiles} "
+          f"metrics={dict(cont_eng.metrics)}")
     result = {"arch": args.arch, "smoke": args.smoke, "n": args.n,
               "rate": args.rate, "slots": args.slots,
               "static_tps": tps_s, "continuous_tps": tps_c,
               "speedup": tps_c / tps_s,
               "static_p50": p50_s, "static_p99": p99_s,
               "continuous_p50": p50_c, "continuous_p99": p99_c,
-              "decode_compiles": eng.decode_compiles}
+              "decode_compiles": cont_eng.decode_compiles}
+    rows = [
+        {"name": "serve/static_tps", "us_per_call": 1e6 / tps_s,
+         "unit": "us/token"},
+        {"name": "serve/continuous_tps", "us_per_call": 1e6 / tps_c,
+         "unit": "us/token"},
+        {"name": "serve/continuous_p99", "us_per_call": p99_c * 1e6,
+         "unit": "us"},
+    ]
+
+    if args.analog:
+        acfg = cfg.replace(dtype="float32", analog=True,
+                           analog_mode="device",
+                           analog_device=args.analog_device,
+                           analog_rows=args.analog_tile,
+                           analog_cols=args.analog_tile)
+        aeng = make_engine(acfg, M.program_digital(params, acfg),
+                           max_len=max_len, n_slots=args.slots,
+                           prefill_chunk=args.prefill_chunk)
+        aeng.generate(warm[:1], SamplingParams(max_new_tokens=2))
+        tps_a, lat_a = run_continuous(aeng, trace)
+        p50_a, p99_a = _percentiles(lat_a)
+        epj = serve_energy_per_token(acfg)
+        print(f"{'analog':<16} {tps_a:>8.1f} {p50_a:>8.2f}s "
+              f"{p99_a:>8.2f}s  (decode compiles="
+              f"{aeng.decode_compiles})")
+        print(f"energy/token: analog={epj['analog_pj']:.1f}pJ "
+              f"digital_reram={epj['digital_reram_pj']:.1f}pJ "
+              f"sram={epj['sram_pj']:.1f}pJ")
+        result.update({"analog_tps": tps_a,
+                       "analog_p50": p50_a, "analog_p99": p99_a,
+                       "analog_decode_compiles": aeng.decode_compiles,
+                       "analog_device": args.analog_device,
+                       "energy_per_token_pj": epj})
+        rows += [
+            {"name": "serve/analog/continuous_tps",
+             "us_per_call": 1e6 / tps_a, "unit": "us/token"},
+            {"name": "serve/analog/continuous_p99",
+             "us_per_call": p99_a * 1e6, "unit": "us"},
+            # pJ/token is a model projection, not a wall time — constant
+            # across machines, so the gate's machine normalisation
+            # leaves it untouched.
+            {"name": "serve/analog/energy_per_token",
+             "us_per_call": epj["analog_pj"], "unit": "pJ/token"},
+        ]
+
+    result["rows"] = rows
     if args.out:
         import json
         with open(args.out, "w") as f:

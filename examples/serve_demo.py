@@ -2,7 +2,10 @@
 """Serving demo: continuous-batching prefill + KV-cache decode.
 
     PYTHONPATH=src python examples/serve_demo.py --arch gemma-2b
-    PYTHONPATH=src python examples/serve_demo.py --arch lm100m --engine static
+    PYTHONPATH=src python examples/serve_demo.py --arch lm100m \
+        --scheduler static
+    PYTHONPATH=src python examples/serve_demo.py --arch lm100m \
+        --backend analog          # decode straight from the crossbars
 
 (uses the reduced smoke config of the chosen arch so it runs on CPU;
 the full configs are exercised by the serve_step dry-run cells)
@@ -17,9 +20,12 @@ from repro.launch.serve import main as serve_main  # noqa: E402
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="gemma-2b")
-    ap.add_argument("--engine", default="continuous",
+    ap.add_argument("--scheduler", default="continuous",
                     choices=["continuous", "static"])
+    ap.add_argument("--backend", default="digital",
+                    choices=["digital", "analog"])
     args, _ = ap.parse_known_args()
     serve_main(["--arch", args.arch, "--smoke", "--batch", "4",
                 "--max-new", "24", "--temperature", "0.7",
-                "--engine", args.engine])
+                "--scheduler", args.scheduler,
+                "--backend", args.backend])

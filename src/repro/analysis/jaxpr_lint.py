@@ -1,8 +1,9 @@
 """Layer 1 — jaxpr contract checks over the real entrypoints (RA1xx).
 
 The auditor traces the actual shipped programs — the analog train step in
-exact (shard_map) and GSPMD modes, the serve decode step, and the
-standalone ``xbar_sharded_update`` — with ``jax.make_jaxpr`` over
+exact (shard_map) and GSPMD modes, the serve decode step (digital and
+analog-backend variants), and the standalone ``xbar_sharded_update`` —
+with ``jax.make_jaxpr`` over
 ``eval_shape`` state, so no parameter is ever materialised and no kernel
 runs.  The contracts PRs 3–5 established as conventions become rules:
 
@@ -368,6 +369,42 @@ def _audit_serve_decode(arch: str) -> List[Finding]:
     return findings
 
 
+def _audit_analog_serve_decode(arch: str) -> List[Finding]:
+    """The analog serving backend's decode step: conductance containers
+    (programmed from digital weights, abstractly — no array ever
+    materialises) flow through the tiled VMM sim inside the same
+    ContinuousEngine decode jit the digital path uses.  Same contracts:
+    no f64, no collectives at all, cache buffer donated."""
+    import jax
+    import jax.numpy as jnp
+    from jax import ShapeDtypeStruct as S
+    from repro.models import model as M
+    from repro.serve.engine import ContinuousEngine
+
+    entry = f"serve_decode[{arch},analog]"
+    cfg = _analog_cfg(arch)
+    params = jax.eval_shape(
+        lambda key: M.program_digital(M.init_params(key, cfg.digital()),
+                                      cfg),
+        jax.random.PRNGKey(0))
+    eng = ContinuousEngine(cfg, params, n_slots=2, max_len=64,
+                           prefill_chunk=16)
+    cache = jax.eval_shape(
+        functools.partial(M.init_cache, cfg, 2, 64))
+    tok = S((2,), jnp.int32)
+    temps = S((2,), jnp.float32)
+    key = _key_struct()
+
+    closed = jax.make_jaxpr(eng._decode_impl)(params, cache, tok, key,
+                                              temps)
+    findings = check_no_f64(closed, entry)
+    findings += check_collectives(closed, entry, whitelist=set())
+    findings += check_donation(
+        eng._decode.lower(params, cache, tok, key, temps).as_text(),
+        entry)
+    return findings
+
+
 def _sharded_update_args():
     """A tiny tile-aligned container for the standalone update entry."""
     import jax.numpy as jnp
@@ -459,7 +496,8 @@ def compiled_step_collectives(arch: str = _SMOKE_ARCH
 def audit_jaxpr(arch: str = _SMOKE_ARCH) -> List[Finding]:
     findings: List[Finding] = []
     for builder in (_audit_unsharded_step, _audit_sharded_step,
-                    _audit_gspmd_step, _audit_serve_decode):
+                    _audit_gspmd_step, _audit_serve_decode,
+                    _audit_analog_serve_decode):
         try:
             findings += builder(arch)
         except Exception as e:

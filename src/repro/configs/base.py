@@ -8,7 +8,60 @@ family-preserving config for CPU tests).
 from __future__ import annotations
 
 import dataclasses
+import enum
 from typing import Tuple
+
+
+class AnalogMode(enum.Enum):
+    """Validated execution mode of the analog-crossbar path.
+
+    ``cfg.analog_mode`` stays a plain string field (the config dataclass
+    must remain frozen/hashable and trivially serialisable for
+    checkpoint metadata); this enum is the *resolution* layer every
+    consumer goes through via :func:`resolve_analog_mode` instead of
+    comparing raw strings.
+    """
+
+    DIGITAL = "digital"      # analog path fully off: plain matmuls
+    FAKEQUANT = "fakequant"  # QAT-style I/O quantisation, no device state
+    DEVICE = "device"        # projections programmed onto tiled crossbars
+
+
+def resolve_analog_mode(cfg: "ModelConfig") -> AnalogMode:
+    """THE central analog-mode resolution point.
+
+    Raises loudly on unknown strings and on incoherent combinations:
+
+    * ``analog=False`` + ``analog_mode="device"`` — device state exists
+      but the flag claims the analog path is off; every historical bug
+      in this area came from one of the two fields being stale.  Use
+      :meth:`ModelConfig.digital` to switch a device config off.
+    * ``analog=True`` + ``analog_mode="digital"`` — the inverse
+      contradiction.
+
+    ``analog=False`` with the (default) ``"fakequant"`` string resolves
+    to :attr:`AnalogMode.DIGITAL`: the master switch is off and the mode
+    string is merely unused, not contradictory.
+    """
+    try:
+        mode = AnalogMode(cfg.analog_mode)
+    except ValueError:
+        raise ValueError(
+            f"unknown analog_mode {cfg.analog_mode!r}; expected one of "
+            f"{[m.value for m in AnalogMode]}") from None
+    if not cfg.analog:
+        if mode is AnalogMode.DEVICE:
+            raise ValueError(
+                "incoherent config: analog=False but analog_mode='device' "
+                "(programmed crossbar state with the analog path switched "
+                "off).  Use cfg.digital() to derive a digital view of a "
+                "device config.")
+        return AnalogMode.DIGITAL
+    if mode is AnalogMode.DIGITAL:
+        raise ValueError(
+            "incoherent config: analog=True but analog_mode='digital'; "
+            "pick 'fakequant' or 'device', or set analog=False.")
+    return mode
 
 
 @dataclasses.dataclass(frozen=True)
@@ -64,11 +117,16 @@ class ModelConfig:
 
     # --- analog-crossbar execution (the paper's technique) -------------------
     analog: bool = False           # run projections through the crossbar sim
+    # Stored as the string value of an AnalogMode member; validated and
+    # resolved exclusively through resolve_analog_mode() — do not compare
+    # this field against raw strings.
     # "fakequant": QAT-style I/O quantisation inside a fused digital matmul
     #              (scalable LM integration, no device state).
     # "device":    projections are *programmed* onto tiled crossbars —
     #              forward=VMM, backward=MVM through the same conductances,
     #              updates via the nonlinear device model (in-situ training).
+    # "digital":   explicit off (equivalent to analog=False; what
+    #              cfg.digital() writes so the pair stays coherent).
     analog_mode: str = "fakequant"
     analog_device: str = "taox"    # key into core.DEVICE_MODELS
     analog_rows: int = 1024
@@ -78,8 +136,22 @@ class ModelConfig:
     analog_sat_sigmas: float = 4.0  # integrator range, sigmas of col charge
 
     @property
+    def resolved_analog_mode(self) -> AnalogMode:
+        return resolve_analog_mode(self)
+
+    @property
     def analog_training(self) -> bool:
-        return self.analog and self.analog_mode == "device"
+        return resolve_analog_mode(self) is AnalogMode.DEVICE
+
+    def digital(self) -> "ModelConfig":
+        """Digital-execution view of this config (analog path fully off).
+
+        Rewrites *both* fields so the result passes resolve_analog_mode
+        — a bare ``replace(analog=False)`` on a device config is the
+        incoherent combination that resolution rejects.
+        """
+        return self.replace(analog=False,
+                            analog_mode=AnalogMode.DIGITAL.value)
 
     @property
     def resolved_head_dim(self) -> int:

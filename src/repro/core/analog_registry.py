@@ -346,3 +346,25 @@ def validate_device_params(params, cfg) -> None:
             "device-mode parameter tree has projection matrices that are "
             "not crossbar containers (they would train digitally while "
             f"claiming analog): {bad}")
+
+
+def container_paths(params) -> Tuple[Tuple[str, ...], ...]:
+    """Paths of every crossbar container in a parameter tree, sorted.
+
+    The serve backend keys its per-container drift/read/pulse counters
+    and recalibration sweep order on this enumeration; sorting makes the
+    sweep order (and therefore the whole simulated maintenance schedule)
+    deterministic.
+    """
+    out = []
+
+    def walk(p, path):
+        if _is_container(p):
+            out.append(path)
+            return
+        if isinstance(p, dict):
+            for k in p:
+                walk(p[k], path + (str(k),))
+
+    walk(params, ())
+    return tuple(sorted(out))

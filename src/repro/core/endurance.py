@@ -92,3 +92,133 @@ def check_write_current(write_current: float, n_rows: int,
                         i_limit: float = 33e-6) -> bool:
     """Does a device/write-current choice permit fully-parallel updates?"""
     return write_current <= max_parallel_write_current(n_rows, i_limit)
+
+
+# ---------------------------------------------------------------------------
+# Long-horizon retention / read-disturb (serving lifetime, not training)
+# ---------------------------------------------------------------------------
+#
+# Once a trained array moves to serving, no pulses refresh the cells and
+# two slow mechanisms erode the programmed state (resistive-accelerator
+# surveys identify both as the defining non-idealities of in-array
+# inference):
+#
+# * retention drift — every cell's excess conductance over the floor,
+#   g - g_floor, relaxes following the standard power-law
+#   G(t) = G0 * ((t + t0)/t0)^-nu, with a *per-cell* exponent (a fixed
+#   device property, dispersed cell to cell).  Programmed and reference
+#   cells drift independently, so the differential readout's
+#   common-mode cancellation degrades over time — the dominant accuracy
+#   loss for in-array inference.
+# * read disturb — every inference read applies a small bias stress;
+#   modelled as a deterministic multiplicative loss of excess
+#   conductance per read, (1 - eps)^n_reads, so tests can match
+#   analytic counts.
+#
+# Both act multiplicatively on (g - g_floor) with exponents/rates fixed
+# per cell, so they compose with each other and with themselves across
+# incremental applications:
+# drift_factor(a0, a1) * drift_factor(a1, a2) == drift_factor(a0, a2)
+# exactly.  That composability is what lets the serve engine apply decay
+# lazily, on a wall-clock schedule, instead of every tick.
+
+
+@dataclasses.dataclass(frozen=True)
+class RetentionSpec:
+    """Retention / read-disturb model parameters for served conductances.
+
+    ``nu_sigma`` is the device-to-device dispersion of the drift
+    exponent — the accuracy killer in the retention literature: a
+    *uniform* deviation decay roughly commutes with argmax (it rescales
+    every projection alike), while dispersed per-cell exponents distort
+    the weights relative to each other and genuinely degrade outputs.
+    Each cell's exponent is a fixed device property, drawn
+    deterministically from ``seed`` + the container path, so drift stays
+    reproducible and exactly composable across incremental applications.
+
+    Defaults are deliberately mild (sub-percent drift over a day); tests
+    and long-horizon smokes override ``nu`` upward to make multi-day
+    degradation visible at smoke scale.
+    """
+
+    t0_s: float = 3600.0           # power-law onset time (s since program)
+    nu: float = 0.02               # mean drift exponent (deviation decay)
+    nu_sigma: float = 0.5          # relative per-cell dispersion of nu
+    read_disturb: float = 0.0      # fractional deviation loss per read
+    recal_interval_s: float = 7 * 24 * 3600.0  # scheduled sweep cadence
+    seed: int = 0                  # per-cell exponent draw
+
+
+def cell_nu(spec: RetentionSpec, shape, salt: int = 0) -> Array:
+    """Per-cell drift exponents: nu * max(0, 1 + nu_sigma * N(0,1)).
+
+    ``salt`` (e.g. a CRC of the container path) decorrelates containers;
+    the draw is a pure function of (seed, salt, shape) — a fixed device
+    property, never re-rolled between drift applications.
+    """
+    u = jax.random.normal(
+        jax.random.fold_in(jax.random.PRNGKey(spec.seed), salt),
+        shape, jnp.float32)
+    return spec.nu * jnp.maximum(1.0 + spec.nu_sigma * u, 0.0)
+
+
+def drift_factor(age0_s, age1_s, spec: RetentionSpec, nu=None):
+    """Multiplicative decay of (g - g_ref) between device ages age0->age1.
+
+    ``nu`` (scalar or per-cell array from :func:`cell_nu`) defaults to
+    the spec mean.  Monotone non-increasing in ``age1_s`` and exactly
+    composable: consecutive applications multiply to the single-span
+    factor, because each cell's exponent is fixed.
+    """
+    a0 = jnp.maximum(age0_s, 0.0)
+    a1 = jnp.maximum(age1_s, a0)
+    nu = spec.nu if nu is None else nu
+    return ((a1 + spec.t0_s) / (a0 + spec.t0_s)) ** (-nu)
+
+
+def read_disturb_factor(n_reads, spec: RetentionSpec):
+    """Deviation retained after ``n_reads`` inference reads."""
+    return (1.0 - spec.read_disturb) ** n_reads
+
+
+def apply_retention(g: Array, ref: Array, age0_s, age1_s, n_reads,
+                    spec: RetentionSpec, salt: int = 0,
+                    g_floor: float = 0.0) -> tuple:
+    """Relax a conductance block *and its reference column* toward the
+    conductance floor; returns ``(g, ref)``.
+
+    Every cell — programmed and reference alike — loses excess
+    conductance ``(g - g_floor)`` by its own power-law factor.  With
+    ``nu_sigma == 0`` the two columns decay identically and the
+    differential readout ``(g - ref)`` just shrinks by the common
+    factor; with dispersion each cell has its own fixed exponent, the
+    common-mode cancellation breaks, and the differential picks up an
+    error proportional to the (large) common mode — the dominant
+    accuracy-loss mechanism for in-array inference.
+
+    ``age0_s`` is the device age drift was last applied up to,
+    ``age1_s`` the new age, ``n_reads`` the reads accumulated *since the
+    last application* (they must be consumed by the caller — applying
+    the same reads twice double-counts the disturb).  ``salt``
+    decorrelates the exponent fields between containers.
+    """
+    rd = read_disturb_factor(n_reads, spec)
+    if spec.nu_sigma == 0.0:
+        f = drift_factor(age0_s, age1_s, spec) * rd
+        return (g_floor + (g - g_floor) * f,
+                g_floor + (ref - g_floor) * f)
+    nu_g = cell_nu(spec, g.shape, salt)
+    nu_r = cell_nu(spec, ref.shape, salt ^ 0x5EED)
+    f_g = drift_factor(age0_s, age1_s, spec, nu_g) * rd
+    f_r = drift_factor(age0_s, age1_s, spec, nu_r) * rd
+    return (g_floor + (g - g_floor) * f_g,
+            g_floor + (ref - g_floor) * f_r)
+
+
+def recalibration_pulses(g_drifted: Array, g_target: Array,
+                         dev: DeviceConfig) -> Array:
+    """Total programming pulses a closed-loop re-write sweep needs to
+    restore a drifted block to its stored target (§V.E pulse
+    arithmetic; feeds the serve engine's maintenance energy/wear
+    accounting)."""
+    return jnp.sum(jnp.abs(g_target - g_drifted) / dev.pulse_dg)

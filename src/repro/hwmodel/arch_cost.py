@@ -211,6 +211,30 @@ def report(cfgs: List[ModelConfig], bits: int = 8) -> List[ArchCost]:
     return [analyze_arch(cfg, bits=bits) for cfg in cfgs]
 
 
+def serve_energy_per_token(cfg: ModelConfig, ctx_len: int = 4096,
+                           bits: int = 8) -> Dict[str, float]:
+    """pJ-per-generated-token roll-up for the serving backends.
+
+    Joins the model's projection shapes with the paper's Table-I tile
+    numbers: the analog backend charges one VMM pass per projection plus
+    the digital-core remainder (attention arithmetic, norms, embeddings)
+    — the inference-read side of the paper's 11 fJ/MAC story — against
+    the same token served from a digital-ReRAM or SRAM core.  Feeds the
+    serve benchmark's p99-vs-pJ rows and
+    ``serve.Engine.energy_per_token``.
+    """
+    ac = analyze_arch(cfg, bits=bits, ctx_len=ctx_len)
+    uj_to_pj = 1e6
+    return {
+        "analog_pj": ac.e_inference_token_uj * uj_to_pj,
+        "analog_projection_pj": ac.e_analog_token_uj * uj_to_pj,
+        "digital_reram_pj": ac.e_digital_reram_token_uj * uj_to_pj,
+        "sram_pj": ac.e_sram_token_uj * uj_to_pj,
+        "digital_mac_frac": ac.digital_mac_frac,
+        "fj_per_mac_inference": ac.fj_per_mac_inference,
+    }
+
+
 def train_step_cost(cfg: ModelConfig, n_tokens: int, bits: int = 8,
                     ctx_len: Optional[int] = None,
                     n_shards: int = 1) -> Dict[str, object]:

@@ -18,7 +18,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import ModelConfig
+from repro.configs.base import AnalogMode, ModelConfig, resolve_analog_mode
 from repro.core import AdcConfig
 from repro.core.adc import quantize_dequantize
 from repro.core.tiled_analog import (analog_project, analog_project_batched,
@@ -102,7 +102,7 @@ def proj_from_weights(w: Array, cfg: ModelConfig) -> dict:
     weights programmed onto a tiled-crossbar container in device mode).
     Stacked weights — e.g. an (E, K, N) expert stack — program one tile
     grid (and one calibration) per matrix."""
-    if cfg.analog_training:
+    if resolve_analog_mode(cfg) is AnalogMode.DEVICE:
         return program_stacked(w, crossbar_from_model(cfg))
     return {"w": w}
 
@@ -144,8 +144,8 @@ def project(p: dict, x: Array, cfg: ModelConfig) -> Array:
     fake-quantisation (per-token input DAC + per-K-tile output ADC),
     keeping the HLO a single fused matmul + cheap elementwise epilogues.
 
-    In analog *device* mode (``cfg.analog_mode == "device"``) the params
-    are a tiled-crossbar container and the matmul executes on the simulated
+    In analog *device* mode (``AnalogMode.DEVICE``) the params are a
+    tiled-crossbar container and the matmul executes on the simulated
     array: forward=VMM, backward=MVM through the same conductances, with
     the quantised update operands taped for the in-situ optimizer
     (core/tiled_analog.py).  Fake-quant mode keeps QAT semantics: a fused
@@ -154,7 +154,7 @@ def project(p: dict, x: Array, cfg: ModelConfig) -> Array:
     if is_analog_container(p):
         return analog_project(p, x, crossbar_from_model(cfg))
     w = p["w"].astype(x.dtype)
-    if not cfg.analog:
+    if resolve_analog_mode(cfg) is AnalogMode.DIGITAL:
         return x @ w
     adc = AdcConfig(in_bits=cfg.analog_in_bits,
                     out_bits=cfg.analog_out_bits)

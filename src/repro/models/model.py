@@ -50,7 +50,13 @@ def readout_digital(params, cfg: ModelConfig, path=()):
     dict for projections, the raw (E, K, N) weight stack for expert-
     batched containers (the registry decides which is which) — so the
     same checkpoint can be evaluated (or fine-tuned) with
-    ``cfg.replace(analog=False)``.  A no-op on digital trees.
+    ``cfg.digital()``.  A no-op on digital trees.
+
+    Since the serve backend reads conductances in-array
+    (``repro.serve.make_engine(..., backend="analog")``), this is a
+    convenience wrapper for digital eval/fine-tune flows, not the only
+    exit path from device state.  :func:`program_digital` is its
+    inverse.
     """
     from repro.core.analog_registry import EXPERT_BATCHED, classify
     if is_analog_container(params):
@@ -59,6 +65,37 @@ def readout_digital(params, cfg: ModelConfig, path=()):
     if isinstance(params, dict):
         return {k: readout_digital(v, cfg, path + (k,))
                 for k, v in params.items()}
+    return params
+
+
+def program_digital(params, cfg: ModelConfig, path=()):
+    """Inverse of :func:`readout_digital`: program a digital tree's
+    projections onto tiled-crossbar containers.
+
+    Registry-driven walk: ``{"w": ...}`` projection dicts and raw
+    expert/SSM weight stacks whose path the registry classifies as a
+    crossbar consumer are programmed with ``program_stacked`` under
+    ``cfg``'s device model; digital-core matrices (embeddings, router,
+    norms, ...) pass through untouched.  ``cfg`` must resolve to device
+    mode.  Round-trips: ``readout_digital(program_digital(w)) == w`` up
+    to float error, because ``program_linear``'s default scale
+    (8x the weight RMS) is deterministic in the weights and leaves
+    clipping headroom.
+    """
+    from repro.core.analog_registry import KINDS, classify_param
+    from repro.core.tiled_analog import (crossbar_from_model,
+                                         program_stacked)
+    if cfg.resolved_analog_mode.value != "device":
+        raise ValueError(
+            "program_digital needs a device-mode config (analog=True, "
+            f"analog_mode='device'); got {cfg.resolved_analog_mode.value!r}")
+    if isinstance(params, dict):
+        if set(params) == {"w"} and classify_param(path) in KINDS:
+            return program_stacked(params["w"], crossbar_from_model(cfg))
+        return {k: program_digital(v, cfg, path + (k,))
+                for k, v in params.items()}
+    if getattr(params, "ndim", 0) >= 2 and classify_param(path) in KINDS:
+        return program_stacked(params, crossbar_from_model(cfg))
     return params
 
 

@@ -183,7 +183,7 @@ def _moe_apply_flat(p: dict, x: Array, cfg: ModelConfig
     xt = x.reshape(t, d)
 
     logits = project(p["router"], xt.astype(jnp.float32),
-                     cfg.replace(analog=False))
+                     cfg.digital())
     probs = jax.nn.softmax(logits, axis=-1)
     top_p, top_i = jax.lax.top_k(probs, k)
     top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)

@@ -1,4 +1,8 @@
-"""Serving engines: static batch + continuous batching."""
-from .engine import ContinuousEngine, Engine, Request, SamplingParams
+"""Serving: one `make_engine` entrypoint over digital or analog state."""
+from .engine import (ContinuousEngine, Engine, Request, SamplingParams,
+                     make_engine)
+from .state import (AnalogServeRuntime, ServeState, make_serve_state)
 
-__all__ = ["ContinuousEngine", "Engine", "Request", "SamplingParams"]
+__all__ = ["AnalogServeRuntime", "ContinuousEngine", "Engine", "Request",
+           "SamplingParams", "ServeState", "make_engine",
+           "make_serve_state"]

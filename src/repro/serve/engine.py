@@ -1,10 +1,23 @@
-"""Serving engines: static batch and continuous batching.
+"""Serving engines: one constructor, two backends, two schedulers.
 
-``ContinuousEngine`` is the production-shaped path: a slot-based scheduler
-over a fixed-shape decode batch.  Finished sequences are evicted from their
-slot (EOS / per-request max tokens) and queued requests are admitted into
-the freed row, so the decode batch never drains to the slowest member the
-way a static batch does.  Mechanics:
+    from repro.serve import make_engine, SamplingParams
+
+    engine = make_engine(cfg, state)                       # digital
+    engine = make_engine(acfg, trained, backend="analog")  # in-array
+    outs = engine.generate(prompts, SamplingParams(max_new_tokens=64))
+
+``make_engine(cfg, state, *, backend="digital"|"analog", scheduler=
+"continuous"|"static", ...)`` is THE serving entrypoint.  ``state`` is a
+:class:`~repro.serve.state.ServeState` (or a bare parameter tree, which
+gets wrapped): digital weights, or crossbar containers programmed by
+``AnalogTrainStep`` / ``models.model.program_digital``.  Both backends
+share the scheduler, cache and sampling code verbatim — the analog
+backend simply serves a container tree, which ``models.layers.project``
+already routes through the tiled VMM sim, so decode and chunked prefill
+read the conductances in-array with no ``readout_digital`` round-trip.
+
+``ContinuousEngine`` is the production-shaped scheduler: a slot-based
+continuous batch over a fixed-shape decode step.  Mechanics:
 
   * per-slot KV cache with per-row lengths — one pytree of shape
     (layers, n_slots, max_len, ...) whose rows advance independently,
@@ -17,21 +30,24 @@ way a static batch does.  Mechanics:
   * an arrival-ordered request queue; admission happens whenever a slot
     frees up.
 
-``Engine`` keeps the original API: ``generate()`` routes through a
-continuous engine when the family supports it (dense / moe, no modality
-extras) and otherwise falls back to the legacy static loop, which is also
-kept verbatim as ``generate_static`` — the baseline the serving benchmark
-compares against.
+Analog maintenance rides the same scheduler: ``engine.advance_clock(s)``
+moves a simulated wall clock, retention drift (``core.endurance``) is
+applied lazily as one jitted tree update, and scheduled re-calibration
+sweeps drain **one container per tick in place of the prefill chunk** —
+a calibration sweep is a preemptible pseudo-request that borrows the
+prefill lane while the decode batch keeps stepping, so parity is
+restored without ever stalling in-flight requests for an engine restart.
 
-    engine = Engine(cfg, params, max_len=512)
-    texts = engine.generate(prompts, SamplingParams(max_new_tokens=64))
-
-Supports greedy and temperature sampling and per-sequence EOS stop.
+Deprecated (one release, thin warn-and-forward shims):
+``Engine.generate_static`` -> ``make_engine(..., scheduler="static")``
++ ``generate``; ``Engine.continuous(n)`` -> ``make_engine(...,
+n_slots=n)`` + the engine's own ``submit``/``step`` streaming surface.
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
+import warnings
 from typing import Dict, List, Optional, Sequence
 
 import jax
@@ -41,7 +57,12 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.models import model as M
 
+from .state import (AnalogServeRuntime, ServeState,  # noqa: F401
+                    make_serve_state)
+
 Array = jax.Array
+
+SCHEDULERS = ("continuous", "static")
 
 
 @dataclasses.dataclass
@@ -77,17 +98,23 @@ def _sample(logits: Array, key: Array, temps: Array) -> Array:
 
 
 class ContinuousEngine:
-    """Slot-based continuous-batching engine (see module docstring).
+    """Slot-based continuous-batching scheduler (see module docstring).
 
     Drive it either with ``serve(prompts)`` (submit everything, run to
     completion, results in submission order) or with the streaming API —
     ``submit()`` + repeated ``step()`` — as the benchmark's Poisson-trace
     driver does.  ``step()`` returns the request ids completed that tick.
+
+    ``maintenance`` (an :class:`AnalogServeRuntime`) hooks the analog
+    backend's drift/recalibration into the tick: the runtime owns the
+    live parameter tree, and a recalibration op preempts the tick's
+    prefill chunk while decode proceeds.
     """
 
     def __init__(self, cfg: ModelConfig, params, *, n_slots: int = 4,
                  max_len: int = 512, prefill_chunk: int = 32,
-                 seed: int = 0):
+                 seed: int = 0,
+                 maintenance: Optional[AnalogServeRuntime] = None):
         if cfg.family not in ("dense", "moe"):
             raise ValueError(
                 f"continuous batching needs a positional KV cache per slot; "
@@ -97,6 +124,7 @@ class ContinuousEngine:
         self.n_slots = n_slots
         self.max_len = max_len
         self.prefill_chunk = prefill_chunk
+        self._maintenance = maintenance
         self._axes = M.cache_batch_axes(cfg, max_len)
         self._slot_cache = M.init_cache(cfg, n_slots, max_len)
         # cache buffers are donated: every step updates in place, so the
@@ -165,18 +193,27 @@ class ContinuousEngine:
             or any(s is not None for s in self._slots)
 
     def step(self) -> List[int]:
-        """One scheduler tick: admit a prefilled request into a freed slot
-        if one is waiting, run at most one prefill chunk (prefill proceeds
-        even while every slot is busy — only the final admission needs a
-        free slot), then one batched decode step over the active slots.
-        Returns completed ids."""
+        """One scheduler tick: run pending analog maintenance (a drift
+        application, and at most one recalibration op — the pseudo-
+        request, which takes this tick's prefill lane), admit a
+        prefilled request into a freed slot if one is waiting, run at
+        most one prefill chunk, then one batched decode step over the
+        active slots.  Returns completed ids."""
         done: List[int] = []
+        recal_busy = False
+        if self._maintenance is not None:
+            before = self._maintenance.metrics["recal_containers"]
+            self.params = self._maintenance.tick()
+            recal_busy = \
+                self._maintenance.metrics["recal_containers"] > before
+            if recal_busy:
+                self.metrics["recal_ticks"] += 1
         if self._ready is not None:
             slot = self._free_slot()
             if slot is not None:
                 self._admit(*self._ready, slot)
                 self._ready = None
-        if self._ready is None \
+        if not recal_busy and self._ready is None \
                 and (self._pf is not None or self._queue):
             done += self._prefill_tick()
         if any(s is not None for s in self._slots):
@@ -218,6 +255,8 @@ class ContinuousEngine:
         tok, row = self._chunk(self.params, row, jnp.asarray(buf),
                                len(chunk), k, temps)
         self.metrics["prefill_chunks"] += 1
+        if self._maintenance is not None:
+            self._maintenance.note_reads(1)
         consumed += len(chunk)
         if consumed < len(req.prompt):
             # intermediate chunk: nothing to read back — leave the result
@@ -256,6 +295,8 @@ class ContinuousEngine:
             self.params, self._slot_cache, jnp.asarray(tok), k,
             jnp.asarray(temps))
         self.metrics["decode_steps"] += 1
+        if self._maintenance is not None:
+            self._maintenance.note_reads(1)
         t = np.asarray(nxt)
         done: List[int] = []
         for i, s in enumerate(self._slots):
@@ -277,20 +318,76 @@ class ContinuousEngine:
         return done
 
 
-class Engine:
-    """User-facing engine.  ``generate()`` keeps the original static-batch
-    signature but runs on the continuous engine whenever the model family
-    supports it; ``generate_static`` is the legacy whole-batch loop."""
+def make_engine(cfg: ModelConfig, state, *,
+                backend: Optional[str] = None,
+                scheduler: str = "continuous",
+                max_len: int = 512,
+                n_slots: Optional[int] = None,
+                prefill_chunk: int = 32,
+                extras: Optional[dict] = None,
+                retention=None) -> "Engine":
+    """Build a serving engine — THE serving entrypoint.
 
-    def __init__(self, cfg: ModelConfig, params, max_len: int = 512,
+    Args:
+      cfg: model config.  For ``backend="analog"`` it must resolve to
+        device mode (the same config the containers were trained with).
+      state: a :class:`ServeState`, or a bare parameter tree to wrap —
+        digital weights, or crossbar containers from ``AnalogTrainStep``
+        / ``models.model.program_digital`` /
+        ``train.checkpoint.from_checkpoint``.
+      backend: ``"digital"`` or ``"analog"``; ``None`` infers from the
+        tree (containers mean analog).  A backend that contradicts the
+        tree raises.
+      scheduler: ``"continuous"`` (slot-based continuous batching; the
+        default, used whenever the family supports it) or ``"static"``
+        (one left-padded lock-step batch — the baseline the serving
+        benchmark compares against).
+      max_len / n_slots / prefill_chunk: cache geometry.  ``n_slots``
+        defaults to the per-call batch size for ``generate`` and to 4
+        for the streaming surface.
+      extras: modality stub inputs ({"vision": ...} / {"audio": ...});
+        forces the static scheduler.
+      retention: :class:`~repro.core.endurance.RetentionSpec` override
+        for the analog backend's drift/recalibration model.
+
+    Returns an :class:`Engine` whose whole public surface is
+    ``generate(prompts, sp, seed)`` plus the streaming/maintenance
+    methods; digital and analog backends share every line of scheduler,
+    cache and sampling code.
+    """
+    return Engine(cfg, state, max_len=max_len, extras=extras,
+                  n_slots=n_slots, prefill_chunk=prefill_chunk,
+                  backend=backend, scheduler=scheduler,
+                  retention=retention)
+
+
+class Engine:
+    """Backend-parameterised serving engine; build via :func:`make_engine`.
+
+    The positional ``(cfg, params, max_len, extras, n_slots,
+    prefill_chunk)`` constructor shape is kept for source compatibility
+    — a bare parameter tree is wrapped into a :class:`ServeState`.
+    """
+
+    def __init__(self, cfg: ModelConfig, state=None, max_len: int = 512,
                  extras: Optional[dict] = None,
-                 n_slots: Optional[int] = None, prefill_chunk: int = 32):
+                 n_slots: Optional[int] = None, prefill_chunk: int = 32,
+                 *, backend: Optional[str] = None,
+                 scheduler: str = "continuous", retention=None):
+        if scheduler not in SCHEDULERS:
+            raise ValueError(f"unknown scheduler {scheduler!r}; expected "
+                             f"one of {SCHEDULERS}")
         self.cfg = cfg
-        self.params = params
+        self.state = make_serve_state(cfg, state, backend=backend,
+                                      retention=retention)
+        self.backend = self.state.backend
+        self.scheduler = scheduler
         self.max_len = max_len
         self.extras = extras or {}
         self.n_slots = n_slots
         self.prefill_chunk = prefill_chunk
+        self._maint = AnalogServeRuntime(self.state, cfg) \
+            if self.state.is_analog else None
         # the static loop threads the cache through every decode step, so
         # its buffers are donated exactly like the continuous engine's
         self._decode = jax.jit(self._decode_impl, donate_argnums=(1,))
@@ -299,36 +396,111 @@ class Engine:
         self._cont: Dict[int, ContinuousEngine] = {}
 
     @property
+    def params(self):
+        """The live parameter tree (post any analog maintenance)."""
+        return self.state.params
+
+    @property
     def supports_continuous(self) -> bool:
         return self.cfg.family in ("dense", "moe") and not self.extras
 
-    def continuous(self, n_slots: int) -> ContinuousEngine:
-        """The (cached) continuous engine for a given slot count — caching
-        preserves the jit caches across generate() calls."""
-        eng = self._cont.get(n_slots)
-        if eng is None:
-            eng = ContinuousEngine(
-                self.cfg, self.params, n_slots=n_slots,
-                max_len=self.max_len, prefill_chunk=self.prefill_chunk)
-            self._cont[n_slots] = eng
-        return eng
-
+    # ------------------------------------------------------------ generation
     def generate(self, prompts: Sequence[Sequence[int]],
                  sp: SamplingParams = SamplingParams(),
                  seed: int = 0) -> List[List[int]]:
         """Greedy/temperature decoding for a batch of token prompts.
 
-        Routed through the continuous engine (per-request chunked prefill,
-        so ragged prompts carry no left-padding contamination); families
-        without a per-slot positional cache use the static path.
+        Routed through the continuous scheduler (per-request chunked
+        prefill, so ragged prompts carry no left-padding contamination)
+        unless the engine was built with ``scheduler="static"`` or the
+        family lacks a per-slot positional cache.
         """
-        if not self.supports_continuous:
-            return self.generate_static(prompts, sp, seed)
-        eng = self.continuous(self.n_slots or len(prompts))
+        if self.scheduler == "static" or not self.supports_continuous:
+            return self._generate_static(prompts, sp, seed)
+        eng = self._continuous(self.n_slots or len(prompts))
         eng.reset(seed)
         return eng.serve(prompts, sp)
 
-    # ----------------------------------------------------- legacy static path
+    # ------------------------------------------------------ streaming surface
+    @property
+    def stream(self) -> ContinuousEngine:
+        """The engine's continuous scheduler core, for streaming use
+        (``submit`` + ``step``); slot count is ``n_slots`` (default 4)."""
+        if self.scheduler == "static" or not self.supports_continuous:
+            raise ValueError(
+                "streaming needs the continuous scheduler (family "
+                f"{self.cfg.family!r}, scheduler {self.scheduler!r})")
+        if self.n_slots:
+            return self._continuous(self.n_slots)
+        if self._cont:  # reuse the most recent core (and its jit caches)
+            return next(reversed(self._cont.values()))
+        return self._continuous(4)
+
+    def submit(self, prompt: Sequence[int],
+               sp: SamplingParams = SamplingParams(),
+               arrival: float = 0.0) -> int:
+        return self.stream.submit(prompt, sp, arrival)
+
+    def step(self) -> List[int]:
+        return self.stream.step()
+
+    def has_work(self) -> bool:
+        return self.stream.has_work()
+
+    def reset(self, seed: int = 0) -> None:
+        self.stream.reset(seed)
+
+    @property
+    def completed(self) -> Dict[int, List[int]]:
+        return self.stream.completed
+
+    @property
+    def metrics(self):
+        return self.stream.metrics
+
+    @property
+    def decode_compiles(self) -> Optional[int]:
+        return self.stream.decode_compiles
+
+    # ------------------------------------------------------ analog lifecycle
+    def _require_analog(self) -> AnalogServeRuntime:
+        if self._maint is None:
+            raise ValueError("analog maintenance needs backend='analog' "
+                             f"(this engine is {self.backend!r})")
+        return self._maint
+
+    @property
+    def maintenance(self) -> Optional[AnalogServeRuntime]:
+        """The analog drift/recalibration runtime (None when digital)."""
+        return self._maint
+
+    def advance_clock(self, seconds: float) -> None:
+        """Advance the simulated deployment clock: retention drift is
+        applied (lazily, at the next tick) and a recalibration sweep is
+        scheduled whenever the retention interval elapses."""
+        self._require_analog().advance_clock(seconds)
+
+    def start_recalibration(self) -> None:
+        """Schedule a full recalibration sweep now; it drains one
+        container per scheduler tick, preempting only the prefill lane."""
+        self._require_analog().schedule_recalibration()
+
+    def run_maintenance(self) -> None:
+        """Drain pending drift and the whole recalibration queue without
+        serving (for idle engines / the static scheduler; the continuous
+        scheduler drains maintenance incrementally in ``step``)."""
+        m = self._require_analog()
+        m.tick()
+        while m.recal_pending:
+            m.tick()
+
+    def energy_per_token(self, ctx_len: int = 4096) -> Dict[str, float]:
+        """pJ/token projection for this model at the paper's Table-I
+        geometry (``hwmodel.arch_cost`` roll-up)."""
+        from repro.hwmodel.arch_cost import serve_energy_per_token
+        return serve_energy_per_token(self.cfg, ctx_len=ctx_len)
+
+    # --------------------------------------------------------- static path
     def _prefill_impl(self, params, tokens):
         batch = {"tokens": tokens, **self.extras}
         return M.prefill(params, batch, self.cfg, max_len=self.max_len)
@@ -339,17 +511,21 @@ class Engine:
         temps = jnp.full((logits.shape[0],), temperature)
         return _sample(logits, key, temps), cache
 
-    def generate_static(self, prompts: Sequence[Sequence[int]],
-                        sp: SamplingParams = SamplingParams(),
-                        seed: int = 0) -> List[List[int]]:
+    def _generate_static(self, prompts: Sequence[Sequence[int]],
+                         sp: SamplingParams = SamplingParams(),
+                         seed: int = 0) -> List[List[int]]:
         """Static batch: one shared prefill (ragged prompts right-aligned
         by left-padding) and lock-step decode until every row finishes."""
+        params = self._maint.tick() if self._maint is not None \
+            else self.state.params
         b = len(prompts)
         plen = max(len(p) for p in prompts)
         toks = np.zeros((b, plen), dtype=np.int32)
         for i, p in enumerate(prompts):
             toks[i, plen - len(p):] = p  # left-pad with 0s
-        logits, cache = self._prefill(self.params, jnp.asarray(toks))
+        logits, cache = self._prefill(params, jnp.asarray(toks))
+        if self._maint is not None:
+            self._maint.note_reads(1)
         tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
 
         key = jax.random.PRNGKey(seed)
@@ -357,8 +533,10 @@ class Engine:
         done = np.zeros(b, dtype=bool)
         for i in range(sp.max_new_tokens - 1):
             key, k = jax.random.split(key)
-            tok, cache = self._decode(self.params, cache, tok, k,
+            tok, cache = self._decode(params, cache, tok, k,
                                       jnp.float32(sp.temperature))
+            if self._maint is not None:
+                self._maint.note_reads(1)
             t_host = np.asarray(tok)
             for j in range(b):
                 if not done[j]:
@@ -368,3 +546,38 @@ class Engine:
             if done.all():
                 break
         return out
+
+    # ------------------------------------------------- deprecated (1 release)
+    def continuous(self, n_slots: int) -> ContinuousEngine:
+        """Deprecated: build with ``make_engine(cfg, state, n_slots=n)``
+        and use the engine's own ``submit``/``step`` streaming surface
+        (or the ``stream`` property)."""
+        warnings.warn(
+            "Engine.continuous(n_slots) is deprecated; pass n_slots to "
+            "make_engine(...) and use the engine's submit/step/generate "
+            "surface", DeprecationWarning, stacklevel=2)
+        return self._continuous(n_slots)
+
+    def generate_static(self, prompts: Sequence[Sequence[int]],
+                        sp: SamplingParams = SamplingParams(),
+                        seed: int = 0) -> List[List[int]]:
+        """Deprecated: build with ``make_engine(..., scheduler="static")``
+        and call ``generate``."""
+        warnings.warn(
+            "Engine.generate_static is deprecated; build the engine with "
+            "make_engine(..., scheduler='static') and call generate()",
+            DeprecationWarning, stacklevel=2)
+        return self._generate_static(prompts, sp, seed)
+
+    # --------------------------------------------------------------- helpers
+    def _continuous(self, n_slots: int) -> ContinuousEngine:
+        """The (cached) continuous scheduler for a slot count — caching
+        preserves the jit caches across generate() calls."""
+        eng = self._cont.get(n_slots)
+        if eng is None:
+            eng = ContinuousEngine(
+                self.cfg, self.state.params, n_slots=n_slots,
+                max_len=self.max_len, prefill_chunk=self.prefill_chunk,
+                maintenance=self._maint)
+            self._cont[n_slots] = eng
+        return eng

@@ -1,0 +1,298 @@
+"""Serve-side state: digital weights or programmed crossbars + drift.
+
+``ServeState`` is the single value an :class:`~repro.serve.engine.Engine`
+serves from.  For the digital backend it is just a parameter tree; for
+the analog backend it carries the programmed containers *plus* the
+deployment-lifetime bookkeeping the paper's inference-read story needs:
+
+* ``g_target`` — a pristine copy of every container's conductance block,
+  captured at programming time.  Recalibration sweeps restore ``g`` from
+  it (closed-loop reprogramming), which on a nonoise device restores
+  output parity exactly.
+* per-container device age, read counts, and cumulative reprogramming
+  pulses — keyed on the registry's :func:`container_paths` enumeration
+  so the maintenance schedule is deterministic.
+
+``AnalogServeRuntime`` is the maintenance engine over one ServeState:
+it applies wall-clock retention drift lazily (the power-law factor in
+``core.endurance`` composes exactly across incremental applications, so
+nothing is lost by batching days of simulated time into one jitted tree
+update) and drains recalibration sweeps one container per scheduler
+tick — the "preemptible pseudo-request": a sweep op occupies a tick's
+prefill budget, never the decode step, so in-flight requests keep
+decoding while calibration runs.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import functools
+import zlib
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import AnalogMode, resolve_analog_mode
+from repro.core.analog_registry import container_paths
+from repro.core.endurance import (RetentionSpec, apply_retention,
+                                  recalibration_pulses)
+from repro.core.tiled_analog import (crossbar_from_model,
+                                     is_analog_container)
+
+Array = jax.Array
+Path = Tuple[str, ...]
+
+BACKENDS = ("digital", "analog")
+
+
+@dataclasses.dataclass
+class ServeState:
+    """What an engine serves from (see module docstring).
+
+    Build with :func:`make_serve_state` (or
+    ``train.checkpoint.to_serve_state`` /
+    ``train.checkpoint.from_checkpoint``), not by hand — the factory
+    validates backend/params coherence and captures ``g_target``.
+    """
+
+    params: Any
+    backend: str = "digital"
+    retention: Optional[RetentionSpec] = None
+    # ---- analog-only bookkeeping (empty for the digital backend) ----
+    paths: Tuple[Path, ...] = ()
+    # path -> {"g": ..., "ref": ...} pristine programming targets
+    g_target: Dict[Path, Dict[str, Array]] = dataclasses.field(
+        default_factory=dict)
+    clock_s: float = 0.0                 # simulated wall clock
+    age_s: Dict[Path, float] = dataclasses.field(default_factory=dict)
+    reads: Dict[Path, int] = dataclasses.field(default_factory=dict)
+    reads_unapplied: Dict[Path, int] = dataclasses.field(
+        default_factory=dict)
+    pulses: Dict[Path, float] = dataclasses.field(default_factory=dict)
+
+    @property
+    def is_analog(self) -> bool:
+        return self.backend == "analog"
+
+
+def make_serve_state(cfg, params, *, backend: Optional[str] = None,
+                     retention: Optional[RetentionSpec] = None
+                     ) -> ServeState:
+    """Wrap a parameter tree as a ServeState.
+
+    ``backend=None`` infers from the tree: any crossbar container means
+    ``"analog"``.  An explicit backend that contradicts the tree raises
+    — serving conductances through the digital path (or raw weights
+    through the analog path) is exactly the silent mismatch this type
+    exists to prevent.  Idempotent on an existing ServeState.
+    """
+    if isinstance(params, ServeState):
+        if backend is not None and backend != params.backend:
+            raise ValueError(
+                f"ServeState already has backend={params.backend!r}; "
+                f"cannot rewrap as {backend!r}")
+        return params
+    if params is None:
+        raise ValueError("make_serve_state needs a parameter tree")
+    paths = container_paths(params)
+    inferred = "analog" if paths else "digital"
+    backend = backend or inferred
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown backend {backend!r}; expected one of "
+                         f"{BACKENDS}")
+    if backend == "analog" and not paths:
+        raise ValueError(
+            "backend='analog' needs programmed crossbar containers; "
+            "train in device mode, or program a digital tree with "
+            "models.model.program_digital")
+    if backend == "digital" and paths:
+        raise ValueError(
+            "backend='digital' got conductance containers; serve with "
+            "backend='analog', or read them out first with "
+            "models.model.readout_digital")
+    if backend == "digital":
+        return ServeState(params=params, backend="digital")
+    if resolve_analog_mode(cfg) is not AnalogMode.DEVICE:
+        raise ValueError(
+            "analog serving needs a device-mode config (analog=True, "
+            "analog_mode='device'); got resolved mode "
+            f"{resolve_analog_mode(cfg).value!r}")
+    # Targets must be independent buffers: maintenance may replace
+    # params arrays, and the pristine copies must outlive them all.
+    # Both columns are captured — programmed cells AND the reference
+    # (drift relaxes both, and recalibration reprograms both).
+    g_target = {p: {"g": jnp.array(_tree_get(params, p)["g"]),
+                    "ref": jnp.array(_tree_get(params, p)["ref"])}
+                for p in paths}
+    return ServeState(
+        params=params, backend="analog",
+        retention=retention or RetentionSpec(),
+        paths=paths, g_target=g_target,
+        age_s={p: 0.0 for p in paths},
+        reads={p: 0 for p in paths},
+        reads_unapplied={p: 0 for p in paths},
+        pulses={p: 0.0 for p in paths})
+
+
+def _tree_get(params, path: Path):
+    for k in path:
+        params = params[k]
+    return params
+
+
+def _tree_set(params, path: Path, value):
+    """Immutable path update (dict-tree only, which is all we store)."""
+    if not path:
+        return value
+    out = dict(params)
+    out[path[0]] = _tree_set(params[path[0]], path[1:], value)
+    return out
+
+
+class AnalogServeRuntime:
+    """Drift + recalibration maintenance over one ServeState.
+
+    Engine contract:
+
+    * :meth:`note_reads` once per model application (decode tick /
+      prefill chunk / static step) — accumulates read-disturb counts.
+    * :meth:`advance_clock` whenever simulated wall time passes.
+    * :meth:`tick` once per scheduler tick; it applies any pending drift
+      tree-wide, runs AT MOST ONE container recalibration, and returns
+      the current parameter tree.  Consumers must rebind their params to
+      the return value every tick — the runtime owns the live tree.
+
+    Everything is deterministic: drift and disturb are closed-form
+    factors, the sweep order is the registry's sorted container
+    enumeration, and recalibration copies ``g_target`` back verbatim.
+    """
+
+    def __init__(self, state: ServeState, cfg):
+        if not state.is_analog:
+            raise ValueError("AnalogServeRuntime needs an analog "
+                             "ServeState")
+        self.state = state
+        self.cfg = cfg
+        self.dev = crossbar_from_model(cfg).device
+        self.spec = state.retention or RetentionSpec()
+        self.metrics: collections.Counter = collections.Counter()
+        self._pending_s = 0.0
+        self._since_recal_s = 0.0
+        self._queue: collections.deque = collections.deque()
+        # One jit each: the drift update takes ages/reads as traced
+        # scalars so a multi-day advance and a one-second advance share
+        # the same executable.  Maintenance jits deliberately do NOT
+        # donate: they run once per simulated day (not per token), and
+        # engines hold references to the pre-maintenance tree until
+        # they rebind at their next tick.
+        # audit: allow RA304 -- maintenance-rate jit; callers still hold the input tree
+        self._drift = jax.jit(self._drift_impl)
+        self._recal_jits: Dict[Path, Any] = {}
+
+    # ------------------------------------------------ engine-facing API
+    def advance_clock(self, seconds: float) -> None:
+        """Advance the simulated wall clock; drift is applied lazily at
+        the next tick, and a recalibration sweep is scheduled whenever
+        the retention spec's interval elapses."""
+        if seconds < 0:
+            raise ValueError("cannot advance the clock backwards")
+        self._pending_s += seconds
+        self._since_recal_s += seconds
+        self.state.clock_s += seconds
+        self.metrics["sim_seconds"] += seconds
+        if self._since_recal_s >= self.spec.recal_interval_s:
+            self.schedule_recalibration()
+
+    def note_reads(self, n: int = 1) -> None:
+        """Count ``n`` inference reads of every container (one model
+        application reads each projection's array once)."""
+        for p in self.state.paths:
+            self.state.reads[p] += n
+            self.state.reads_unapplied[p] += n
+
+    def schedule_recalibration(self) -> None:
+        """Queue a full sweep at container granularity; :meth:`tick`
+        drains it one container per call."""
+        pending = set(self._queue)
+        for p in self.state.paths:
+            if p not in pending:
+                self._queue.append(p)
+        self._since_recal_s = 0.0
+        self.metrics["recal_sweeps"] += 1
+
+    @property
+    def recal_pending(self) -> int:
+        return len(self._queue)
+
+    @property
+    def pending_drift_s(self) -> float:
+        return self._pending_s
+
+    def tick(self):
+        """One maintenance tick; returns the current parameter tree."""
+        params = self.state.params
+        if self._pending_s > 0.0:
+            params = self._apply_drift(params)
+        if self._queue:
+            params = self._recal_one(params, self._queue.popleft())
+        self.state.params = params
+        return params
+
+    # ---------------------------------------------------------- internals
+    def _apply_drift(self, params):
+        dt = self._pending_s
+        self._pending_s = 0.0
+        key = "/".join  # dict pytrees keyed on joined paths for the jit
+        a0 = {key(p): jnp.float32(self.state.age_s[p])
+              for p in self.state.paths}
+        a1 = {key(p): jnp.float32(self.state.age_s[p] + dt)
+              for p in self.state.paths}
+        rd = {key(p): jnp.float32(self.state.reads_unapplied[p])
+              for p in self.state.paths}
+        params = self._drift(params, a0, a1, rd)
+        for p in self.state.paths:
+            self.state.age_s[p] += dt
+            self.state.reads_unapplied[p] = 0
+        self.metrics["drift_applications"] += 1
+        return params
+
+    def _drift_impl(self, params, a0, a1, rd):
+        floor = float(self.dev.gmin)
+
+        def walk(p, path):
+            if is_analog_container(p):
+                k = "/".join(path)
+                g, ref = apply_retention(p["g"], p["ref"], a0[k], a1[k],
+                                         rd[k], self.spec,
+                                         salt=zlib.crc32(k.encode()),
+                                         g_floor=floor)
+                return {**p, "g": g, "ref": ref}
+            if isinstance(p, dict):
+                return {k: walk(v, path + (k,)) for k, v in p.items()}
+            return p
+
+        return walk(params, ())
+
+    def _recal_one(self, params, path: Path):
+        fn = self._recal_jits.get(path)
+        if fn is None:
+            # audit: allow RA304 -- sweep-rate jit; g_target aliases must survive the call
+            fn = jax.jit(functools.partial(self._recal_impl, path=path))
+            self._recal_jits[path] = fn
+        params, pulses = fn(params, self.state.g_target[path])
+        n_pulses = float(pulses)
+        self.state.age_s[path] = 0.0
+        self.state.reads[path] = 0
+        self.state.reads_unapplied[path] = 0
+        self.state.pulses[path] += n_pulses
+        self.metrics["recal_containers"] += 1
+        self.metrics["recal_pulses"] += n_pulses
+        return params
+
+    def _recal_impl(self, params, target, *, path: Path):
+        cont = _tree_get(params, path)
+        pulses = recalibration_pulses(cont["g"], target["g"], self.dev) \
+            + recalibration_pulses(cont["ref"], target["ref"], self.dev)
+        new = {**cont, "g": target["g"], "ref": target["ref"]}
+        return _tree_set(params, path, new), pulses

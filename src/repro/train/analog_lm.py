@@ -63,7 +63,8 @@ import jax.numpy as jnp
 
 import numpy as np
 
-from repro.configs.base import ModelConfig
+from repro.configs.base import (AnalogMode, ModelConfig,
+                                resolve_analog_mode)
 from repro.core import analog_registry as registry
 from repro.core import shardctx
 from repro.core.tiled_analog import (crossbar_from_model,
@@ -129,9 +130,11 @@ class AnalogTrainStep:
                  interpret: Optional[bool] = None, bits: int = 8,
                  impl: Optional[str] = None, noise_mode: str = "kernel",
                  mesh=None, exact: bool = True):
-        if not cfg.analog_training:
-            raise ValueError("cfg must have analog=True, "
-                             "analog_mode='device'")
+        if resolve_analog_mode(cfg) is not AnalogMode.DEVICE:
+            raise ValueError(
+                f"AnalogTrainStep needs a device-mode config "
+                f"(resolved {resolve_analog_mode(cfg).value!r}); set "
+                f"analog=True, analog_mode={AnalogMode.DEVICE.value!r}")
         if noise_mode not in ("kernel", "host"):
             raise ValueError("noise_mode must be 'kernel' or 'host'")
         self.cfg = cfg

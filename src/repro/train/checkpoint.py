@@ -26,6 +26,8 @@ from typing import Any, Optional
 import jax
 import numpy as np
 
+from repro.core.tiled_analog import pop_tapes
+
 
 def _flatten(tree) -> dict:
     flat = {}
@@ -115,3 +117,50 @@ def restore(ckpt_dir: str | Path, like: Any, step: Optional[int] = None,
             arr = jax.device_put(arr, flat_sh[i])
         leaves.append(arr)
     return jax.tree_util.tree_unflatten(flat_like[1], leaves)
+
+
+# ---------------------------------------------------------------------------
+# Train -> serve handoff
+# ---------------------------------------------------------------------------
+
+def to_serve_state(state: Any, cfg, *, backend: Optional[str] = None,
+                   retention=None):
+    """Convert a training state (or bare parameter tree) into a
+    :class:`~repro.serve.state.ServeState`.
+
+    Accepts the ``{"params", "step", ...}`` dict of ``AnalogTrainStep``
+    / the digital train loop, or a raw parameter tree.  Any per-step
+    tape leaves are stripped (serving never runs the backward pass), and
+    the registry-driven factory captures per-container programming
+    targets + zeroed drift counters — trained conductance containers
+    load directly into the analog serve backend, no
+    ``readout_digital`` round-trip.
+    """
+    from repro.serve.state import make_serve_state
+    params = state["params"] if isinstance(state, dict) \
+        and "params" in state else state
+    params, _, _ = pop_tapes(params)
+    return make_serve_state(cfg, params, backend=backend,
+                            retention=retention)
+
+
+def from_checkpoint(ckpt_dir: str | Path, cfg, *,
+                    step: Optional[int] = None,
+                    backend: Optional[str] = None, retention=None):
+    """Restore the latest (or ``step``'s) committed training checkpoint
+    straight into a ServeState ready for ``serve.make_engine``.
+
+    The restore template comes from the config: device-mode configs
+    restore the analog training state (conductance containers included),
+    digital configs restore a plain parameter tree.
+    """
+    from repro.models import model as M
+    if cfg.analog_training:
+        from repro.train.analog_lm import init_state
+        like = jax.eval_shape(
+            lambda: init_state(jax.random.PRNGKey(0), cfg))
+    else:
+        like = jax.eval_shape(
+            lambda: M.init_params(jax.random.PRNGKey(0), cfg))
+    state = restore(ckpt_dir, like, step=step)
+    return to_serve_state(state, cfg, backend=backend, retention=retention)

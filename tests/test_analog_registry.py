@@ -238,7 +238,7 @@ def test_moe_ssm_analog_numeric_loss_parity(name):
     digital = M.readout_digital(params, cfg)
     batch = _batch(cfg, b=4, s=16)
     la, _ = M.loss_fn(params, batch, cfg)
-    ld, _ = M.loss_fn(digital, batch, cfg.replace(analog=False))
+    ld, _ = M.loss_fn(digital, batch, cfg.digital())
     np.testing.assert_allclose(float(la), float(ld), rtol=1e-2)
 
 

@@ -84,7 +84,7 @@ def test_forward_parity_ideal_device_high_bits():
     digital = M.readout_digital(params, cfg)
     batch = _batch(cfg)
     la, *_ = M.forward(params, batch, cfg)
-    ld, *_ = M.forward(digital, batch, cfg.replace(analog=False))
+    ld, *_ = M.forward(digital, batch, cfg.digital())
     np.testing.assert_allclose(la, ld, rtol=1e-2, atol=1e-2)
 
 

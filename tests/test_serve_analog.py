@@ -1,0 +1,299 @@
+"""Analog serving backend: retention physics, typed modes, drift +
+recalibration under load, checkpoint handoff, and the deprecation shims.
+
+The parity tests run the lm100m smoke model on a nonoise device with
+14-bit I/O and 64x64 tiles — the geometry where the tiled VMM sim is
+bit-faithful enough that greedy decode from the crossbars reproduces the
+digital tokens exactly, so drift-induced token flips (and their repair
+by recalibration) are unambiguous signals rather than noise.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.configs.base import AnalogMode, resolve_analog_mode
+from repro.core.endurance import (RetentionSpec, apply_retention, cell_nu,
+                                  drift_factor, read_disturb_factor)
+from repro.models import model as M
+from repro.serve import SamplingParams, make_engine, make_serve_state
+from repro.train import checkpoint
+
+CFG = get_config("lm100m", smoke=True)
+# Nonoise device + high-bit I/O: in-array greedy decode is token-exact.
+ACFG = CFG.replace(dtype="float32", analog=True, analog_mode="device",
+                   analog_device="taox-nonoise",
+                   analog_rows=64, analog_cols=64,
+                   analog_in_bits=14, analog_out_bits=14,
+                   analog_sat_sigmas=8.0)
+DCFG = ACFG.digital()
+
+PARAMS = M.init_params(jax.random.PRNGKey(0), DCFG)
+APARAMS = M.program_digital(PARAMS, ACFG)
+
+PROMPTS = [[3, 1, 4, 1, 5, 9], [2, 7, 1, 8]]
+SP = SamplingParams(max_new_tokens=8)
+
+# Mild dispersion over days of simulated time: enough to flip greedy
+# tokens through the broken common-mode cancellation, small enough that
+# the conductances stay far from the floor.
+DRIFT = RetentionSpec(nu=0.05, nu_sigma=0.5)
+
+
+def _analog_engine(retention=None, n_slots=2):
+    return make_engine(ACFG, M.program_digital(PARAMS, ACFG),
+                       max_len=64, n_slots=n_slots, prefill_chunk=4,
+                       retention=retention)
+
+
+# ------------------------------------------------------------- retention
+
+def test_drift_factor_monotone_and_composable():
+    spec = RetentionSpec(nu=0.05, nu_sigma=0.5)
+    ts = [0.0, 60.0, 3600.0, 86400.0, 7 * 86400.0]
+    fs = [float(drift_factor(0.0, t, spec)) for t in ts]
+    assert fs[0] == 1.0
+    assert all(a >= b for a, b in zip(fs, fs[1:]))   # monotone decay
+    assert all(0.0 < f <= 1.0 for f in fs)
+    # exact composability with a dispersed per-cell exponent field: two
+    # incremental applications == one spanning application
+    nu = cell_nu(spec, (8, 8), salt=17)
+    f_split = drift_factor(0.0, 3600.0, spec, nu) \
+        * drift_factor(3600.0, 86400.0, spec, nu)
+    f_span = drift_factor(0.0, 86400.0, spec, nu)
+    np.testing.assert_allclose(f_split, f_span, rtol=1e-6)
+
+
+def test_cell_nu_is_a_fixed_device_property():
+    spec = RetentionSpec(nu=0.05, nu_sigma=0.5)
+    np.testing.assert_array_equal(cell_nu(spec, (4, 4), salt=3),
+                                  cell_nu(spec, (4, 4), salt=3))
+    assert not np.array_equal(cell_nu(spec, (4, 4), salt=3),
+                              cell_nu(spec, (4, 4), salt=4))
+    assert float(jnp.min(cell_nu(spec, (64, 64), salt=0))) >= 0.0
+
+
+def test_read_disturb_matches_analytic_form():
+    spec = RetentionSpec(nu=0.0, nu_sigma=0.0, read_disturb=1e-3)
+    n = 137
+    assert float(read_disturb_factor(n, spec)) \
+        == pytest.approx((1.0 - 1e-3) ** n)
+    g = jnp.asarray(np.random.default_rng(0).uniform(1.0, 2.0, (6, 6)),
+                    jnp.float32)
+    ref = jnp.full((6, 6), 1.5, jnp.float32)
+    # nu=0: pure read disturb, deviation from the floor scales by the
+    # closed-form factor on both columns
+    g2, r2 = apply_retention(g, ref, 0.0, 3600.0, n, spec, g_floor=0.5)
+    f = (1.0 - 1e-3) ** n
+    np.testing.assert_allclose(g2, 0.5 + (g - 0.5) * f, rtol=1e-5)
+    np.testing.assert_allclose(r2, 0.5 + (ref - 0.5) * f, rtol=1e-5)
+
+
+def test_dispersion_breaks_common_mode_cancellation():
+    """With nu_sigma=0 the differential just shrinks by a common factor;
+    with dispersion the g and ref columns decay differently and the
+    differential picks up common-mode error — the accuracy mechanism."""
+    g = jnp.full((8, 8), 2.0, jnp.float32)
+    ref = jnp.full((8, 8), 1.9, jnp.float32)
+    common = RetentionSpec(nu=0.1, nu_sigma=0.0)
+    g2, r2 = apply_retention(g, ref, 0.0, 86400.0, 0, common)
+    f = float(drift_factor(0.0, 86400.0, common))
+    np.testing.assert_allclose(g2 - r2, (g - ref) * f, rtol=1e-5)
+    disp = RetentionSpec(nu=0.1, nu_sigma=0.5)
+    g3, r3 = apply_retention(g, ref, 0.0, 86400.0, 0, disp, salt=5)
+    spread = np.asarray(g3 - r3).std()
+    assert spread > 10 * np.asarray(g2 - r2).std()  # uniform: ~0 spread
+
+
+# ------------------------------------------------------------ typed modes
+
+def test_resolve_analog_mode_enum():
+    assert resolve_analog_mode(ACFG) is AnalogMode.DEVICE
+    assert resolve_analog_mode(DCFG) is AnalogMode.DIGITAL
+    # master switch off: fakequant collapses to digital
+    fq = CFG.replace(analog=False, analog_mode="fakequant")
+    assert resolve_analog_mode(fq) is AnalogMode.DIGITAL
+
+
+@pytest.mark.parametrize("kw", [
+    dict(analog=False, analog_mode="device"),   # incoherent combo
+    dict(analog=True, analog_mode="digital"),   # incoherent combo
+    dict(analog=True, analog_mode="devise"),    # typo'd mode string
+])
+def test_resolve_analog_mode_raises_on_incoherent(kw):
+    with pytest.raises(ValueError):
+        resolve_analog_mode(CFG.replace(**kw))
+
+
+def test_digital_clears_mode_with_switch():
+    """The documented footgun: flipping analog=False while the stale
+    device mode string rides along must not survive .digital()."""
+    d = ACFG.digital()
+    assert not d.analog and resolve_analog_mode(d) is AnalogMode.DIGITAL
+
+
+# ------------------------------------------------------- state validation
+
+def test_make_serve_state_infers_and_validates():
+    st = make_serve_state(ACFG, APARAMS)
+    assert st.is_analog and len(st.paths) > 0
+    assert set(st.g_target) == set(st.paths)
+    dig = make_serve_state(DCFG, PARAMS)
+    assert dig.backend == "digital" and dig.paths == ()
+    with pytest.raises(ValueError):   # raw weights through the analog path
+        make_serve_state(ACFG, PARAMS, backend="analog")
+    with pytest.raises(ValueError):   # conductances through the digital path
+        make_serve_state(ACFG, APARAMS, backend="digital")
+    with pytest.raises(ValueError):   # containers but a non-device config
+        make_serve_state(DCFG, APARAMS)
+    assert make_serve_state(ACFG, st) is st   # idempotent
+
+
+# ------------------------------------------------------------ decode parity
+
+def test_analog_nonoise_decode_token_identical_to_digital():
+    """The tentpole contract: greedy decode served in-array from the
+    programmed conductances (nonoise device) emits exactly the digital
+    engine's tokens — continuous scheduler, chunked prefill and all."""
+    want = make_engine(DCFG, PARAMS, max_len=64, n_slots=2,
+                       prefill_chunk=4).generate(PROMPTS, SP)
+    eng = _analog_engine()
+    assert eng.backend == "analog"
+    got = eng.generate(PROMPTS, SP)
+    assert got == want
+    assert eng.decode_compiles == 1
+
+
+def test_read_counters_match_scheduler_analytics():
+    """Every container is read once per model application, so after a
+    serve the per-container counter equals prefill_chunks + decode_steps
+    exactly."""
+    eng = _analog_engine()
+    eng.generate(PROMPTS, SP)
+    m = eng.metrics
+    expect = m["prefill_chunks"] + m["decode_steps"]
+    assert expect > 0
+    st = eng.state
+    assert all(st.reads[p] == expect for p in st.paths)
+
+
+# ------------------------------------------------- drift + recalibration
+
+def test_drift_degrades_and_recal_restores_parity():
+    """Multi-day retention drift flips greedy tokens; a recalibration
+    sweep (drained through serving ticks) restores exact parity, resets
+    the device age, and bills the reprogramming pulses."""
+    eng = _analog_engine(retention=DRIFT)
+    base = eng.generate(PROMPTS, SP)
+    eng.advance_clock(3 * 86400.0)
+    degraded = eng.generate(PROMPTS, SP)
+    assert degraded != base
+    assert eng.maintenance.metrics["drift_applications"] >= 1
+    eng.start_recalibration()
+    eng.run_maintenance()
+    assert eng.maintenance.recal_pending == 0
+    restored = eng.generate(PROMPTS, SP)
+    assert restored == base
+    st = eng.state
+    assert all(st.pulses[p] > 0 for p in st.paths)
+    assert all(st.age_s[p] == 0.0 for p in st.paths)
+    assert eng.decode_compiles == 1   # maintenance never retraces decode
+
+
+def test_recal_drains_during_serving_without_stalling_decode():
+    """The preemptible pseudo-request: a sweep scheduled while a request
+    is mid-decode drains one container per tick through the prefill lane
+    — the in-flight request keeps decoding every tick and completes with
+    its full token budget, with zero extra decode compiles."""
+    eng = _analog_engine(retention=DRIFT)
+    core = eng.stream
+    rid = eng.submit(PROMPTS[0], SamplingParams(max_new_tokens=24))
+    while rid not in core.completed and not core.metrics["decode_steps"]:
+        eng.step()                      # prefill until decoding starts
+    eng.advance_clock(3 * 86400.0)
+    eng.start_recalibration()
+    n_paths = len(eng.state.paths)
+    assert eng.maintenance.recal_pending == n_paths
+    while eng.has_work():
+        eng.step()
+    assert eng.maintenance.recal_pending == 0
+    assert core.metrics["recal_ticks"] == n_paths
+    assert len(core.completed[rid]) == 24
+    assert eng.maintenance.metrics["recal_containers"] == n_paths
+    assert eng.decode_compiles == 1
+
+
+def test_scheduled_recal_fires_on_retention_interval():
+    spec = dataclasses.replace(DRIFT, recal_interval_s=86400.0)
+    eng = _analog_engine(retention=spec)
+    eng.advance_clock(2 * 86400.0)      # past the interval: sweep queued
+    assert eng.maintenance.metrics["recal_sweeps"] == 1
+    assert eng.maintenance.recal_pending == len(eng.state.paths)
+
+
+# --------------------------------------------------------- checkpoint i/o
+
+def test_conductance_digital_conductance_round_trip():
+    """readout_digital -> program_digital reproduces the original
+    conductances (programming is deterministic: the per-container scale
+    is a pure function of the weights)."""
+    digital = M.readout_digital(APARAMS, ACFG)
+    reprog = M.program_digital(digital, ACFG)
+    st0 = make_serve_state(ACFG, APARAMS)
+    st1 = make_serve_state(ACFG, reprog)
+    assert st0.paths == st1.paths
+    for p in st0.paths:
+        np.testing.assert_allclose(st0.g_target[p]["g"],
+                                   st1.g_target[p]["g"],
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_to_serve_state_unwraps_train_state():
+    state = {"params": APARAMS, "step": jnp.zeros((), jnp.int32)}
+    st = checkpoint.to_serve_state(state, ACFG)
+    assert st.is_analog and len(st.paths) > 0
+    # and a bare digital tree passes straight through
+    assert checkpoint.to_serve_state(PARAMS, DCFG).backend == "digital"
+
+
+def test_from_checkpoint_serves_identically(tmp_path):
+    """Conductances written by the trainer's checkpointer restore into a
+    ServeState whose engine emits the same tokens as the live tree."""
+    from repro.train.analog_lm import init_state
+    state = init_state(jax.random.PRNGKey(0), ACFG)
+    checkpoint.save(tmp_path, state, step=3)
+    st = checkpoint.from_checkpoint(tmp_path, ACFG)
+    assert st.is_analog
+    live = checkpoint.to_serve_state(state, ACFG)
+    want = make_engine(ACFG, live, max_len=64, n_slots=2,
+                       prefill_chunk=4).generate(PROMPTS, SP)
+    got = make_engine(ACFG, st, max_len=64, n_slots=2,
+                      prefill_chunk=4).generate(PROMPTS, SP)
+    assert got == want
+
+
+# ------------------------------------------------------- deprecation shims
+
+def test_generate_static_shim_warns_and_forwards():
+    eng = make_engine(DCFG, PARAMS, max_len=64, prefill_chunk=4)
+    static = make_engine(DCFG, PARAMS, scheduler="static", max_len=64,
+                         prefill_chunk=4)
+    prompts = [[3, 1, 4, 1], [2, 7, 1, 8]]   # equal lengths: no pad skew
+    with pytest.warns(DeprecationWarning, match="generate_static"):
+        old = eng.generate_static(prompts, SP)
+    assert old == static.generate(prompts, SP)
+
+
+def test_continuous_shim_warns_and_forwards():
+    eng = make_engine(DCFG, PARAMS, max_len=64, prefill_chunk=4)
+    with pytest.warns(DeprecationWarning, match="continuous"):
+        core = eng.continuous(2)
+    assert core.serve(PROMPTS, SP) == eng.generate(PROMPTS, SP)
+
+
+def test_make_engine_rejects_unknown_scheduler():
+    with pytest.raises(ValueError, match="scheduler"):
+        make_engine(DCFG, PARAMS, scheduler="batched")

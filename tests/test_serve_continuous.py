@@ -30,9 +30,11 @@ def test_chunked_prefill_matches_static_full_prefill():
     (so the static engine's left-padding is a no-op) multi-chunk prefill
     plus decode must reproduce the legacy full-prefill tokens exactly."""
     eng = Engine(CFG, PARAMS, max_len=64, prefill_chunk=4)
+    static = Engine(CFG, PARAMS, max_len=64, prefill_chunk=4,
+                    scheduler="static")
     prompts = [[3, 1, 4, 1, 5, 9], [2, 7, 1, 8, 2, 8]]  # 6 > chunk: 2 chunks
     sp = SamplingParams(max_new_tokens=6)
-    assert eng.generate(prompts, sp) == eng.generate_static(prompts, sp)
+    assert eng.generate(prompts, sp) == static.generate(prompts, sp)
 
 
 def test_eviction_admits_queued_request():
