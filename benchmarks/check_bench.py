@@ -15,7 +15,9 @@ de-optimised row sticks out against its peers.  The tolerance is
 deliberately loose (CI wall-time jitters); the gate exists to catch
 order-of-magnitude regressions like an accidentally de-fused update
 path, not 10% noise.  ``--max-median`` optionally also bounds the raw
-median ratio for same-machine comparisons.
+median ratio for same-machine comparisons.  ``--json-out`` writes the
+verdict — including the normalising machine-speed factor — as JSON for
+downstream tooling.
 
     python benchmarks/check_bench.py --baseline BENCH_micro.json \
         --fresh BENCH_micro_fresh.json --tol 0.30
@@ -70,6 +72,10 @@ def main(argv=None) -> int:
                     help="row-name prefix that must survive loading in "
                          "BOTH files (repeatable); guards a gated metric "
                          "against going entirely missing/malformed")
+    ap.add_argument("--json-out", default=None,
+                    help="write the gate verdict machine-readably: the "
+                         "normalising machine-speed factor, per-row raw "
+                         "and normalised ratios, and the failure list")
     args = ap.parse_args(argv)
 
     base, _ = load_rows(args.baseline)
@@ -121,6 +127,25 @@ def main(argv=None) -> int:
         failures.append(("<median>", machine))
         print(f"FAIL  raw median ratio {machine:.2f}x exceeds "
               f"--max-median {args.max_median:.2f}x")
+
+    if args.json_out:
+        # The machine-speed factor is the quantity downstream tooling
+        # needs (to renormalise other benches run on the same host), so
+        # it gets a machine-readable home alongside the verdict.
+        with open(args.json_out, "w") as f:
+            json.dump({
+                "machine_speed_factor": machine,
+                "tol": args.tol,
+                "max_median": args.max_median,
+                "rows": {n: {"baseline_us": base[n]["us_per_call"],
+                             "fresh_us": fresh[n]["us_per_call"],
+                             "raw_ratio": ratios[n],
+                             "normalised_ratio": ratios[n] / machine}
+                         for n in shared},
+                "failures": [{"name": n, "ratio": r} for n, r in failures],
+                "passed": not failures,
+            }, f, indent=1)
+        print(f"bench gate: wrote {args.json_out}")
 
     if failures:
         print(f"\nbench gate FAILED: {len(failures)} check(s) beyond "

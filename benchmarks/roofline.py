@@ -23,6 +23,22 @@ HBM_BW = 819e9
 ICI_BW = 50e9
 
 
+def op_roofline_frac(flops: float, hbm_bytes: float,
+                     seconds: float) -> float:
+    """Achieved fraction of the single-chip roofline for one measured op.
+
+    The bound is the classic two-term roofline — min(PEAK_FLOPS, HBM_BW ×
+    arithmetic intensity) — the modelled accelerator's best case for the
+    op's FLOP:byte ratio.  Host (CPU) micro-benchmarks land far below 1.0
+    by construction; the value is a tracked trajectory (like
+    ``sim_gmacs`` in benchmarks/micro.py) so relative movement — a
+    de-fused read path, say — is visible across PRs.
+    """
+    intensity = flops / max(hbm_bytes, 1.0)
+    bound = min(PEAK_FLOPS, HBM_BW * intensity)
+    return (flops / max(seconds, 1e-12)) / bound
+
+
 def model_flops(rec: dict) -> float:
     m = rec["model"]
     n_act = m["params_active"]

@@ -33,7 +33,8 @@ from repro.analysis.findings import Finding, repo_root
 #: Calls whose presence inside a Python loop body indicates a per-layer
 #: loop around container ops (RA303).
 _CONTAINER_OPS = {
-    "vmm", "mvm", "outer_update", "xbar_vmm", "xbar_mvm",
+    "vmm", "mvm", "outer_update", "xbar_fused_read",
+    "xbar_fused_read_inline", "fakequant_read_pallas",
     "xbar_outer_update", "xbar_outer_update_inline", "xbar_sharded_update",
     "analog_project", "analog_project_batched", "pallas_call",
 }

@@ -51,11 +51,13 @@ COLLECTIVE_PRIMS = {
 EXACT_MODE_WHITELIST = {"all_gather"}
 
 #: RA105 budgets for the analog train step at the smoke geometry.
-#: Measured at merge: 0 pjit-wrapped clip/round, ~1.6k recursive eqns
-#: unsharded.  The eqn ceiling has ~2.5x headroom — it exists to catch
-#: per-layer unrolling (which multiplies eqns by n_layers), not drift.
+#: Measured after the read fusion: 0 pjit-wrapped clip/round, ~1.53k
+#: recursive eqns unsharded.  The eqn ceiling has ~1.6x headroom — it
+#: exists to catch per-layer unrolling (which multiplies eqns by
+#: n_layers) and a de-fused read chain (which roughly doubles the
+#: per-read eqn count), not drift.
 MAX_PJIT_CLIP_ROUND = 0
-MAX_STEP_EQNS = 4000
+MAX_STEP_EQNS = 2500
 
 _SMOKE_ARCH = "lm100m"
 

@@ -278,7 +278,8 @@ def _kernel_entries() -> List[Tuple[str, Callable, tuple, dict]]:
     from repro.core import AdcConfig, CrossbarConfig, TAOX
     from repro.kernels.flash_attention import flash_attention
     from repro.kernels.xbar_update import xbar_outer_update
-    from repro.kernels.xbar_vmm import xbar_mvm, xbar_vmm
+    from repro.kernels.xbar_vmm import (fakequant_read_pallas,
+                                        xbar_fused_read_inline)
 
     f32 = jnp.float32
     S = jax.ShapeDtypeStruct
@@ -286,11 +287,27 @@ def _kernel_entries() -> List[Tuple[str, Callable, tuple, dict]]:
                          device=TAOX.replace(write_noise=0.5),
                          adc=AdcConfig(in_bits=4, out_bits=6))
     cfg0 = cfg.replace(device=cfg.device.replace(write_noise=0.0))
+    # Fixed-range twin of the read config: the two range modes lower to
+    # different epilogue code inside the fused kernel, so both index-map
+    # layouts get audited.
+    cfg_fix = cfg.replace(adc=AdcConfig(in_bits=4, out_bits=6,
+                                        range_mode="fixed",
+                                        sat_frac=0.03125))
     L, K, N, B = 3, 40, 24, 8
     g = S((L, K, N), f32)
     x = S((L, B, K), f32)
     d = S((L, B, N), f32)
     seed = S((), jnp.uint32)
+    # Fused-read operands: K/N are deliberately ragged against the 16x16
+    # tile (40 = 2.5 tiles, 24 = 1.5 tiles) so the wrapper's padding and
+    # the grid's edge blocks are what RA201-RA203 actually see.  The
+    # expert case (L, E, ...) exercises the lead-dim flattening the MoE
+    # containers rely on.
+    E = 2
+    fused = partial(xbar_fused_read_inline, cfg=cfg, block_b=4,
+                    impl="interpret")
+    fused_t = partial(xbar_fused_read_inline, cfg=cfg, block_b=4,
+                      transpose=True, impl="interpret")
 
     ent: List[Tuple[str, Callable, tuple]] = [
         ("xbar_outer_update[kernel-noise]",
@@ -305,12 +322,34 @@ def _kernel_entries() -> List[Tuple[str, Callable, tuple, dict]]:
          partial(xbar_outer_update, cfg=cfg0, block_b=4,
                  noise_mode="none", impl="interpret"),
          (g, x, d, 1.0e-3), {}),
-        ("xbar_vmm",
-         partial(xbar_vmm, cfg=cfg, block_b=4, interpret=True),
-         (S((B, K), f32), S((K, N), f32)), {}),
-        ("xbar_mvm",
-         partial(xbar_mvm, cfg=cfg, block_b=4, interpret=True),
-         (S((B, N), f32), S((K, N), f32)), {}),
+        ("xbar_fused_read[vmm]",
+         fused,
+         (S((B, K), f32), S((K, N), f32), S((K, N), f32), 1.0), {}),
+        ("xbar_fused_read[mvm]",
+         fused_t,
+         (S((B, N), f32), S((K, N), f32), S((K, N), f32), 1.0), {}),
+        ("xbar_fused_read[vmm-batched]",
+         fused,
+         (x, g, g, 1.0), {}),
+        ("xbar_fused_read[mvm-batched]",
+         fused_t,
+         (d, g, g, 1.0), {}),
+        ("xbar_fused_read[vmm-expert]",
+         fused,
+         (S((L, E, B, K), f32), S((L, E, K, N), f32),
+          S((L, E, K, N), f32), 1.0), {}),
+        ("xbar_fused_read[mvm-expert]",
+         fused_t,
+         (S((L, E, B, N), f32), S((L, E, K, N), f32),
+          S((L, E, K, N), f32), 1.0), {}),
+        ("xbar_fused_read[vmm-fixed-range]",
+         partial(xbar_fused_read_inline, cfg=cfg_fix, block_b=4,
+                 impl="interpret"),
+         (S((B, K), f32), S((K, N), f32), S((K, N), f32), 1.0), {}),
+        ("fakequant_read[ragged-T]",
+         partial(fakequant_read_pallas, adc=cfg.adc, rows=16, block_t=8,
+                 interpret=True),
+         (S((10, K), f32), S((K, N), f32)), {}),
         ("flash_attention[gqa-causal]",
          partial(flash_attention, causal=True, block_q=64, block_k=64,
                  interpret=True),

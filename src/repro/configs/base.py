@@ -134,6 +134,11 @@ class ModelConfig:
     analog_in_bits: int = 8
     analog_out_bits: int = 8
     analog_sat_sigmas: float = 4.0  # integrator range, sigmas of col charge
+    # Read execution path: "auto" picks the fused jnp twin on CPU and the
+    # fused Pallas kernel on TPU; "chain" pins the original unfused
+    # reference chain; "pallas"/"interpret"/"jnp" force a specific path
+    # (kernels/xbar_vmm.READ_IMPLS).
+    analog_read_impl: str = "auto"
 
     @property
     def resolved_analog_mode(self) -> AnalogMode:

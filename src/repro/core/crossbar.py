@@ -47,6 +47,11 @@ class CrossbarConfig:
     # 4 bits = 3 magnitude + 1 sign for the 8-bit variant; 2 bits for the
     # 2/4-bit variants).
     upd_col_bits: int = 4
+    # Execution path of the analog read (``kernels.xbar_vmm.READ_IMPLS``):
+    # "auto" (fused jnp twin on CPU / the Mosaic kernel on TPU), "pallas",
+    # "interpret", "jnp", or "chain" — the original unfused
+    # quantise→einsum→ADC chain kept as the bit-reference oracle.
+    read_impl: str = "auto"
 
     def replace(self, **kw) -> "CrossbarConfig":
         return dataclasses.replace(self, **kw)

@@ -81,7 +81,8 @@ def crossbar_from_model(cfg) -> CrossbarConfig:
         device=DEVICE_MODELS[cfg.analog_device],
         adc=AdcConfig(in_bits=cfg.analog_in_bits,
                       out_bits=cfg.analog_out_bits,
-                      sat_sigmas=cfg.analog_sat_sigmas))
+                      sat_sigmas=cfg.analog_sat_sigmas),
+        read_impl=getattr(cfg, "analog_read_impl", "auto"))
 
 
 def program_linear(w: Array, cfg: CrossbarConfig,
@@ -157,18 +158,17 @@ def _vmm_any(x: Array, g: Array, ref: Array, w_scale, cfg) -> Array:
     if g.ndim == 2:
         return vmm(x, g, ref, w_scale, cfg)
     with suspended_shard_context():
-        return jax.vmap(
-            lambda xx, gg, rr, ws: vmm(xx, gg, rr, ws, cfg)
-        )(x, g, ref, w_scale)
+        # vmm takes the lead dims natively: the fused read flattens them
+        # onto its kernel layer grid (one pallas_call per container on
+        # TPU); the chain oracle vmaps per matrix.
+        return vmm(x, g, ref, w_scale, cfg)
 
 
 def _mvm_any(d: Array, g: Array, ref: Array, w_scale, cfg) -> Array:
     if g.ndim == 2:
         return mvm(d, g, ref, w_scale, cfg)
     with suspended_shard_context():
-        return jax.vmap(
-            lambda dd, gg, rr, ws: mvm(dd, gg, rr, ws, cfg)
-        )(d, g, ref, w_scale)
+        return mvm(d, g, ref, w_scale, cfg)
 
 
 def _quantize_operands_any(x: Array, d: Array, cfg):

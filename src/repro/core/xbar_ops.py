@@ -16,6 +16,14 @@ Semantics per op (matching the circuit):
 These jnp implementations are the reference semantics; the Pallas kernels in
 ``repro.kernels`` implement the identical math with explicit VMEM tiling and
 are validated against ``repro.kernels.ref`` (which re-exports these).
+
+``vmm``/``mvm`` are also the production dispatch point: by default they
+execute through the *fused* read (``kernels.xbar_vmm``) — the jnp twin on
+CPU, the single DAC→MXU→ADC Pallas kernel on TPU — selected by
+``cfg.read_impl`` or the explicit ``impl=`` argument.  ``impl="chain"``
+pins the original unfused quantise → pad → tiled-einsum → rescale chain
+below, which stays the bit-reference oracle the fused paths are validated
+against (tests/test_read_fusion.py spells out the parity contract).
 """
 from __future__ import annotations
 
@@ -81,21 +89,51 @@ def _tiled_read(x_int: Array, diff: Array, cfg: CrossbarConfig,
     # order.  The ADC boundary is the determinism boundary — everything
     # before it is tile-local.  No-op when no mesh context is installed.
     q = replicate_for_exact_reduce(q)
+    # The reduction stays a single jnp.sum (reduce op), NOT an unrolled
+    # chain of adds: XLA CPU contracts a bare ``adc_output + acc`` add
+    # into an FMA with the preceding ``code * lsb`` multiply on a
+    # per-compilation basis, which would make bitwise results depend on
+    # the surrounding program (breaking the sharded==single-device
+    # contract).  A reduce op never FMA-fuses.  The fused Pallas kernel's
+    # grid-sequential accumulator associates differently, but on the
+    # operand classes where kernel-vs-chain bit parity is enforced
+    # (power-of-two ADC lsb / single reduction tile — see
+    # kernels/xbar_vmm.py "Bit-parity contract") every partial sum is
+    # exact, so the association order cannot matter there.
     return q.sum(axis=1).reshape(b, np_)
 
 
-def vmm(x: Array, g: Array, g_ref: Array, w_scale: Array,
-        cfg: CrossbarConfig, key: Optional[Array] = None) -> Array:
-    """Analog vector-matrix multiply: y ≈ x @ W for W=(g-g_ref)/w_scale.
+def _resolve_read_impl(cfg: CrossbarConfig, impl: Optional[str]) -> str:
+    # Lazy import: repro.kernels imports repro.core at module scope.
+    from repro.kernels.xbar_vmm import resolve_read_impl
+    if impl is None:
+        impl = getattr(cfg, "read_impl", None)
+    return resolve_read_impl(impl)
 
-    ``x``: (B, K) float activations; ``g``/``g_ref``: (K, N) conductances.
+
+def _chain_read(x: Array, g: Array, g_ref: Array, w_scale: Array,
+                cfg: CrossbarConfig, transpose: bool) -> Array:
+    """The original unfused read chain — the bit-reference oracle.
+
+    quantise → pad → per-tile einsum + integrator/ADC (``_tiled_read``) →
+    crop → rescale.  Lead dims (scan-stacked / expert-batched containers)
+    are vmapped one matrix at a time, matching the fused paths' per-matrix
+    DAC calibration.
     """
+    if g.ndim > 2:
+        ws = jnp.broadcast_to(jnp.asarray(w_scale, jnp.float32),
+                              g.shape[:-2])
+        fn = lambda xx, gg, rr, ws_: _chain_read(xx, gg, rr, ws_, cfg,
+                                                 transpose)
+        for _ in range(g.ndim - 2):
+            fn = jax.vmap(fn)
+        return fn(x, g, g_ref, ws)
     in_dtype = x.dtype
     x = x.astype(jnp.float32)
     x_int, x_scale = quantize_input(x, cfg.adc)
-    g = _read_conductance(g, cfg, key)
     diff = pad_to_tiles(g - g_ref, cfg.rows, cfg.cols)
-    q = _tiled_read(x_int, diff, cfg, transpose=False)[:, : g.shape[1]]
+    out_dim = g.shape[0] if transpose else g.shape[1]
+    q = _tiled_read(x_int, diff, cfg, transpose)[:, :out_dim]
     # Pin the read output replicated (no-op without a mesh context): the
     # conductances are the only sharded operands of the analog step, so
     # pinning every array read/write boundary keeps the whole digital
@@ -107,19 +145,36 @@ def vmm(x: Array, g: Array, g_ref: Array, w_scale: Array,
         (q * (x_scale / w_scale)).astype(in_dtype))
 
 
-def mvm(d: Array, g: Array, g_ref: Array, w_scale: Array,
-        cfg: CrossbarConfig, key: Optional[Array] = None) -> Array:
-    """Analog transpose read: y ≈ d @ W.T  (same array, columns driven)."""
-    in_dtype = d.dtype
-    d = d.astype(jnp.float32)
-    d_int, d_scale = quantize_input(d, cfg.adc)
+def _read(x: Array, g: Array, g_ref: Array, w_scale: Array,
+          cfg: CrossbarConfig, key: Optional[Array], impl: Optional[str],
+          transpose: bool) -> Array:
+    impl = _resolve_read_impl(cfg, impl)
     g = _read_conductance(g, cfg, key)
-    diff = pad_to_tiles(g - g_ref, cfg.rows, cfg.cols)
-    q = _tiled_read(d_int, diff, cfg, transpose=True)[:, : g.shape[0]]
-    # Same boundary pin as vmm — the MVM cotangent re-enters the
-    # (replicated) digital backward.
+    if impl == "chain":
+        return _chain_read(x, g, g_ref, w_scale, cfg, transpose)
+    from repro.kernels.xbar_vmm import xbar_fused_read_inline
     return replicate_for_exact_reduce(
-        (q * (d_scale / w_scale)).astype(in_dtype))
+        xbar_fused_read_inline(x, g, g_ref, w_scale, cfg,
+                               transpose=transpose, impl=impl))
+
+
+def vmm(x: Array, g: Array, g_ref: Array, w_scale: Array,
+        cfg: CrossbarConfig, key: Optional[Array] = None,
+        impl: Optional[str] = None) -> Array:
+    """Analog vector-matrix multiply: y ≈ x @ W for W=(g-g_ref)/w_scale.
+
+    ``x``: (..., B, K) float activations; ``g``/``g_ref``: (..., K, N)
+    conductances (lead dims for scan-stacked / expert-batched containers).
+    ``impl`` overrides ``cfg.read_impl`` (see the module docstring).
+    """
+    return _read(x, g, g_ref, w_scale, cfg, key, impl, transpose=False)
+
+
+def mvm(d: Array, g: Array, g_ref: Array, w_scale: Array,
+        cfg: CrossbarConfig, key: Optional[Array] = None,
+        impl: Optional[str] = None) -> Array:
+    """Analog transpose read: y ≈ d @ W.T  (same array, columns driven)."""
+    return _read(d, g, g_ref, w_scale, cfg, key, impl, transpose=True)
 
 
 def quantize_update_operands(

@@ -1,6 +1,8 @@
 """Pallas TPU kernels for the crossbar hot paths (+ jnp oracles in ref.py)."""
 from . import ops, ref
 from .xbar_update import xbar_outer_update
-from .xbar_vmm import xbar_mvm, xbar_vmm
+from .xbar_vmm import (fakequant_read_pallas, xbar_fused_read,
+                       xbar_fused_read_inline)
 
-__all__ = ["ops", "ref", "xbar_vmm", "xbar_mvm", "xbar_outer_update"]
+__all__ = ["fakequant_read_pallas", "ops", "ref", "xbar_fused_read",
+           "xbar_fused_read_inline", "xbar_outer_update"]

@@ -1,10 +1,16 @@
 """Jit'd high-level wrappers dispatching to the Pallas kernels.
 
 These mirror the ``repro.core.xbar_ops`` API (float activations/weights in,
-float out) but run the tiled read / fused update on the Pallas kernels.
-On non-TPU backends the kernels execute in interpret mode (the kernel body
-runs in Python via the Pallas interpreter), which is how this repo's tests
-validate them; on TPU they compile to Mosaic.
+float out) but run the fused read / fused update kernels.  The read
+wrappers are thin aliases of ``kernels.xbar_vmm.xbar_fused_read``: the DAC
+quantisation, the differential-pair subtract and the trailing rescale all
+happen inside the kernel now, so no dense ``g - g_ref`` (or separate
+quantise/rescale ops) is ever materialised here — the duplication this
+module used to carry against ``xbar_vmm.py`` is gone.
+
+``impl`` selects the execution path ("pallas" | "interpret" | "jnp" |
+None = auto: Mosaic on TPU, the fused jnp twin elsewhere); the legacy
+``interpret=True/False`` spelling maps onto "interpret"/"pallas".
 """
 from __future__ import annotations
 
@@ -13,12 +19,12 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.adc import quantize_input
+from repro.core.adc import AdcConfig, quantize_dequantize
 from repro.core.crossbar import CrossbarConfig
 from repro.core.xbar_ops import quantize_update_operands
 
 from .xbar_update import xbar_outer_update
-from .xbar_vmm import xbar_mvm, xbar_vmm
+from .xbar_vmm import fakequant_read_pallas, xbar_fused_read
 
 Array = jax.Array
 
@@ -27,28 +33,79 @@ def default_interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
+def _read_impl(impl: Optional[str], interpret: Optional[bool]) -> \
+        Optional[str]:
+    if impl is None and interpret is not None:
+        return "interpret" if interpret else "pallas"
+    return impl
+
+
 def vmm(x: Array, g: Array, g_ref: Array, w_scale: Array,
         cfg: CrossbarConfig, block_b: Optional[int] = None,
-        interpret: Optional[bool] = None) -> Array:
+        interpret: Optional[bool] = None,
+        impl: Optional[str] = None) -> Array:
     """Kernelised counterpart of ``repro.core.xbar_ops.vmm``."""
-    interpret = default_interpret() if interpret is None else interpret
-    x = x.astype(jnp.float32)
-    x_int, x_scale = quantize_input(x, cfg.adc)
-    q = xbar_vmm(x_int, g - g_ref, cfg, block_b=block_b,
-                 interpret=interpret)
-    return q * (x_scale / w_scale)
+    return xbar_fused_read(x, g, g_ref, w_scale, cfg, block_b=block_b,
+                           impl=_read_impl(impl, interpret))
 
 
 def mvm(d: Array, g: Array, g_ref: Array, w_scale: Array,
         cfg: CrossbarConfig, block_b: Optional[int] = None,
-        interpret: Optional[bool] = None) -> Array:
+        interpret: Optional[bool] = None,
+        impl: Optional[str] = None) -> Array:
     """Kernelised counterpart of ``repro.core.xbar_ops.mvm``."""
-    interpret = default_interpret() if interpret is None else interpret
-    d = d.astype(jnp.float32)
-    d_int, d_scale = quantize_input(d, cfg.adc)
-    q = xbar_mvm(d_int, g - g_ref, cfg, block_b=block_b,
-                 interpret=interpret)
-    return q * (d_scale / w_scale)
+    return xbar_fused_read(d, g, g_ref, w_scale, cfg, transpose=True,
+                           block_b=block_b,
+                           impl=_read_impl(impl, interpret))
+
+
+def _adc_fake_quant(q: Array, adc: AdcConfig) -> Array:
+    """Per-token output-ADC fake quantisation (QAT epilogue).
+
+    One range per (token, k-tile), calibrated on the token's RMS tile
+    partial over the output width — the scalable-LM stand-in for the
+    device path's per-tile integrator range.
+    """
+    sat = adc.sat_sigmas * jnp.sqrt(
+        jnp.mean(jnp.square(q), axis=-1, keepdims=True) + 1e-12)
+    lsb = sat / adc.out_levels
+    return jnp.clip(jnp.round(q / lsb), -adc.out_levels,
+                    adc.out_levels) * lsb
+
+
+def fakequant_project(x: Array, w: Array, adc: AdcConfig, rows: int,
+                      impl: Optional[str] = None) -> Array:
+    """Fakequant (QAT) projection: DAC round-trip on x, digital matmul
+    tiled at the crossbar row pitch, per-token output-ADC fake quant per
+    k-tile, digital tile accumulation.
+
+    ``x``: (..., K) float activations; ``w``: (K, N).  Returns (..., N)
+    in f32.  ``impl``: ``None``/``"auto"``/``"jnp"``/``"chain"`` run the
+    differentiable jnp path (QAT trains through it — fake-quant auto
+    *never* picks the kernel, which carries no VJP); ``"pallas"`` /
+    ``"interpret"`` run the fused single-kernel path
+    (``kernels.xbar_vmm.fakequant_read_pallas``) for inference.
+    """
+    if impl in (None, "auto", "jnp", "chain"):
+        xq = quantize_dequantize(x, adc)
+        k = w.shape[0]
+        n_tiles = max(1, -(-k // rows))
+        if n_tiles == 1:
+            return _adc_fake_quant(xq @ w, adc)
+        pad = (-k) % rows
+        xp = jnp.pad(xq, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+        wp = jnp.pad(w, [(0, pad), (0, 0)])
+        xt = xp.reshape(*x.shape[:-1], n_tiles, rows)
+        wt = wp.reshape(n_tiles, rows, w.shape[1])
+        q = jnp.einsum("...tk,tkn->...tn", xt, wt)
+        return _adc_fake_quant(q, adc).sum(axis=-2)
+    if impl not in ("pallas", "interpret"):
+        raise ValueError(f"unknown fakequant impl {impl!r}")
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    y = fakequant_read_pallas(x2, w, adc, rows,
+                              interpret=(impl == "interpret"))
+    return y.reshape(*lead, w.shape[1])
 
 
 def outer_update(g: Array, x: Array, d: Array, lr, w_scale: Array,

@@ -1,19 +1,95 @@
-"""Pallas TPU kernel: analog crossbar parallel read (VMM) and transpose
-read (MVM).
+"""Pallas TPU kernel: fused analog crossbar read (VMM and transpose MVM).
 
-TPU adaptation of the paper's temporal-coded analog read (DESIGN.md §2):
-the bit-plane pulse train sums to an exact integer dot product, so the
-kernel performs an MXU matmul over one physical crossbar tile per grid step
-and applies the integrator-saturation + ramp-ADC epilogue *per tile* before
-the digital accumulation across reduction tiles — the same quantisation
-boundary the hardware has.
+One kernel now performs the paper's *entire* read pipeline per physical
+tile — the chain the simulator used to emit as separate XLA ops
+(quantise → tiled matmul → clip/round ADC → rescale) is fused so the
+quantisation boundary lives inside the tile loop, exactly where the
+hardware has it (DESIGN.md §2):
 
-Grid layout (VMM):  (B/blk_b, N/cols, K/rows) — reduction innermost so the
-output block stays resident in VMEM while partial ADC results accumulate.
-Block shapes are the physical crossbar tile (default 1024x1024, MXU-aligned:
-1024 = 8 x 128 lanes) and a batch slab.
+  * leading edge — DAC temporal coding: the raw float activations ride in
+    and are quantised in-kernel against the per-matrix full scale
+    (``adc.quantize_input`` semantics; the one remaining leading-edge
+    reduction, ``max |x|``, is computed outside and rides in as a scalar),
+  * per tile — the differential-pair subtract ``G - G_ref`` happens on the
+    VMEM-resident blocks (no dense (K, N) difference is ever materialised
+    in HBM), followed by the MXU matmul of one ``rows x cols`` crossbar
+    tile and the integrator-saturation + ramp-ADC epilogue at the tile
+    boundary,
+  * across reduction tiles — digital accumulation in the output block,
+  * trailing edge — the final ``x_scale / w_scale`` rescale on the last
+    reduction step, while the block is still in VMEM.
 
-VMEM budget at defaults (f32): x 512 KB + G 4 MB + out 512 KB ≈ 5 MB < 16 MB.
+Grid layout
+-----------
+VMM:  ``(L, B/blk_b, N/cols, K/rows)`` — reduction innermost so the output
+block stays resident while partial ADC results accumulate.  MVM (transpose
+read: drive columns, integrate rows) swaps the roles of K and N and
+contracts the *column* dimension of the same stored G tile, so no
+materialised transpose exists: ``(L, B/blk_b, K/rows, N/cols)``.
+
+``L`` is a leading *lead-dims* grid axis mirroring ``xbar_update.py``: one
+``pallas_call`` sweeps a scan-stacked ``(L, K, N)`` container, and richer
+lead shapes — the expert-batched ``(L, E, K, N)`` MoE stacks — are
+flattened onto the same axis (``core/analog_registry.flatten_lead`` order),
+so the read of layers x experts is still one launch.  Per-matrix scalars
+ride in as an ``(L, 2)`` block ``[x_scale, x_scale / w_scale]`` indexed by
+the lead grid coordinate.
+
+VMEM budget at defaults (f32, 1024x1024 tile, blk_b=128): x 512 KB +
+G 4 MB + G_ref 4 MB + out 512 KB + scales ≈ 9 MB < 16 MB.  The legacy
+unfused kernel held only the pre-subtracted difference (5 MB); fusing the
+reference array in costs one extra operand block and removes a full (K, N)
+HBM round-trip per call.
+
+Execution paths (``impl``)
+--------------------------
+``"pallas"`` compiles with Mosaic (TPU); ``"interpret"`` runs the same
+kernel under the Pallas interpreter (the validation path on any backend
+— bit-checked against ``core.xbar_ops._tiled_read`` on the operand
+classes where bitwise equality is well defined, see below);  ``"jnp"``
+runs :func:`_tiled_read_twin`, a fused jnp twin that keeps the chain's
+exact einsum/reduction structure (including the exact-reduce sharding
+pins) while collapsing single-reduction-tile reads to one flat MXU
+dot — the fast path on hosts without Mosaic.  ``"auto"`` picks
+``"pallas"`` on TPU (meshless) and ``"jnp"`` everywhere else; a Mosaic
+kernel cannot express the exact-reduce pins, so an active mesh context
+always resolves to ``"jnp"``.  ``"chain"`` names the pre-fusion
+op-by-op path that still lives in ``core.xbar_ops`` (kept for
+benchmarking and as the parity oracle); it is resolved by the callers
+there and never dispatches into this module.
+
+Bit-parity contract
+-------------------
+Bitwise equality between *structurally different* f32 programs is not
+controllable on XLA CPU: the backend contracts mul+add chains into FMA
+(skipping the product's intermediate rounding) per-lowering, strips
+``+0.0`` / double-bitcast / f32 ``reduce_precision`` identities, and
+folds compile-time-constant scale factors forward through runtime
+multiplies.  The enforced contract is therefore:
+
+  * twin vs chain — bit-identical whenever the twin takes the einsum
+    path (structurally the same program), eager-vs-eager or
+    jit-vs-jit.  The production same-seed contract (sharded ==
+    unsharded conductances) compares twin vs twin and is exact
+    unconditionally.
+  * interpret kernel vs chain — bit-identical in ``fixed`` range mode
+    with a power-of-two ADC lsb (arbitrary float data, ragged edge
+    tiles, multi-tile grids, both read directions): the saturation
+    bound is a compile-time constant, every ADC output is an exact
+    integer multiple of a power of two, and all partial sums are exact,
+    so neither FMA contraction nor reduction-order choices can move a
+    bit.  This class exercises every fused stage end to end and is the
+    CI bit-check.  In ``dynamic`` range mode the saturation bound
+    itself is a data-dependent float reduction (``sumsq`` over the
+    calibration block) whose lowering differs between the kernel body
+    and the chain's 4-D reduce — bitwise equality across those two
+    programs is not well defined; agreement is ~1-2 ulp, bounded by
+    FMA contraction of ``code * lsb + acc`` and one rounding of the
+    range calibration.
+
+Dynamic ADC range: one integrator range is calibrated per (tile, batch
+block), so the calibration population matches the reference exactly when
+``block_b >= B`` (the default) — same contract as the update kernel.
 """
 from __future__ import annotations
 
@@ -24,126 +100,353 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.core.crossbar import CrossbarConfig
+from repro.core.adc import (_clip, _round, adc_quantize,
+                            integrator_saturation, quantize_input)
+from repro.core.crossbar import CrossbarConfig, pad_to_tiles
+from repro.core.shardctx import current_mesh, replicate_for_exact_reduce
 
 Array = jax.Array
 
+READ_IMPLS = ("auto", "pallas", "interpret", "jnp", "chain")
+
+
+def resolve_read_impl(impl: Optional[str] = None) -> str:
+    """Resolve the read execution path (see module docstring).
+
+    ``None``/``"auto"``: ``"jnp"`` under an active mesh context (the twin
+    carries the exact-reduce pins; a compiled kernel cannot), else
+    ``"pallas"`` on TPU and ``"jnp"`` everywhere else.
+    """
+    if impl in (None, "auto"):
+        if current_mesh() is not None:
+            return "jnp"
+        return "pallas" if jax.default_backend() == "tpu" else "jnp"
+    if impl not in READ_IMPLS:
+        raise ValueError(f"impl must be one of {READ_IMPLS}")
+    return impl
+
 
 def _adc_epilogue(q: Array, cfg: CrossbarConfig, n_rows: int) -> Array:
-    """Integrator saturation + ramp-ADC quantisation of a tile's charge."""
-    adc = cfg.adc
-    if adc.range_mode == "fixed":
-        sat = jnp.float32(adc.sat_frac * adc.in_levels * n_rows
-                          * cfg.device.gmax)
+    """Integrator saturation + ramp-ADC quantisation of a tile's charge.
+
+    Literally ``core.adc.integrator_saturation`` + ``adc_quantize`` with
+    one range shared over the whole block (the batch x columns of one
+    physical tile) — epilogue-vs-reference bit parity holds by
+    construction.
+    """
+    q, sat = integrator_saturation(q, cfg.adc, n_rows=n_rows,
+                                   g_max=cfg.device.gmax)
+    return adc_quantize(q, sat, cfg.adc)
+
+
+# --------------------------------------------------------------------------
+# The fused kernels
+# --------------------------------------------------------------------------
+
+def _fused_vmm_kernel(x_ref, g_ref, r_ref, sc_ref, o_ref, *,
+                      cfg: CrossbarConfig, n_ksteps: int):
+    k = pl.program_id(3)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[0, :, :] = jnp.zeros_like(o_ref[0, :, :])
+
+    # Leading edge: DAC temporal coding against the per-matrix full scale.
+    levels = float(cfg.adc.in_levels)
+    xi = _clip(_round(x_ref[0, :, :] / sc_ref[0, 0], None), -levels, levels)
+    # Differential pair: the reference column subtracts in-array (VMEM).
+    diff = g_ref[0, :, :] - r_ref[0, :, :]
+    q = jnp.dot(xi, diff, preferred_element_type=jnp.float32)
+    o_ref[0, :, :] += _adc_epilogue(q, cfg, n_rows=cfg.rows)
+
+    @pl.when(k == n_ksteps - 1)
+    def _rescale():
+        # Trailing edge: the digital x_scale / w_scale rescale, applied
+        # while the accumulated block is still resident.
+        o_ref[0, :, :] = o_ref[0, :, :] * sc_ref[0, 1]
+
+
+def _fused_mvm_kernel(x_ref, g_ref, r_ref, sc_ref, o_ref, *,
+                      cfg: CrossbarConfig, n_nsteps: int):
+    n = pl.program_id(3)
+
+    @pl.when(n == 0)
+    def _init():
+        o_ref[0, :, :] = jnp.zeros_like(o_ref[0, :, :])
+
+    levels = float(cfg.adc.in_levels)
+    xi = _clip(_round(x_ref[0, :, :] / sc_ref[0, 0], None), -levels, levels)
+    diff = g_ref[0, :, :] - r_ref[0, :, :]
+    # Transpose read: drive columns, integrate rows — contract the column
+    # dimension of the same stored tile (no materialised transpose).
+    q = jax.lax.dot_general(
+        xi, diff, dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    o_ref[0, :, :] += _adc_epilogue(q, cfg, n_rows=cfg.cols)
+
+    @pl.when(n == n_nsteps - 1)
+    def _rescale():
+        o_ref[0, :, :] = o_ref[0, :, :] * sc_ref[0, 1]
+
+
+def _pallas_read(x: Array, g: Array, ref: Array, sc: Array,
+                 cfg: CrossbarConfig, transpose: bool,
+                 block_b: Optional[int], interpret: bool) -> Array:
+    """Launch the fused kernel over lead-flattened (L, ...) operands."""
+    lyr, b = x.shape[0], x.shape[1]
+    k, n = g.shape[1], g.shape[2]
+    bb = block_b or b
+    drive = cfg.cols if transpose else cfg.rows
+    x = jnp.pad(x, ((0, 0), (0, (-b) % bb), (0, (-x.shape[2]) % drive)))
+    gp = jnp.pad(g, ((0, 0), (0, (-k) % cfg.rows), (0, (-n) % cfg.cols)))
+    rp = jnp.pad(ref, ((0, 0), (0, (-k) % cfg.rows), (0, (-n) % cfg.cols)))
+    _, kp, np_ = gp.shape
+    bp = x.shape[1]
+    if transpose:
+        grid = (lyr, bp // bb, kp // cfg.rows, np_ // cfg.cols)
+        kern = functools.partial(_fused_mvm_kernel, cfg=cfg,
+                                 n_nsteps=grid[3])
+        x_spec = pl.BlockSpec((1, bb, cfg.cols),
+                              lambda l_, b_, k_, n_: (l_, b_, n_))
+        o_spec = pl.BlockSpec((1, bb, cfg.rows),
+                              lambda l_, b_, k_, n_: (l_, b_, k_))
+        out_shape, out_dim = (lyr, bp, kp), k
     else:
-        sumsq = jnp.sum(q * q)
-        nz = jnp.sum((q != 0.0).astype(jnp.float32))
-        rms = jnp.sqrt(sumsq / jnp.maximum(nz, 1.0))
-        sat = jnp.maximum(adc.sat_sigmas * rms, 1e-6)
-    qc = jnp.clip(q, -sat, sat)
-    lsb = sat / adc.out_levels
-    code = jnp.clip(jnp.round(qc / lsb), -adc.out_levels, adc.out_levels)
-    return code * lsb
+        grid = (lyr, bp // bb, np_ // cfg.cols, kp // cfg.rows)
+        kern = functools.partial(_fused_vmm_kernel, cfg=cfg,
+                                 n_ksteps=grid[3])
+        x_spec = pl.BlockSpec((1, bb, cfg.rows),
+                              lambda l_, b_, n_, k_: (l_, b_, k_))
+        o_spec = pl.BlockSpec((1, bb, cfg.cols),
+                              lambda l_, b_, n_, k_: (l_, b_, n_))
+        out_shape, out_dim = (lyr, bp, np_), n
+    # G / G_ref tile index: (k-tile, n-tile) regardless of drive direction.
+    if transpose:
+        g_index = lambda l_, b_, k_, n_: (l_, k_, n_)
+    else:
+        g_index = lambda l_, b_, n_, k_: (l_, k_, n_)
+    g_spec = pl.BlockSpec((1, cfg.rows, cfg.cols), g_index)
+    sc_spec = pl.BlockSpec((1, 2), lambda l_, b_, i_, j_: (l_, 0))
+    out = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[x_spec, g_spec, g_spec, sc_spec],
+        out_specs=o_spec,
+        out_shape=jax.ShapeDtypeStruct(out_shape, jnp.float32),
+        interpret=interpret,
+    )(x, gp, rp, sc)
+    return out[:, :b, :out_dim]
 
 
-def _vmm_kernel(x_ref, d_ref, o_ref, *, cfg: CrossbarConfig):
-    k = pl.program_id(2)
+# --------------------------------------------------------------------------
+# Fused fakequant projection (QAT read: digital weights, crossbar I/O)
+# --------------------------------------------------------------------------
+
+def _fakequant_kernel(x_ref, w_ref, sc_ref, o_ref, *, adc, n_ksteps: int):
+    """One (token-block, k-tile) step of the fakequant read.
+
+    Same leading/trailing structure as the device kernel, but the weights
+    are digital (no reference subtract, no conductance units) and the ADC
+    fake-quant range is per *token*: ``models/layers._adc_fake_quant``
+    calibrates on the RMS of each token's tile partial over the full
+    output width — hence the weight block spans all N columns.
+    """
+    k = pl.program_id(1)
 
     @pl.when(k == 0)
     def _init():
         o_ref[:, :] = jnp.zeros_like(o_ref)
 
-    q = jnp.dot(x_ref[:, :], d_ref[:, :],
-                preferred_element_type=jnp.float32)
-    o_ref[:, :] += _adc_epilogue(q, cfg, n_rows=cfg.rows)
+    in_lv = float(adc.in_levels)
+    out_lv = float(adc.out_levels)
+    sc = sc_ref[0, 0]
+    # DAC round-trip (quantize_dequantize): the dequantised activations
+    # drive the digital matmul.
+    xq = _clip(_round(x_ref[:, :] / sc, None), -in_lv, in_lv) * sc
+    q = jnp.dot(xq, w_ref[:, :], preferred_element_type=jnp.float32)
+    sat = adc.sat_sigmas * jnp.sqrt(
+        jnp.mean(jnp.square(q), axis=-1, keepdims=True) + 1e-12)
+    lsb = sat / out_lv
+    o_ref[:, :] += _clip(_round(q / lsb, None), -out_lv, out_lv) * lsb
 
 
-def _mvm_kernel(d_ref, g_ref, o_ref, *, cfg: CrossbarConfig):
-    n = pl.program_id(2)
+def fakequant_read_pallas(x: Array, w: Array, adc, rows: int,
+                          block_t: Optional[int] = None,
+                          interpret: bool = False) -> Array:
+    """Fused fakequant projection: x (T, K) f32, w (K, N) f32 -> (T, N).
 
-    @pl.when(n == 0)
-    def _init():
-        o_ref[:, :] = jnp.zeros_like(o_ref)
-
-    # Transpose read: drive columns, integrate rows — contract the column
-    # dimension of the same stored G tile (no materialised transpose).
-    q = jax.lax.dot_general(
-        d_ref[:, :], g_ref[:, :],
-        dimension_numbers=(((1,), (1,)), ((), ())),
-        preferred_element_type=jnp.float32)
-    o_ref[:, :] += _adc_epilogue(q, cfg, n_rows=cfg.cols)
-
-
-def _pad_axis(a: Array, axis: int, mult: int) -> Array:
-    pad = (-a.shape[axis]) % mult
-    if pad:
-        width = [(0, 0)] * a.ndim
-        width[axis] = (0, pad)
-        a = jnp.pad(a, width)
-    return a
-
-
-@functools.partial(jax.jit,
-                   static_argnames=("cfg", "block_b", "interpret"))
-def xbar_vmm(x_int: Array, diff: Array, cfg: CrossbarConfig,
-             block_b: Optional[int] = None,
-             interpret: bool = False) -> Array:
-    """(B, K) integer drive levels x (K, N) signed conductances -> (B, N).
-
-    Output is per-tile-ADC-quantised charge, digitally accumulated over
-    reduction tiles — identical semantics to ``kernels.ref.vmm_ref``
-    (when ``block_b >= B``, the dynamic-ADC calibration population matches
-    the reference exactly).
+    Forward-only (a Pallas call carries no VJP) — the QAT training path
+    stays on the jnp twin in ``kernels.ops.fakequant_project``; this
+    kernel serves inference.  Grid ``(T/blk_t, K/rows)`` with the
+    reduction innermost; per-token ADC ranges make the N axis untiled.
     """
-    b, k = x_int.shape
-    n = diff.shape[1]
-    x_int = _pad_axis(_pad_axis(x_int.astype(jnp.float32), 1, cfg.rows),
-                      0, block_b or b)
-    diff = _pad_axis(_pad_axis(diff.astype(jnp.float32), 0, cfg.rows),
-                     1, cfg.cols)
-    bb = block_b or b
-    bp, kp = x_int.shape
-    np_ = diff.shape[1]
-    grid = (bp // bb, np_ // cfg.cols, kp // cfg.rows)
+    t, k = x.shape
+    n = w.shape[1]
+    bt = min(block_t or 128, t)
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / adc.in_levels
+    sc = jnp.reshape(scale.astype(jnp.float32), (1, 1))
+    xp = jnp.pad(x, ((0, (-t) % bt), (0, (-k) % rows)))
+    wp = jnp.pad(w, ((0, (-k) % rows), (0, 0)))
+    grid = (xp.shape[0] // bt, xp.shape[1] // rows)
     out = pl.pallas_call(
-        functools.partial(_vmm_kernel, cfg=cfg),
+        functools.partial(_fakequant_kernel, adc=adc, n_ksteps=grid[1]),
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((bb, cfg.rows), lambda b_, n_, k_: (b_, k_)),
-            pl.BlockSpec((cfg.rows, cfg.cols), lambda b_, n_, k_: (k_, n_)),
-        ],
-        out_specs=pl.BlockSpec((bb, cfg.cols), lambda b_, n_, k_: (b_, n_)),
-        out_shape=jax.ShapeDtypeStruct((bp, np_), jnp.float32),
+        in_specs=[pl.BlockSpec((bt, rows), lambda t_, k_: (t_, k_)),
+                  pl.BlockSpec((rows, n), lambda t_, k_: (k_, 0)),
+                  pl.BlockSpec((1, 1), lambda t_, k_: (0, 0))],
+        out_specs=pl.BlockSpec((bt, n), lambda t_, k_: (t_, 0)),
+        out_shape=jax.ShapeDtypeStruct((xp.shape[0], n), jnp.float32),
         interpret=interpret,
-    )(x_int, diff)
-    return out[:b, :n]
+    )(xp, wp, sc)
+    return out[:t]
+
+
+# --------------------------------------------------------------------------
+# The fused jnp twin
+# --------------------------------------------------------------------------
+
+def _tiled_read_twin(x_int: Array, diff: Array, cfg: CrossbarConfig,
+                     transpose: bool) -> Array:
+    """Bit-exact twin of ``core.xbar_ops._tiled_read``.
+
+    Same per-tile einsum, same saturation/ADC reduce axes, same
+    exact-reduce sharding pin — plus a single-reduction-tile fast path:
+    when the whole reduction fits one physical tile the 4-D tile einsum
+    collapses to one flat MXU dot whose ``(B, 1, tn, cols)`` view feeds
+    the identical epilogue (measurably faster at transformer smoke
+    shapes).  The fast path applies unconditionally — under a mesh
+    context too — so the sharded and unsharded programs share one
+    structure and the same-seed sharded == unsharded contract compares
+    identical jaxprs.
+
+    Bit-parity vs the chain oracle: on the einsum path this function is
+    *structurally identical* to ``_tiled_read`` and the results agree
+    bit for bit (eager vs eager, or jitted vs jitted).  On the fast path
+    the flat dot contracts in a different HLO shape, and XLA CPU freely
+    contracts mul+add into FMA per lowering — so parity vs the einsum
+    oracle there is exact only on FMA-immune operand classes (exact
+    per-tile products) and ~1 ulp otherwise; see
+    ``tests/test_read_fusion.py`` for the precise contract.
+    """
+    rows, cols = cfg.rows, cfg.cols
+    if transpose:
+        rows, cols = cols, rows
+        diff = diff.T
+    kp, np_ = diff.shape
+    b = x_int.shape[0]
+    if x_int.shape[1] != kp:
+        x_int = jnp.pad(x_int, ((0, 0), (0, kp - x_int.shape[1])))
+    tk, tn = kp // rows, np_ // cols
+    if tk == 1:
+        q = jnp.dot(x_int.astype(jnp.float32), diff.astype(jnp.float32))
+        q = q.reshape(b, 1, tn, cols)
+    else:
+        xt = x_int.reshape(b, tk, rows)
+        dt = diff.reshape(tk, rows, tn, cols)
+        q = jnp.einsum("btr,trnc->btnc", xt.astype(jnp.float32),
+                       dt.astype(jnp.float32))
+    q, sat = integrator_saturation(q, cfg.adc, n_rows=rows,
+                                   g_max=cfg.device.gmax,
+                                   reduce_axes=(0, 3))
+    q = adc_quantize(q, sat, cfg.adc)
+    q = replicate_for_exact_reduce(q)
+    # A single reduce op, same as the chain path (see the _tiled_read
+    # comment: an unrolled add chain would FMA-fuse with the ADC's
+    # code*lsb multiply per-compilation and break cross-program bitwise
+    # stability).
+    return q.sum(axis=1).reshape(b, np_)
+
+
+def _read_one_jnp(x: Array, g: Array, ref: Array, w_scale: Array,
+                  cfg: CrossbarConfig, transpose: bool) -> Array:
+    """One matrix: quantise → twin tiled read → rescale (all f32)."""
+    x_int, x_scale = quantize_input(x, cfg.adc)
+    diff = pad_to_tiles(g - ref, cfg.rows, cfg.cols)
+    out_dim = g.shape[0] if transpose else g.shape[1]
+    q = _tiled_read_twin(x_int, diff, cfg, transpose)[:, :out_dim]
+    return q * (x_scale / w_scale)
+
+
+# --------------------------------------------------------------------------
+# Dispatch
+# --------------------------------------------------------------------------
+
+def xbar_fused_read_inline(x: Array, g: Array, ref: Array, w_scale,
+                           cfg: CrossbarConfig, *, transpose: bool = False,
+                           block_b: Optional[int] = None,
+                           impl: Optional[str] = None) -> Array:
+    """The fused read, inlined into the caller's trace (no jit wrapper).
+
+    ``x``: (..., B, K) float activations ((..., B, N) when ``transpose``);
+    ``g``/``ref``: (..., K, N) conductances with matching lead dims — none
+    for a plain matrix, (L,) for a scan-stacked container, (L, E) for an
+    expert-batched MoE stack; ``w_scale`` broadcasts over the lead dims.
+    Returns (..., B, N) ((..., B, K) when ``transpose``) in ``x.dtype``:
+
+        y ≈ x @ (g - ref) / w_scale        (transpose: x @ (g - ref).T)
+
+    with the full DAC / per-tile integrator+ADC / digital-accumulate
+    semantics of ``core.xbar_ops.vmm``/``mvm``.  Input quantisation is
+    calibrated per lead index (each matrix is its own physical array with
+    its own DAC full scale), matching the vmapped per-expert reference.
+    ``block_b`` batches the kernel grid over B; dynamic ADC range matches
+    the reference only when one block covers the whole batch (default).
+    """
+    impl = resolve_read_impl(impl)
+    if impl == "chain":
+        raise ValueError("impl='chain' is the un-fused reference path — "
+                         "call core.xbar_ops.vmm/mvm, which own it")
+    in_dtype = x.dtype
+    lead = g.shape[:-2]
+    if ref.shape != g.shape:
+        raise ValueError(f"ref {ref.shape} does not match g {g.shape}")
+    if x.ndim != len(lead) + 2 or x.shape[:len(lead)] != lead:
+        raise ValueError(f"x {x.shape} does not match container lead dims "
+                         f"{lead} of g {g.shape}")
+    x = x.astype(jnp.float32)
+    g = g.astype(jnp.float32)
+    ref = ref.astype(jnp.float32)
+    w_scale = jnp.broadcast_to(jnp.asarray(w_scale, jnp.float32), lead)
+    if impl == "jnp":
+        fn = lambda xx, gg, rr, ws: _read_one_jnp(xx, gg, rr, ws, cfg,
+                                                  transpose)
+        for _ in lead:
+            fn = jax.vmap(fn)
+        return fn(x, g, ref, w_scale).astype(in_dtype)
+    lyr = 1
+    for d in lead:
+        lyr *= d
+    xf = x.reshape(lyr, *x.shape[len(lead):])
+    gf = g.reshape(lyr, *g.shape[len(lead):])
+    rf = ref.reshape(lyr, *ref.shape[len(lead):])
+    # Per-matrix DAC full scale (adc.quantize_input semantics) and the
+    # folded trailing rescale, as one (L, 2) kernel operand.
+    x_scale = jnp.maximum(jnp.max(jnp.abs(xf), axis=(1, 2)),
+                          1e-12) / cfg.adc.in_levels
+    sc = jnp.stack([x_scale, x_scale / w_scale.reshape(lyr)], axis=1)
+    y = _pallas_read(xf, gf, rf, sc, cfg, transpose, block_b,
+                     interpret=(impl == "interpret"))
+    y = y.reshape(*lead, *y.shape[1:]) if lead else y[0]
+    return y.astype(in_dtype)
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("cfg", "block_b", "interpret"))
-def xbar_mvm(d_int: Array, diff: Array, cfg: CrossbarConfig,
-             block_b: Optional[int] = None,
-             interpret: bool = False) -> Array:
-    """(B, N) integer drive levels x (K, N) conductances -> (B, K)."""
-    b, n = d_int.shape
-    k = diff.shape[0]
-    d_int = _pad_axis(_pad_axis(d_int.astype(jnp.float32), 1, cfg.cols),
-                      0, block_b or b)
-    diff = _pad_axis(_pad_axis(diff.astype(jnp.float32), 0, cfg.rows),
-                     1, cfg.cols)
-    bb = block_b or b
-    bp = d_int.shape[0]
-    kp, np_ = diff.shape
-    grid = (bp // bb, kp // cfg.rows, np_ // cfg.cols)
-    out = pl.pallas_call(
-        functools.partial(_mvm_kernel, cfg=cfg),
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((bb, cfg.cols), lambda b_, k_, n_: (b_, n_)),
-            pl.BlockSpec((cfg.rows, cfg.cols), lambda b_, k_, n_: (k_, n_)),
-        ],
-        out_specs=pl.BlockSpec((bb, cfg.rows), lambda b_, k_, n_: (b_, k_)),
-        out_shape=jax.ShapeDtypeStruct((bp, kp), jnp.float32),
-        interpret=interpret,
-    )(d_int, diff)
-    return out[:b, :k]
+                   static_argnames=("cfg", "transpose", "block_b", "impl"))
+def _fused_read_jit(x, g, ref, w_scale, cfg, transpose, block_b, impl):
+    return xbar_fused_read_inline(x, g, ref, w_scale, cfg,
+                                  transpose=transpose, block_b=block_b,
+                                  impl=impl)
+
+
+def xbar_fused_read(x: Array, g: Array, ref: Array, w_scale,
+                    cfg: CrossbarConfig, *, transpose: bool = False,
+                    block_b: Optional[int] = None,
+                    impl: Optional[str] = None) -> Array:
+    """Jit'd :func:`xbar_fused_read_inline` for eager callers.
+
+    ``impl`` is resolved *outside* the jit cache so backend / mesh-context
+    dispatch never serves a stale cached choice.
+    """
+    impl = resolve_read_impl(impl)
+    return _fused_read_jit(x, g, ref, w_scale, cfg, transpose, block_b,
+                           impl)

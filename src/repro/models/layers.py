@@ -20,11 +20,13 @@ import numpy as np
 
 from repro.configs.base import AnalogMode, ModelConfig, resolve_analog_mode
 from repro.core import AdcConfig
-from repro.core.adc import quantize_dequantize
+from repro.core.adc import quantize_dequantize  # noqa: F401  (re-export)
 from repro.core.tiled_analog import (analog_project, analog_project_batched,
                                      crossbar_from_model,
                                      is_analog_container, program_stacked,
                                      readout)
+from repro.kernels.ops import _adc_fake_quant as _kernels_adc_fake_quant
+from repro.kernels.ops import fakequant_project
 
 Array = jax.Array
 
@@ -158,20 +160,9 @@ def project(p: dict, x: Array, cfg: ModelConfig) -> Array:
         return x @ w
     adc = AdcConfig(in_bits=cfg.analog_in_bits,
                     out_bits=cfg.analog_out_bits)
-    xq = quantize_dequantize(x.astype(jnp.float32), adc)
-    k = w.shape[0]
-    n_tiles = max(1, -(-k // cfg.analog_rows))
-    if n_tiles == 1:
-        y = xq @ w.astype(jnp.float32)
-        y = _adc_fake_quant(y, adc)
-    else:
-        pad = (-k) % cfg.analog_rows
-        xp = jnp.pad(xq, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
-        wp = jnp.pad(w.astype(jnp.float32), [(0, pad), (0, 0)])
-        xt = xp.reshape(*x.shape[:-1], n_tiles, cfg.analog_rows)
-        wt = wp.reshape(n_tiles, cfg.analog_rows, w.shape[1])
-        q = jnp.einsum("...tk,tkn->...tn", xt, wt)
-        y = _adc_fake_quant(q, adc).sum(axis=-2)
+    y = fakequant_project(x.astype(jnp.float32), w.astype(jnp.float32),
+                          adc, cfg.analog_rows,
+                          impl=getattr(cfg, "analog_read_impl", None))
     return y.astype(x.dtype)
 
 
@@ -189,12 +180,10 @@ def expert_project(p, x: Array, cfg: ModelConfig) -> Array:
     return jnp.einsum("etk,ekn->etn", x, p.astype(x.dtype))
 
 
-def _adc_fake_quant(q: Array, adc: AdcConfig) -> Array:
-    sat = adc.sat_sigmas * jnp.sqrt(
-        jnp.mean(jnp.square(q), axis=-1, keepdims=True) + 1e-12)
-    lsb = sat / adc.out_levels
-    return jnp.clip(jnp.round(q / lsb), -adc.out_levels,
-                    adc.out_levels) * lsb
+# Fake-quant math lives with the kernels now (kernels/ops.fakequant_project
+# owns both the differentiable jnp path and the fused Pallas kernel); the
+# historical name is kept as an alias for external callers.
+_adc_fake_quant = _kernels_adc_fake_quant
 
 
 # --------------------------------------------------------------------------

@@ -325,7 +325,8 @@ def make_engine(cfg: ModelConfig, state, *,
                 n_slots: Optional[int] = None,
                 prefill_chunk: int = 32,
                 extras: Optional[dict] = None,
-                retention=None) -> "Engine":
+                retention=None,
+                read_impl: Optional[str] = None) -> "Engine":
     """Build a serving engine — THE serving entrypoint.
 
     Args:
@@ -349,6 +350,12 @@ def make_engine(cfg: ModelConfig, state, *,
         forces the static scheduler.
       retention: :class:`~repro.core.endurance.RetentionSpec` override
         for the analog backend's drift/recalibration model.
+      read_impl: analog read execution path override
+        (``kernels.xbar_vmm.READ_IMPLS``): "auto" (default; fused jnp
+        twin on CPU, fused Pallas kernel on TPU), "pallas", "interpret",
+        "jnp", or "chain" (the unfused reference).  Rewrites
+        ``cfg.analog_read_impl`` so every jitted decode/prefill step of
+        this engine reads through the chosen path.
 
     Returns an :class:`Engine` whose whole public surface is
     ``generate(prompts, sp, seed)`` plus the streaming/maintenance
@@ -358,7 +365,7 @@ def make_engine(cfg: ModelConfig, state, *,
     return Engine(cfg, state, max_len=max_len, extras=extras,
                   n_slots=n_slots, prefill_chunk=prefill_chunk,
                   backend=backend, scheduler=scheduler,
-                  retention=retention)
+                  retention=retention, read_impl=read_impl)
 
 
 class Engine:
@@ -373,10 +380,16 @@ class Engine:
                  extras: Optional[dict] = None,
                  n_slots: Optional[int] = None, prefill_chunk: int = 32,
                  *, backend: Optional[str] = None,
-                 scheduler: str = "continuous", retention=None):
+                 scheduler: str = "continuous", retention=None,
+                 read_impl: Optional[str] = None):
         if scheduler not in SCHEDULERS:
             raise ValueError(f"unknown scheduler {scheduler!r}; expected "
                              f"one of {SCHEDULERS}")
+        if read_impl is not None:
+            # The config is the single routing input of every jitted step
+            # (crossbar_from_model caches on it), so an engine-level
+            # override is just a config rewrite.
+            cfg = cfg.replace(analog_read_impl=read_impl)
         self.cfg = cfg
         self.state = make_serve_state(cfg, state, backend=backend,
                                       retention=retention)

@@ -117,6 +117,9 @@ class AnalogTrainStep:
     "interpret" | "fused" | None = auto: Mosaic on TPU, the fused jnp twin
     elsewhere); ``noise_mode`` selects in-kernel counter-PRNG write noise
     ("kernel", the default) or the legacy host-generated field ("host").
+    ``read_impl`` selects the forward/backward *read* path the same way
+    (``cfg.analog_read_impl`` / kernels/xbar_vmm.READ_IMPLS; "auto" =
+    the fused jnp twin on CPU, the fused DAC→MXU→ADC kernel on TPU).
 
     ``mesh`` (optional) runs the step sharded over a device mesh with
     ``data``/``model`` axes: containers split at tile granularity, the
@@ -129,7 +132,12 @@ class AnalogTrainStep:
     def __init__(self, cfg: ModelConfig, lr: float,
                  interpret: Optional[bool] = None, bits: int = 8,
                  impl: Optional[str] = None, noise_mode: str = "kernel",
-                 mesh=None, exact: bool = True):
+                 mesh=None, exact: bool = True,
+                 read_impl: Optional[str] = None):
+        if read_impl is not None:
+            # Forward/backward read path (kernels/xbar_vmm.READ_IMPLS);
+            # rides the config so every jitted consumer routes through it.
+            cfg = cfg.replace(analog_read_impl=read_impl)
         if resolve_analog_mode(cfg) is not AnalogMode.DEVICE:
             raise ValueError(
                 f"AnalogTrainStep needs a device-mode config "
@@ -503,13 +511,16 @@ def make_analog_sgd_step(cfg: ModelConfig, lr: float,
                          interpret: Optional[bool] = None,
                          bits: int = 8, impl: Optional[str] = None,
                          noise_mode: str = "kernel",
-                         mesh=None, exact: bool = True) -> AnalogTrainStep:
+                         mesh=None, exact: bool = True,
+                         read_impl: Optional[str] = None
+                         ) -> AnalogTrainStep:
     """The analog-SGD training step for a device-mode transformer config.
 
     ``mesh``: optional jax mesh with ``data``/``model`` axes — runs the
     step sharded over the container tile grid (bit-identical to the
     single-device step when ``exact=True``, the default; see
-    :class:`AnalogTrainStep`)."""
+    :class:`AnalogTrainStep`).  ``read_impl`` overrides the forward /
+    backward read execution path (``cfg.analog_read_impl``)."""
     return AnalogTrainStep(cfg, lr, interpret=interpret, bits=bits,
                            impl=impl, noise_mode=noise_mode, mesh=mesh,
-                           exact=exact)
+                           exact=exact, read_impl=read_impl)

@@ -18,7 +18,7 @@ from repro.core.xbar_ops import mvm as core_mvm
 from repro.core.xbar_ops import vmm as core_vmm
 from repro.kernels import ops
 from repro.kernels.ref import vmm_bitplanes
-from repro.kernels.xbar_vmm import xbar_vmm
+from repro.kernels.xbar_vmm import xbar_fused_read
 
 KEY = jax.random.PRNGKey(0)
 
@@ -147,14 +147,22 @@ def test_bitplane_oracle_equals_integer_matmul():
 
 def test_raw_kernel_integer_charge_levels():
     """With out_bits high and fixed range, kernel charge must be the exact
-    integer dot product (no analog distortion at the math level)."""
+    integer dot product (no analog distortion at the math level).
+
+    The fused kernel owns the DAC now, so the drive levels are chosen on
+    the DAC grid (|x| <= in_levels with the full scale pinned): the
+    in-kernel quantisation then reproduces them exactly and the charge is
+    the plain integer matmul.
+    """
     cfg = CrossbarConfig(rows=16, cols=16, device=IDEAL,
-                         adc=AdcConfig(in_bits=8, out_bits=16,
+                         adc=AdcConfig(in_bits=4, out_bits=16,
                                        range_mode="fixed", sat_frac=1.0))
     key1, key2 = jax.random.split(KEY)
-    x_int = jnp.round(jax.random.uniform(key1, (4, 32)) * 10 - 5)
+    x_int = jnp.round(jax.random.uniform(key1, (4, 32)) * 14 - 7)
+    x_int = x_int.at[0, 0].set(7.0)  # pin the DAC full scale to the grid
     diff = (jnp.round(jax.random.uniform(key2, (32, 16)) * 8) - 4) / 8.0
-    q = xbar_vmm(x_int, diff, cfg, interpret=True)
+    q = xbar_fused_read(x_int, diff, jnp.zeros_like(diff),
+                        jnp.float32(1.0), cfg, impl="interpret")
     # quantisation lattice of the fixed-range 16-bit ADC is fine enough
     np.testing.assert_allclose(np.asarray(q), np.asarray(x_int @ diff),
                                rtol=0, atol=0.15)
