@@ -19,6 +19,13 @@ in/out projections, hybrid shared blocks included); per-arch results land
 under ``runs`` and a ``rows`` array (one ``{name, us_per_call,
 sim_gmacs}`` row per arch) feeds the ``check_bench.py`` regression gate.
 
+``--curve`` adds the paper's accuracy-vs-device-nonideality trade study
+(docs/analog_pipeline.md §5): a write-noise sweep of the noisy ``taox``
+device training {no-carry, carry, carry+pulse-train} variants at equal
+steps, emitted under ``nonideality_curve`` together with two gate rows
+(``analog_train/carry``, ``analog_train/pulse_train``) that
+``check_bench --require`` pins.
+
 ``--mesh DxM`` runs the analog side sharded over a DATAxMODEL device mesh
 (docs/analog_pipeline.md §Sharding); on a CPU host the benchmark sets the
 host-platform device-count flag for you, so
@@ -166,6 +173,98 @@ def run_numeric(cfg, stream, args):
             "median_step_us": warm[len(warm) // 2] * 1e6}
 
 
+def run_nonideality_curve(args, mesh=None):
+    """Accuracy-vs-device-nonideality trade study (paper §V.C / §VI.B).
+
+    Sweeps the write-noise multiplier of the noisy ``taox`` device
+    (``taox:wn<mult>``, see core.tiled_analog.device_model) and trains
+    three analog variants at every point from the same init and token
+    stream, at equal steps:
+
+      no_carry          — the plain single-array update path,
+      carry             — periodic-carry LSB array (the paper's
+                          accuracy-recovery mechanism: LSB writes are
+                          amplified by carry_base, so the per-write SNR
+                          doubles and the read path attenuates the
+                          residual noise by 1/carry_base),
+      carry_pulse_train — carry plus stochastic 4-phase pulse-train
+                          writes, whose noise scales with the *total*
+                          fired charge (the physically honest, noisier
+                          write).
+
+    The headline number is ``gap_closed_by_carry`` at the top noise
+    point: the fraction of the (no_carry - numeric) final-loss gap the
+    carry run recovers.  The acceptance contract pins it >= 0.5.
+    """
+    if args.curve_steps:
+        args = argparse.Namespace(**{**vars(args),
+                                     "steps": args.curve_steps})
+    arch = (args.configs or args.arch).split(",")[0]
+    base = bench_config(args, arch)
+    variants = {
+        "no_carry": {},
+        "carry": dict(analog_carry=True, carry_period=args.carry_period,
+                      analog_carry_base=args.carry_base),
+        "carry_pulse_train": dict(analog_carry=True,
+                                  carry_period=args.carry_period,
+                                  analog_carry_base=args.carry_base,
+                                  analog_update_mode="pulse_train"),
+    }
+    mults = [float(x) for x in args.curve_noise.split(",") if x]
+    stream = make_token_stream(
+        max(200_000, args.steps * args.batch * (args.seq + 1) + 1),
+        base.vocab, seed=args.seed)
+    tail = lambda ls: float(np.mean(ls[-5:]))  # noqa: E731
+    numeric = run_numeric(base, stream, args)
+    num_final = tail(numeric["loss"])
+    points = []
+    for m in mults:
+        dev = f"taox:wn{m:g}" if m != 1.0 else "taox"
+        pt = {"write_noise_mult": m, "device": dev}
+        for vname, extra in variants.items():
+            res = run_analog(base.replace(analog_device=dev, **extra),
+                             stream, args, mesh=mesh)
+            pt[vname] = {"final_loss": tail(res["loss"]),
+                         "loss": thin_curve(res["loss"]),
+                         "median_step_us": res["median_step_us"],
+                         "compiles": res["compiles"]}
+        gap = pt["no_carry"]["final_loss"] - num_final
+        pt["gap_vs_numeric"] = gap
+        pt["gap_closed_by_carry"] = (
+            (pt["no_carry"]["final_loss"] - pt["carry"]["final_loss"])
+            / gap if abs(gap) > 1e-9 else None)
+        points.append(pt)
+        print(f"curve wn x{m:g}: numeric={num_final:.4f} "
+              f"no_carry={pt['no_carry']['final_loss']:.4f} "
+              f"carry={pt['carry']['final_loss']:.4f} "
+              f"carry+pulse={pt['carry_pulse_train']['final_loss']:.4f} "
+              f"gap={gap:+.4f} closed="
+              f"{pt['gap_closed_by_carry'] if pt['gap_closed_by_carry'] is not None else float('nan'):.2f}")
+    top = points[-1]
+    tok_step = args.batch * args.seq
+    gmacs = sim_gmacs_per_step(base, tok_step)
+    rows = [
+        {"name": "analog_train/carry",
+         "us_per_call": top["carry"]["median_step_us"],
+         "sim_gmacs": gmacs},
+        {"name": "analog_train/pulse_train",
+         "us_per_call": top["carry_pulse_train"]["median_step_us"],
+         "sim_gmacs": gmacs},
+    ]
+    return {
+        "arch": base.name, "steps": args.steps, "lr": args.lr,
+        "carry_period": args.carry_period, "carry_base": args.carry_base,
+        "numeric_final_loss": num_final,
+        "numeric_loss": thin_curve(numeric["loss"]),
+        "points": points,
+        "max_nonideality": {
+            "write_noise_mult": top["write_noise_mult"],
+            "gap_vs_numeric": top["gap_vs_numeric"],
+            "gap_closed_by_carry": top["gap_closed_by_carry"],
+        },
+    }, rows
+
+
 def thin_curve(curve, cap=100):
     """Subsample a per-step loss curve for the JSON artifact (first and
     last point always kept).  At trajectory step counts the full curve is
@@ -214,6 +313,26 @@ def main(argv=None):
     ap.add_argument("--tile", type=int, default=0,
                     help="square physical tile size override "
                          "(0 = arch default / smoke 64)")
+    ap.add_argument("--curve", action=argparse.BooleanOptionalAction,
+                    default=False,
+                    help="also run the accuracy-vs-device-nonideality "
+                         "curve (noisy taox x {no-carry, carry, "
+                         "carry+pulse-train}) and emit it under "
+                         "'nonideality_curve' plus analog_train/carry "
+                         "and analog_train/pulse_train gate rows")
+    ap.add_argument("--curve-steps", type=int, default=0,
+                    help="step count for the --curve runs (0 = --steps); "
+                         "lets a long-throughput main run keep the curve "
+                         "at its calibrated short-sweep scale")
+    ap.add_argument("--curve-noise", default="1,16,64",
+                    help="comma-separated write-noise multipliers for "
+                         "--curve (x-axis of the nonideality sweep)")
+    ap.add_argument("--carry-period", type=int, default=4,
+                    help="carry-sweep cadence for the --curve carry "
+                         "variants")
+    ap.add_argument("--carry-base", type=float, default=4.0,
+                    help="significance ratio between the primary and "
+                         "the carry LSB array for the --curve variants")
     ap.add_argument("--configs", default=None,
                     help="comma-separated arch list to benchmark in one "
                          "run (overrides --arch); per-arch results land "
@@ -293,6 +412,17 @@ def main(argv=None):
               + "  ".join(f"{k}={v:.3f}" for k, v in pj.items()))
         print(f"ideal/16-bit forward parity rel err: {parity:.2e}")
 
+    curve = None
+    if args.curve:
+        curve, curve_rows = run_nonideality_curve(args, mesh=mesh)
+        rows.extend(curve_rows)
+        top = curve["max_nonideality"]
+        closed = top["gap_closed_by_carry"]
+        print(f"nonideality curve [{curve['arch']}]: at write-noise "
+              f"x{top['write_noise_mult']:g} the carry run closes "
+              f"{closed if closed is not None else float('nan'):.0%} of "
+              f"the {top['gap_vs_numeric']:+.4f} analog/numeric gap")
+
     # legacy single-run layout at the top level (first arch) + runs/rows
     result = {
         "smoke": args.smoke, "device": args.device,
@@ -303,6 +433,7 @@ def main(argv=None):
         **runs[archs[0]],
         "runs": runs,
         "rows": rows,
+        **({"nonideality_curve": curve} if curve else {}),
         # Aggregate analog/numeric overhead across every benchmarked
         # family.  wall_ratio needs enough steps to amortise the compile
         # (~98% of a 10-step run is XLA, not training — see the CI

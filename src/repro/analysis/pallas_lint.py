@@ -322,6 +322,19 @@ def _kernel_entries() -> List[Tuple[str, Callable, tuple, dict]]:
          partial(xbar_outer_update, cfg=cfg0, block_b=4,
                  noise_mode="none", impl="interpret"),
          (g, x, d, 1.0e-3), {}),
+        # Pulse-train mode threads a second output block (the |x||d|
+        # accumulator) through the same tile grid — its BlockSpecs and
+        # epilogue indexing get their own audit rows.
+        ("xbar_outer_update[pulse-train]",
+         partial(xbar_outer_update, cfg=cfg, block_b=4,
+                 noise_mode="kernel", impl="interpret",
+                 update_mode="pulse_train"),
+         (g, x, d, 1.0e-3), {"seed": seed}),
+        ("xbar_outer_update[pulse-train-no-noise]",
+         partial(xbar_outer_update, cfg=cfg0, block_b=4,
+                 noise_mode="none", impl="interpret",
+                 update_mode="pulse_train"),
+         (g, x, d, 1.0e-3), {}),
         ("xbar_fused_read[vmm]",
          fused,
          (S((B, K), f32), S((K, N), f32), S((K, N), f32), 1.0), {}),

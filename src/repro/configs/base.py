@@ -139,6 +139,21 @@ class ModelConfig:
     # reference chain; "pallas"/"interpret"/"jnp" force a specific path
     # (kernels/xbar_vmm.READ_IMPLS).
     analog_read_impl: str = "auto"
+    # Periodic carry (paper §V.C / §VI.B): every container gains a second
+    # "g_carry" crossbar holding the LSB significance level.  Updates land
+    # on the carry array scaled by analog_carry_base (so each requested
+    # step is a base-times-larger conductance move far from the rails),
+    # and every carry_period steps a serial sweep folds the ADC-quantised
+    # carry deviation into the primary array (core/periodic_carry.py:
+    # carry_fold, scheduled by train/analog_lm.AnalogTrainStep).
+    analog_carry: bool = False
+    carry_period: int = 0          # steps between carry sweeps (0 = never)
+    analog_carry_base: float = 4.0
+    # Update execution: "outer" is the rank-k parallel write; "pulse_train"
+    # sign-decomposes the outer product into 4-phase SET/RESET pulse
+    # trains with integer clock-cycle event counts (Gokmen & Vlasov,
+    # arXiv 1603.07341) — kernels/xbar_update.py UPDATE_MODES.
+    analog_update_mode: str = "outer"
 
     @property
     def resolved_analog_mode(self) -> AnalogMode:

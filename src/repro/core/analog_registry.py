@@ -49,7 +49,10 @@ EXPERT_BATCHED = "expert_batched"
 KINDS = (COLUMN_PARALLEL, ROW_PARALLEL, EXPERT_BATCHED)
 
 #: Leaf names of a tiled-crossbar container (plus the in-step tape slots).
-ANALOG_LEAVES = ("g", "ref", "w_scale", "x_tape", "d_tape")
+#: ``g_carry`` is the optional periodic-carry LSB array (paper §V.C) —
+#: present only when the config enables carry, shaped and sharded exactly
+#: like ``g``.
+ANALOG_LEAVES = ("g", "ref", "w_scale", "g_carry", "x_tape", "d_tape")
 
 #: Projection keys whose K (row) tiles follow the TP axis — the analog
 #: mirror of the digital row-parallel rule.
@@ -234,7 +237,7 @@ def leaf_layout(kind: str, ndim: int, leaf: str, rows: int, cols: int
         r, c = ("tp", rows), ("fsdp", cols)
     else:
         r, c = ("fsdp", rows), ("tp", cols)
-    if leaf in ("g", "ref"):
+    if leaf in ("g", "ref", "g_carry"):
         return (*roles, r, c)
     if leaf == "x_tape":
         return (*roles, (None, 1), r)

@@ -52,6 +52,14 @@ class CrossbarConfig:
     # "interpret", "jnp", or "chain" — the original unfused
     # quantise→einsum→ADC chain kept as the bit-reference oracle.
     read_impl: str = "auto"
+    # Update execution (``kernels.xbar_update.UPDATE_MODES``): "outer" is
+    # the rank-k parallel write; "pulse_train" sign-decomposes it into
+    # 4-phase SET/RESET trains with integer event counts.
+    update_mode: str = "outer"
+    # Periodic carry: containers carry a second "g_carry" LSB array one
+    # significance level (1/carry_base) below the primary (paper §V.C).
+    carry: bool = False
+    carry_base: float = 4.0
 
     def replace(self, **kw) -> "CrossbarConfig":
         return dataclasses.replace(self, **kw)

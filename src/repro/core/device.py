@@ -151,6 +151,66 @@ def apply_update(g: Array, dg_req: Array, cfg: DeviceConfig,
 
 
 # ---------------------------------------------------------------------------
+# Pulse-train writes: sign-decomposed 4-phase outer products with integer
+# clock-cycle event counts (Gokmen & Vlasov, arXiv 1603.07341; the NIST
+# Daffodil board's drive scheme).  A rank-k outer-product update splits
+# each batch term x_b * d_b by operand sign into four phases — (+,+) and
+# (-,-) drive SET, (+,-) and (-,+) drive RESET — so with
+#
+#     acc = sum_b x_b d_b        (the signed outer product)
+#     A   = sum_b |x_b| |d_b|    (total drive activity)
+#
+# and a signed learning-rate scale m, the per-cell SET / RESET magnitudes
+#
+#     S = (A |m| + acc m) / 2 >= 0,   R = (A |m| - acc m) / 2 >= 0
+#
+# satisfy S - R = acc m (the requested update) and S + R = A |m| (the
+# total pulse count that drives the random-walk write noise).  Magnitudes
+# are quantised to integer event counts n = round(S / pulse_dg), i.e. the
+# clock cycles the column driver holds its enable line.
+# ---------------------------------------------------------------------------
+
+def pulse_train_counts(set_mag: Array, reset_mag: Array,
+                       cfg: DeviceConfig) -> tuple:
+    """Integer SET/RESET clock-cycle event counts for the requested
+    per-cell magnitudes (both >= 0, in normalised conductance units)."""
+    n_set = jnp.round(set_mag / cfg.pulse_dg)
+    n_reset = jnp.round(reset_mag / cfg.pulse_dg)
+    return n_set, n_reset
+
+
+def apply_pulse_train(g: Array, set_mag: Array, reset_mag: Array,
+                      cfg: DeviceConfig,
+                      key: Optional[Array] = None) -> Array:
+    """Apply a 4-phase pulse-train write through the device model.
+
+    Unlike :func:`apply_update` (one signed ``dg_req`` realised at face
+    value), the SET and RESET phases fire *separately*: ``n_set`` pulses
+    through the state-dependent SET slope and ``n_reset`` through the
+    RESET slope, each an integer number of ``pulse_dg`` events, and the
+    write noise accumulates over ``n_set + n_reset`` total pulses — a
+    cell whose phases cancel (S == R) still random-walks.  This is the
+    host-side twin of the ``update_mode="pulse_train"`` kernel epilogue
+    in ``kernels/xbar_update.py``.
+    """
+    n_set, n_reset = pulse_train_counts(set_mag, reset_mag, cfg)
+    if cfg.kind in ("ideal", "linearized"):
+        up = jnp.ones_like(g)
+        dn = jnp.ones_like(g)
+    else:
+        x = _norm_state(g, cfg)
+        up = cfg.gain_set * set_factor(x, cfg.nu_set)
+        dn = cfg.gain_reset * reset_factor(x, cfg.nu_reset)
+    dg = cfg.pulse_dg * (n_set * up - n_reset * dn)
+    if cfg.write_noise > 0.0:
+        if key is None:
+            raise ValueError("stochastic device model requires a PRNG key")
+        sigma = cfg.write_noise * cfg.pulse_dg * jnp.sqrt(n_set + n_reset)
+        dg = dg + sigma * jax.random.normal(key, g.shape, dtype=g.dtype)
+    return jnp.minimum(jnp.maximum(g + dg, cfg.gmin), cfg.gmax)
+
+
+# ---------------------------------------------------------------------------
 # ΔG(V): pulse-voltage dependence, paper Eq. (6).
 # ---------------------------------------------------------------------------
 

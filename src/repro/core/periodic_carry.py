@@ -110,6 +110,31 @@ def pc_update(params: dict, x: Array, d: Array, lr: float,
     return {**params, "g": params["g"].at[0].set(g0)}
 
 
+def carry_fold(g_src: Array, g_dst: Array, ref: Array, base: float,
+               cfg: CrossbarConfig, quantize=None) -> tuple:
+    """One closed-loop carry transfer between adjacent significance cells.
+
+    Reads the source cell's signed value ``v = g_src - ref`` (optionally
+    through ``quantize``, the serial readout's ADC model), clamps it to
+    what the destination cell can absorb after the ``/base`` rescale,
+    and returns the exact closed-loop write pair ``(t, inc)``: the
+    source loses ``t``, the destination gains ``inc = t / base``.  The
+    transfer conserves the stack's effective value by construction
+    (``base * inc == t``) whatever the clamp does.  Shared by the MLP
+    multi-cell stack (:func:`pc_carry`) and the transformer container
+    sweep (``train/analog_lm.AnalogTrainStep``), whose carry array sits
+    one significance level *below* its primary — elementwise only, so a
+    tile-sharded container folds shard-locally.
+    """
+    v = g_src - ref
+    if quantize is not None:
+        v = quantize(v)
+    # Transferable amount: must fit in the next cell after /base scaling.
+    head = cfg.w_swing - jnp.abs(g_dst - ref)
+    t = jnp.clip(v, -head * base, head * base)
+    return t, t / base
+
+
 def pc_carry(params: dict, cfg: CrossbarConfig,
              closed_loop_noise: float = 0.0,
              key: Optional[Array] = None) -> dict:
@@ -126,11 +151,7 @@ def pc_carry(params: dict, cfg: CrossbarConfig,
     keys = (jax.random.split(key, n_cells) if key is not None
             else [None] * n_cells)
     for c in range(n_cells - 1):
-        v_c = g[c] - params["ref"]
-        # Transferable amount: must fit in the next cell after /base scaling.
-        head = swing - jnp.abs(g[c + 1] - params["ref"])
-        t = jnp.clip(v_c, -head * base, head * base)
-        inc = t / base
+        t, inc = carry_fold(g[c], g[c + 1], params["ref"], base, cfg)
         if closed_loop_noise > 0.0 and keys[c] is not None:
             inc = inc + closed_loop_noise * swing * jax.random.normal(
                 keys[c], inc.shape, dtype=inc.dtype)

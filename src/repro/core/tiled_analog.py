@@ -68,6 +68,22 @@ DEVICE_MODELS: Dict[str, DeviceConfig] = {
 }
 
 
+def device_model(name: str) -> DeviceConfig:
+    """Resolve an ``analog_device`` name to a :class:`DeviceConfig`.
+
+    Besides the registry keys, ``<base>:wn<mult>`` scales the base
+    model's write noise by a float multiplier — e.g. ``taox:wn16`` is
+    the TaOx device with 16x its calibrated write noise.  This is the
+    nonideality axis the accuracy-recovery curve in
+    ``benchmarks/analog_train_bench.py --curve`` sweeps.
+    """
+    if ":wn" in name:
+        base, mult = name.split(":wn", 1)
+        dev = DEVICE_MODELS[base]
+        return dev.replace(write_noise=dev.write_noise * float(mult))
+    return DEVICE_MODELS[name]
+
+
 @lru_cache(maxsize=None)
 def crossbar_from_model(cfg) -> CrossbarConfig:
     """Build the physical tile description from a (frozen) ModelConfig.
@@ -78,11 +94,14 @@ def crossbar_from_model(cfg) -> CrossbarConfig:
     """
     return CrossbarConfig(
         rows=cfg.analog_rows, cols=cfg.analog_cols,
-        device=DEVICE_MODELS[cfg.analog_device],
+        device=device_model(cfg.analog_device),
         adc=AdcConfig(in_bits=cfg.analog_in_bits,
                       out_bits=cfg.analog_out_bits,
                       sat_sigmas=cfg.analog_sat_sigmas),
-        read_impl=getattr(cfg, "analog_read_impl", "auto"))
+        read_impl=getattr(cfg, "analog_read_impl", "auto"),
+        update_mode=getattr(cfg, "analog_update_mode", "outer"),
+        carry=getattr(cfg, "analog_carry", False),
+        carry_base=getattr(cfg, "analog_carry_base", 4.0))
 
 
 def program_linear(w: Array, cfg: CrossbarConfig,
@@ -101,7 +120,14 @@ def program_linear(w: Array, cfg: CrossbarConfig,
     g, w_scale = weights_to_conductance(w, cfg, w_max=w_max)
     ref = make_reference(w.shape, cfg,
                          key=key if cfg.ref_sigma > 0 else None)
-    return {"g": g, "ref": ref, "w_scale": w_scale}
+    p = {"g": g, "ref": ref, "w_scale": w_scale}
+    if cfg.carry:
+        # Periodic-carry LSB array, one significance level (1/carry_base)
+        # below the primary.  Initialised at the reference (zero effective
+        # contribution); a fresh buffer, not an alias of ref, so donation
+        # never sees the same buffer twice.
+        p["g_carry"] = ref + jnp.zeros_like(ref)
+    return p
 
 
 def program_stacked(w: Array, cfg: CrossbarConfig,
@@ -119,15 +145,27 @@ def is_analog_container(p) -> bool:
     return isinstance(p, dict) and {"g", "ref", "w_scale"} <= set(p)
 
 
+def effective_g(p: dict, cfg: CrossbarConfig) -> Array:
+    """Conductances the read path sees: the primary array plus, when the
+    container carries a periodic-carry LSB array, its signed deviation
+    scaled one significance level down (paper §V.C stack read — both
+    cells drive the shared bit line, the carry cell at 1/base drive).
+    Containers without ``g_carry`` pass through untouched."""
+    gc = p.get("g_carry")
+    if gc is None:
+        return p["g"]
+    return p["g"] + (gc - p["ref"]) / cfg.carry_base
+
+
 def readout(p: dict, cfg: CrossbarConfig) -> Array:
     """Digital serial read of the programmed weights (paper §III.D).
 
     Handles scan-stacked containers, where ``g`` is (L, K, N) and
-    ``w_scale`` is (L,).
+    ``w_scale`` is (L,), and folds in any periodic-carry residual so a
+    mid-training checkpoint reads back the weights the model executes.
     """
-    del cfg  # reference array carries the zero point
     w_scale = jnp.asarray(p["w_scale"])[..., None, None]
-    return (p["g"] - p["ref"]) / w_scale
+    return (effective_g(p, cfg) - p["ref"]) / w_scale
 
 
 def tile_info(p: dict, cfg: CrossbarConfig) -> Tuple[int, int, float]:
@@ -240,8 +278,8 @@ def analog_project(p: dict, x: Array, cfg: CrossbarConfig) -> Array:
         x_tape = jnp.zeros((xb.shape[0], k), jnp.float32)
     if d_tape is None:
         d_tape = jnp.zeros((xb.shape[0], n), jnp.float32)
-    y = _taped_matmul(p["g"], p["ref"], p["w_scale"], x_tape, d_tape,
-                      xb.astype(jnp.float32), cfg)
+    y = _taped_matmul(effective_g(p, cfg), p["ref"], p["w_scale"], x_tape,
+                      d_tape, xb.astype(jnp.float32), cfg)
     return y.reshape(*lead, n).astype(x.dtype)
 
 
@@ -265,8 +303,8 @@ def analog_project_batched(p: dict, x: Array, cfg: CrossbarConfig) -> Array:
         x_tape = jnp.zeros(x.shape, jnp.float32)
     if d_tape is None:
         d_tape = jnp.zeros((e, x.shape[1], n), jnp.float32)
-    y = _taped_matmul(p["g"], p["ref"], p["w_scale"], x_tape, d_tape,
-                      x.astype(jnp.float32), cfg)
+    y = _taped_matmul(effective_g(p, cfg), p["ref"], p["w_scale"], x_tape,
+                      d_tape, x.astype(jnp.float32), cfg)
     return y.astype(x.dtype)
 
 
@@ -373,7 +411,8 @@ def split_tapes(params, n_tokens: int, tokens_for=None, path=()):
         rows = tokens_for(path, params["g"].shape) if tokens_for \
             else n_tokens
         return (make_tapes(params, rows),
-                {k: params[k] for k in ("g", "ref", "w_scale")})
+                {k: params[k] for k in ("g", "ref", "w_scale", "g_carry")
+                 if k in params})
     if isinstance(params, dict):
         split = {k: split_tapes(v, n_tokens, tokens_for, path + (k,))
                  for k, v in params.items()}

@@ -93,6 +93,12 @@ Array = jax.Array
 
 NOISE_MODES = ("none", "host", "kernel")
 IMPLS = ("auto", "pallas", "interpret", "fused")
+# "outer": one aggregate analog write per cell from the batched outer
+# product (the default).  "pulse_train": sign-decomposed 4-phase stochastic
+# pulse trains (Gokmen & Vlasov, arXiv:1603.07341) — SET and RESET event
+# magnitudes are accumulated separately and quantised to integer
+# clock-cycle counts before the asymmetric device responds to each train.
+UPDATE_MODES = ("outer", "pulse_train")
 
 
 # --------------------------------------------------------------------------
@@ -188,32 +194,40 @@ def field_normals(seed, shape, cfg: CrossbarConfig,
 # Device epilogue (elementwise; mirrors core.device.apply_update)
 # --------------------------------------------------------------------------
 
+def _updown_factors(g: Array, dev: DeviceConfig) -> tuple:
+    """State-dependent SET/RESET step factors (see core.device.set_factor)."""
+    x = (g - dev.gmin) / (dev.gmax - dev.gmin)
+
+    # set/reset factors, centre-normalised (see core.device.set_factor)
+    def factor(xx, nu):
+        if nu < 1e-6:
+            return 2.0 * (1.0 - xx)
+        e = np.exp(-nu)
+        mid = (np.exp(-0.5 * nu) - e) / (1.0 - e)
+        return (jnp.exp(-nu * xx) - e) / (1.0 - e) / mid
+
+    if dev.nu_set == dev.nu_reset and dev.nu_set >= 1e-6:
+        # Symmetric nonlinearity: exp(-nu (1-x)) = e^{-nu} / exp(-nu x),
+        # so one transcendental serves both write directions.
+        nu = dev.nu_set
+        e = np.exp(-nu)
+        mid = (np.exp(-0.5 * nu) - e) / (1.0 - e)
+        s = jnp.exp(-nu * x)
+        up = dev.gain_set * ((s - e) / ((1.0 - e) * mid))
+        dn = dev.gain_reset * ((e / s - e) / ((1.0 - e) * mid))
+    else:
+        up = dev.gain_set * factor(x, dev.nu_set)
+        dn = dev.gain_reset * factor(1.0 - x, dev.nu_reset)
+    return up, dn
+
+
 def _device_epilogue(g: Array, dg_req: Array, noise: Optional[Array],
                      dev: DeviceConfig) -> Array:
     """Elementwise device model (mirrors core.device.apply_update)."""
     if dev.kind in ("ideal", "linearized"):
         dg = dg_req
     else:
-        x = (g - dev.gmin) / (dev.gmax - dev.gmin)
-        # set/reset factors, centre-normalised (see core.device.set_factor)
-        def factor(xx, nu):
-            if nu < 1e-6:
-                return 2.0 * (1.0 - xx)
-            e = np.exp(-nu)
-            mid = (np.exp(-0.5 * nu) - e) / (1.0 - e)
-            return (jnp.exp(-nu * xx) - e) / (1.0 - e) / mid
-        if dev.nu_set == dev.nu_reset and dev.nu_set >= 1e-6:
-            # Symmetric nonlinearity: exp(-nu (1-x)) = e^{-nu} / exp(-nu x),
-            # so one transcendental serves both write directions.
-            nu = dev.nu_set
-            e = np.exp(-nu)
-            mid = (np.exp(-0.5 * nu) - e) / (1.0 - e)
-            s = jnp.exp(-nu * x)
-            up = dev.gain_set * ((s - e) / ((1.0 - e) * mid))
-            dn = dev.gain_reset * ((e / s - e) / ((1.0 - e) * mid))
-        else:
-            up = dev.gain_set * factor(x, dev.nu_set)
-            dn = dev.gain_reset * factor(1.0 - x, dev.nu_reset)
+        up, dn = _updown_factors(g, dev)
         dg = jnp.where(dg_req >= 0, dg_req * up, dg_req * dn)
     if dev.write_noise > 0.0 and noise is not None:
         n_pulses = jnp.abs(dg_req) / dev.pulse_dg
@@ -223,12 +237,55 @@ def _device_epilogue(g: Array, dg_req: Array, noise: Optional[Array],
     return jnp.minimum(jnp.maximum(g + dg, dev.gmin), dev.gmax)
 
 
+def _pulse_epilogue(g: Array, acc: Array, a_abs: Array, m, noise:
+                    Optional[Array], dev: DeviceConfig) -> Array:
+    """Pulse-train write (mirrors core.device.apply_pulse_train).
+
+    ``acc = sum_b x_b d_b`` is the signed outer-product accumulator and
+    ``a_abs = sum_b |x_b| |d_b|`` its magnitude twin.  The four drive
+    phases of the sign-decomposed update (++/-- on the SET rail, +-/-+ on
+    the RESET rail) partition the event mass so that
+
+        S = (a_abs |m| + acc m) / 2      R = (a_abs |m| - acc m) / 2
+
+    with ``S - R = m acc`` (the requested update) and ``S + R = |m| a_abs``
+    (the total fired charge).  Each rail fires an *integer* number of
+    clock-cycle events ``n = round(mag / pulse_dg)``; the device answers
+    every SET event with ``pulse_dg * up`` and every RESET event with
+    ``pulse_dg * dn``, so nonlinearity and gain asymmetry act per train,
+    not per aggregate.  Write noise scales with the total event count
+    ``sqrt(n_set + n_reset)`` — a correlated batch (acc ~ a_abs) is as
+    quiet as the aggregate write, a cancelling batch keeps the full
+    fired-charge variance the "outer" mode never sees.
+    """
+    s_mag = 0.5 * (a_abs * jnp.abs(m) + acc * m)
+    r_mag = 0.5 * (a_abs * jnp.abs(m) - acc * m)
+    n_set = jnp.round(jnp.maximum(s_mag, 0.0) / dev.pulse_dg)
+    n_reset = jnp.round(jnp.maximum(r_mag, 0.0) / dev.pulse_dg)
+    if dev.kind in ("ideal", "linearized"):
+        up = jnp.ones_like(g)
+        dn = jnp.ones_like(g)
+    else:
+        up, dn = _updown_factors(g, dev)
+    dg = dev.pulse_dg * (n_set * up - n_reset * dn)
+    if dev.write_noise > 0.0 and noise is not None:
+        sigma = dev.write_noise * dev.pulse_dg * jnp.sqrt(n_set + n_reset)
+        dg = dg + sigma * noise
+    return jnp.minimum(jnp.maximum(g + dg, dev.gmin), dev.gmax)
+
+
 # --------------------------------------------------------------------------
 # The kernel
 # --------------------------------------------------------------------------
 
 def _update_kernel(*refs, cfg: CrossbarConfig, n_bsteps: int,
-                   noise_mode: str):
+                   noise_mode: str, update_mode: str = "outer"):
+    if update_mode == "pulse_train":
+        # Second output block: the |x| |d| magnitude accumulator rides the
+        # same tile grid as the outer-product accumulator.
+        *refs, a_ref = refs
+    else:
+        a_ref = None
     if noise_mode == "host":
         x_ref, d_ref, g_ref, noise_ref, scale_ref, o_ref = refs
     elif noise_mode == "kernel":
@@ -243,12 +300,19 @@ def _update_kernel(*refs, cfg: CrossbarConfig, n_bsteps: int,
     @pl.when(bstep == 0)
     def _init():
         o_ref[0, :, :] = jnp.zeros_like(o_ref[0, :, :])
+        if a_ref is not None:
+            a_ref[0, :, :] = jnp.zeros_like(a_ref[0, :, :])
 
     # Accumulate the outer product sum_b x[b, :] d[b, :] for this tile.
     o_ref[0, :, :] += jax.lax.dot_general(
         x_ref[0, :, :], d_ref[0, :, :],
         dimension_numbers=(((0,), (0,)), ((), ())),
         preferred_element_type=jnp.float32)
+    if a_ref is not None:
+        a_ref[0, :, :] += jax.lax.dot_general(
+            jnp.abs(x_ref[0, :, :]), jnp.abs(d_ref[0, :, :]),
+            dimension_numbers=(((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
 
     @pl.when(bstep == n_bsteps - 1)
     def _apply():
@@ -269,12 +333,17 @@ def _update_kernel(*refs, cfg: CrossbarConfig, n_bsteps: int,
             noise = noise_ref[0, :, :]
         else:
             noise = None
-        o_ref[0, :, :] = _device_epilogue(g_ref[0, :, :], dg_req, noise,
-                                          cfg.device)
+        if a_ref is not None:
+            o_ref[0, :, :] = _pulse_epilogue(
+                g_ref[0, :, :], o_ref[0, :, :], a_ref[0, :, :],
+                scale_ref[0, 0], noise, cfg.device)
+        else:
+            o_ref[0, :, :] = _device_epilogue(g_ref[0, :, :], dg_req, noise,
+                                              cfg.device)
 
 
 def _pallas_update(g, x_q, d_q, scale, noise, seed, offs, cfg, block_b,
-                   noise_mode, interpret):
+                   noise_mode, interpret, update_mode="outer"):
     lyr, k, n = g.shape
     b = x_q.shape[1]
     bb = block_b or b
@@ -305,48 +374,71 @@ def _pallas_update(g, x_q, d_q, scale, noise, seed, offs, cfg, block_b,
     inputs.append(jnp.reshape(scale, (lyr, 1)))
     in_specs.append(pl.BlockSpec((1, 1), lambda l_, k_, n_, b_: (l_, 0)))
 
+    g_spec = pl.BlockSpec((1, cfg.rows, cfg.cols),
+                          lambda l_, k_, n_, b_: (l_, k_, n_))
+    g_shape = jax.ShapeDtypeStruct((lyr, kp, np_), jnp.float32)
+    if update_mode == "pulse_train":
+        # The magnitude accumulator is a second output on the identical
+        # tile grid; the caller discards it (scratch that outlives bsteps).
+        out_specs = (g_spec, pl.BlockSpec((1, cfg.rows, cfg.cols),
+                                          lambda l_, k_, n_, b_: (l_, k_, n_)))
+        out_shape = (g_shape, jax.ShapeDtypeStruct((lyr, kp, np_),
+                                                   jnp.float32))
+    else:
+        out_specs = g_spec
+        out_shape = g_shape
     out = pl.pallas_call(
         functools.partial(_update_kernel, cfg=cfg, n_bsteps=grid[3],
-                          noise_mode=noise_mode),
+                          noise_mode=noise_mode, update_mode=update_mode),
         grid=grid,
         in_specs=in_specs,
-        out_specs=pl.BlockSpec((1, cfg.rows, cfg.cols),
-                               lambda l_, k_, n_, b_: (l_, k_, n_)),
-        out_shape=jax.ShapeDtypeStruct((lyr, kp, np_), jnp.float32),
+        out_specs=out_specs,
+        out_shape=out_shape,
         interpret=interpret,
     )(*inputs)
+    if update_mode == "pulse_train":
+        out = out[0]
     return out[:, :k, :n]
 
 
-def _fused_update(g, x_q, d_q, scale, noise, seed, offs, cfg, noise_mode):
+def _fused_update(g, x_q, d_q, scale, noise, seed, offs, cfg, noise_mode,
+                  update_mode="outer"):
     """Single-sweep jnp twin of the kernel: one layer-batched einsum plus
     the identical epilogue (and, in kernel noise mode, the identical
     counter-PRNG bits).  The fast path on hosts without Mosaic."""
-    dg_req = scale[:, None, None] * jnp.einsum(
-        "lbk,lbn->lkn", x_q, d_q, preferred_element_type=jnp.float32)
+    acc = jnp.einsum("lbk,lbn->lkn", x_q, d_q,
+                     preferred_element_type=jnp.float32)
     if noise_mode == "kernel":
         noise = field_normals(seed, g.shape, cfg, tile_offsets=offs)
     elif noise_mode == "none":
         noise = None
-    return _device_epilogue(g, dg_req, noise, cfg.device)
+    if update_mode == "pulse_train":
+        a_abs = jnp.einsum("lbk,lbn->lkn", jnp.abs(x_q), jnp.abs(d_q),
+                           preferred_element_type=jnp.float32)
+        return _pulse_epilogue(g, acc, a_abs, scale[:, None, None], noise,
+                               cfg.device)
+    return _device_epilogue(g, scale[:, None, None] * acc, noise,
+                            cfg.device)
 
 
 def _dispatch_update(g, x_q, d_q, scale, noise, seed, offs, cfg, block_b,
-                     impl, noise_mode):
+                     impl, noise_mode, update_mode="outer"):
     if impl == "fused":
         return _fused_update(g, x_q, d_q, scale, noise, seed, offs, cfg,
-                             noise_mode)
+                             noise_mode, update_mode)
     return _pallas_update(g, x_q, d_q, scale, noise, seed, offs, cfg,
                           block_b, noise_mode,
-                          interpret=(impl == "interpret"))
+                          interpret=(impl == "interpret"),
+                          update_mode=update_mode)
 
 
 _outer_update = functools.partial(jax.jit, static_argnames=(
-    "cfg", "block_b", "impl", "noise_mode"))(_dispatch_update)
+    "cfg", "block_b", "impl", "noise_mode", "update_mode"))(_dispatch_update)
 
 
 def _resolve_update_args(g, x_q, d_q, scale, cfg, noise, seed, noise_mode,
-                         impl, interpret, tile_offsets=None):
+                         impl, interpret, tile_offsets=None,
+                         update_mode=None):
     squeeze = g.ndim == 2
     if squeeze:
         g, x_q, d_q = g[None], x_q[None], d_q[None]
@@ -390,6 +482,11 @@ def _resolve_update_args(g, x_q, d_q, scale, cfg, noise, seed, noise_mode,
     if impl not in IMPLS:
         raise ValueError(f"impl must be one of {IMPLS}")
 
+    if update_mode is None:
+        update_mode = getattr(cfg, "update_mode", "outer") or "outer"
+    if update_mode not in UPDATE_MODES:
+        raise ValueError(f"update_mode must be one of {UPDATE_MODES}")
+
     g = g.astype(jnp.float32)
     x_q = x_q.astype(jnp.float32)
     d_q = d_q.astype(jnp.float32)
@@ -400,7 +497,7 @@ def _resolve_update_args(g, x_q, d_q, scale, cfg, noise, seed, noise_mode,
     scale = jnp.broadcast_to(
         jnp.asarray(scale, jnp.float32).reshape(-1), (lyr,))
     return (g, x_q, d_q, scale, noise, seed, offs, noise_mode, impl,
-            squeeze)
+            update_mode, squeeze)
 
 
 def xbar_outer_update(g: Array, x_q: Array, d_q: Array, scale,
@@ -411,7 +508,8 @@ def xbar_outer_update(g: Array, x_q: Array, d_q: Array, scale,
                       seed: Optional[Array] = None,
                       noise_mode: Optional[str] = None,
                       impl: Optional[str] = None,
-                      tile_offsets=None) -> Array:
+                      tile_offsets=None,
+                      update_mode: Optional[str] = None) -> Array:
     """G <- device(G, scale * sum_b outer(x_q_b, d_q_b)), layer-batched.
 
     ``g``: (K, N) or scan-stacked (L, K, N) conductances; ``x_q``: (B, K)
@@ -432,14 +530,19 @@ def xbar_outer_update(g: Array, x_q: Array, d_q: Array, scale,
     of this block when it is a shard of a larger container — shifts the
     in-kernel counter-PRNG streams so shard-local updates reproduce the
     whole-array noise (see :func:`field_normals`).  Default (0, 0, 0).
+
+    ``update_mode``: "outer" (one aggregate write per cell, default) or
+    "pulse_train" (sign-decomposed 4-phase pulse trains with integer
+    event counts — see :func:`_pulse_epilogue`).  ``None`` defers to
+    ``cfg.update_mode``.
     """
     in_dtype = g.dtype
     (g, x_q, d_q, scale, noise, seed, offs, noise_mode, impl,
-     squeeze) = _resolve_update_args(g, x_q, d_q, scale, cfg, noise, seed,
-                                     noise_mode, impl, interpret,
-                                     tile_offsets)
+     update_mode, squeeze) = _resolve_update_args(
+         g, x_q, d_q, scale, cfg, noise, seed, noise_mode, impl, interpret,
+         tile_offsets, update_mode)
     out = _outer_update(g, x_q, d_q, scale, noise, seed, offs, cfg,
-                        block_b, impl, noise_mode)
+                        block_b, impl, noise_mode, update_mode)
     if squeeze:
         out = out[0]
     return out.astype(in_dtype)
@@ -452,17 +555,19 @@ def xbar_outer_update_inline(g: Array, x_q: Array, d_q: Array, scale,
                              seed: Optional[Array] = None,
                              noise_mode: Optional[str] = None,
                              impl: Optional[str] = None,
-                             tile_offsets=None) -> Array:
+                             tile_offsets=None,
+                             update_mode: Optional[str] = None) -> Array:
     """``xbar_outer_update`` without the jit wrapper, for callers already
     inside a jitted computation (the analog train step): the update inlines
     into the caller's graph, so per-container epilogues fuse with the rest
     of the step instead of becoming separate pjit subcomputations."""
     in_dtype = g.dtype
     (g, x_q, d_q, scale, noise, seed, offs, noise_mode, impl,
-     squeeze) = _resolve_update_args(g, x_q, d_q, scale, cfg, noise, seed,
-                                     noise_mode, impl, None, tile_offsets)
+     update_mode, squeeze) = _resolve_update_args(
+         g, x_q, d_q, scale, cfg, noise, seed, noise_mode, impl, None,
+         tile_offsets, update_mode)
     out = _dispatch_update(g, x_q, d_q, scale, noise, seed, offs, cfg,
-                           block_b, impl, noise_mode)
+                           block_b, impl, noise_mode, update_mode)
     if squeeze:
         out = out[0]
     return out.astype(in_dtype)
@@ -512,7 +617,8 @@ def xbar_sharded_update(g: Array, x_q: Array, d_q: Array, scale,
                         block_b: Optional[int] = None,
                         seed: Optional[Array] = None,
                         noise_mode: Optional[str] = None,
-                        impl: Optional[str] = None) -> Array:
+                        impl: Optional[str] = None,
+                        update_mode: Optional[str] = None) -> Array:
     """The layer-batched update, run under ``shard_map`` on ``mesh``.
 
     ``specs`` maps {"g", "x_tape", "d_tape", "scale"} to tile-aligned
@@ -566,7 +672,7 @@ def xbar_sharded_update(g: Array, x_q: Array, d_q: Array, scale,
         return xbar_outer_update_inline(
             g_l, x_l, d_l, s_l, cfg, noise=noise_l, block_b=block_b,
             seed=seed_l, noise_mode=noise_mode, impl=impl,
-            tile_offsets=offs)
+            tile_offsets=offs, update_mode=update_mode)
 
     operands = [g.astype(jnp.float32), x_q.astype(jnp.float32),
                 d_q.astype(jnp.float32), scale]

@@ -124,8 +124,12 @@ def analog_update_specs(path: Tuple[str, ...], g_shape, cfg: ModelConfig,
     k, n = g_shape[-2:]
     tapes_lead = (*lead, 1)  # (L, T, ...) / (T, ...): T never sharded
     w_scale_spec = analog_container_pspec(sp, lead, cfg, mesh, "w_scale")
+    g_spec = analog_container_pspec(sp, g_shape, cfg, mesh, "g")
     return {
-        "g": analog_container_pspec(sp, g_shape, cfg, mesh, "g"),
+        "g": g_spec,
+        # The optional carry (LSB) crossbar is sharded identically to its
+        # primary: registry.leaf_layout maps both through the same rule.
+        "g_carry": g_spec,
         "x_tape": analog_container_pspec(sp, (*tapes_lead, k), cfg, mesh,
                                          "x_tape"),
         "d_tape": analog_container_pspec(sp, (*tapes_lead, n), cfg, mesh,

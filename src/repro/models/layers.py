@@ -174,10 +174,27 @@ def expert_project(p, x: Array, cfg: ModelConfig) -> Array:
     expert's matrix lives on its own tile grid, read/written with the
     expert dim riding the layer-batched kernel grid
     (core/analog_registry).
+
+    In fakequant mode the per-expert matmuls carry the same crossbar I/O
+    fake-quantisation as :func:`project` (per-token input DAC, per-K-tile
+    output ADC), vmapped over the expert dim — QAT semantics now cover
+    the MoE expert einsums, not just the dense projections.
     """
     if is_analog_container(p):
         return analog_project_batched(p, x, crossbar_from_model(cfg))
-    return jnp.einsum("etk,ekn->etn", x, p.astype(x.dtype))
+    if resolve_analog_mode(cfg) is AnalogMode.DIGITAL:
+        return jnp.einsum("etk,ekn->etn", x, p.astype(x.dtype))
+    adc = AdcConfig(in_bits=cfg.analog_in_bits,
+                    out_bits=cfg.analog_out_bits)
+    # Keep the differentiable jnp path: QAT trains through the fake-quant
+    # graph, and a Pallas read has no batching rule under this vmap.
+    impl = getattr(cfg, "analog_read_impl", None)
+    if impl not in (None, "auto", "jnp", "chain"):
+        impl = "jnp"
+    y = jax.vmap(lambda xe, we: fakequant_project(
+        xe, we, adc, cfg.analog_rows, impl=impl))(
+            x.astype(jnp.float32), p.astype(jnp.float32))
+    return y.astype(x.dtype)
 
 
 # Fake-quant math lives with the kernels now (kernels/ops.fakequant_project

@@ -157,11 +157,14 @@ def _moe_apply_grouped(p: dict, x: Array, cfg: ModelConfig, groups: int
 
     ew = p["experts"]
     act = jax.nn.gelu if cfg.act == "gelu" else jax.nn.silu
-    up = jnp.einsum("gecd,edf->gecf", buf, ew["w_up"].astype(x.dtype))
-    gate = jnp.einsum("gecd,edf->gecf", buf,
-                      ew["w_gate"].astype(x.dtype))
-    out_buf = jnp.einsum("gecf,efd->gecd", act(gate) * up,
-                         ew["w_down"].astype(x.dtype))
+    # expert_project vmapped over the group axis: the digital path lowers
+    # to the same gecd,edf->gecf einsums as before, and fakequant mode
+    # now threads the crossbar I/O quantisation through the grouped
+    # dispatch too (the grouped path never runs in device mode).
+    up = jax.vmap(lambda bg: expert_project(ew["w_up"], bg, cfg))(buf)
+    gate = jax.vmap(lambda bg: expert_project(ew["w_gate"], bg, cfg))(buf)
+    out_buf = jax.vmap(
+        lambda hg: expert_project(ew["w_down"], hg, cfg))(act(gate) * up)
     out_buf = _shard_ge(out_buf)
 
     gathered = out_buf[g_idx, se, pos_w] \

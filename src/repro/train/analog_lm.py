@@ -67,6 +67,8 @@ from repro.configs.base import (AnalogMode, ModelConfig,
                                 resolve_analog_mode)
 from repro.core import analog_registry as registry
 from repro.core import shardctx
+from repro.core.adc import adc_quantize
+from repro.core.periodic_carry import carry_fold
 from repro.core.tiled_analog import (crossbar_from_model,
                                      is_analog_container, merge_tapes,
                                      split_tapes)
@@ -310,6 +312,17 @@ class AnalogTrainStep:
             if self.xcfg.device.write_noise > 0.0 \
             and self.noise_mode == "kernel" else None
         new_params = self._update(params, grads, key, seed_base, (), rail)
+        if self.xcfg.carry and getattr(cfg, "carry_period", 0) > 0:
+            # Periodic carry (paper §VI.B): every carry_period steps a
+            # serial closed-loop pass folds each container's carry (LSB)
+            # array into its primary one significance level up.  The cond
+            # lives INSIDE the jitted, donated step — compiles stays at 1
+            # and the sweep is elementwise on the local tile blocks, so it
+            # is shard-local under shard_map (no new collectives) and the
+            # sharded==unsharded bit-parity contract extends over it.
+            new_params = jax.lax.cond(
+                (state["step"] + 1) % int(cfg.carry_period) == 0,
+                self._carry_sweep, lambda t: t, new_params)
         if not rail:
             # Every family maps through the registry now; an empty rail
             # means the tree genuinely carries no containers (a digital
@@ -332,8 +345,10 @@ class AnalogTrainStep:
         if is_analog_container(p):
             specs = self._cspecs[path][0]
             out = dict(p)
-            for leaf, spec_key in (("g", "g"), ("ref", "g"),
-                                   ("w_scale", "w_scale")):
+            leaves = [("g", "g"), ("ref", "g"), ("w_scale", "w_scale")]
+            if "g_carry" in p:
+                leaves.append(("g_carry", "g"))  # sharded identically to g
+            for leaf, spec_key in leaves:
                 x = p[leaf]
                 for d, entry in enumerate(specs[spec_key]):
                     names = _spec_names(entry)
@@ -381,13 +396,24 @@ class AnalogTrainStep:
                                       dtype=jnp.float32)
         scale = jnp.asarray(-self.lr, jnp.float32) \
             * jnp.asarray(p["w_scale"], jnp.float32)
+        # Periodic carry: every training write lands on the carry (LSB)
+        # array, one significance level below the primary — a requested
+        # Δw_eff needs a base× larger conductance move there (the
+        # effective read divides by carry_base), which keeps the carry
+        # cell swinging through the middle of its window where the device
+        # is most linear and shrinks the *effective* write noise by
+        # ~sqrt(base).  The primary only ever moves in closed-loop carry
+        # sweeps (paper §VI.B, _carry_sweep).
+        leaf = "g_carry" if "g_carry" in p else "g"
+        if leaf == "g_carry":
+            scale = scale * jnp.float32(self.xcfg.carry_base)
         if smap:
             g_new, railed, total = self._local_block_update(
-                p, tapes, scale, noise, seed, mode, path, kind)
+                p[leaf], tapes, scale, noise, seed, mode, path, kind)
             rail.append(railed / total)
         else:
             g3, x3, d3, s1, n3, unflatten = registry.flatten_lead(
-                kind, p["g"], tapes["x_tape"], tapes["d_tape"], scale,
+                kind, p[leaf], tapes["x_tape"], tapes["d_tape"], scale,
                 noise)
             if self.mesh is not None:  # GSPMD TP path: nested shard_map
                 specs = self._flat_update_specs(path, p["g"].shape, kind)
@@ -406,7 +432,38 @@ class AnalogTrainStep:
             rail.append(jnp.mean(
                 (g_new <= dev.gmin + 1e-3 * span)
                 | (g_new >= dev.gmax - 1e-3 * span)).astype(jnp.float32))
-        return {**p, "g": g_new}
+        return {**p, leaf: g_new}
+
+    def _carry_readout(self, v):
+        """Serial readout of a carry cell's signed value through the ADC
+        transfer — the elementwise twin of driving the fused read kernel
+        with unit rows (tests/test_periodic_carry_container.py pins the
+        equivalence against ``xbar_fused_read_inline``)."""
+        return adc_quantize(v, self.xcfg.w_swing, self.xcfg.adc)
+
+    def _carry_sweep(self, p):
+        """One serial carry pass (paper §VI.B / ref [35]): read each
+        carry cell through the ADC, fold the transferable amount into the
+        primary array one significance level up (closed-loop writes are
+        exact), and leave the untransferable residual — clamp leftovers
+        plus sub-LSB mass — in the carry cell, where the effective read
+        still sees it.  Elementwise, so it runs unchanged on local tile
+        blocks inside shard_map and on GSPMD-sharded full arrays."""
+        if is_analog_container(p):
+            if "g_carry" not in p:
+                return p
+            cfg = self.xcfg
+            dev = cfg.device
+            t, inc = carry_fold(p["g_carry"], p["g"], p["ref"],
+                                cfg.carry_base, cfg,
+                                quantize=self._carry_readout)
+            g = jnp.minimum(jnp.maximum(p["g"] + inc, dev.gmin), dev.gmax)
+            gc = jnp.minimum(jnp.maximum(p["g_carry"] - t, dev.gmin),
+                             dev.gmax)
+            return {**p, "g": g, "g_carry": gc}
+        if isinstance(p, dict):
+            return {k: self._carry_sweep(v) for k, v in p.items()}
+        return p
 
     def _flat_update_specs(self, path, g_shape, kind):
         """Partition specs for the *flattened* (Lflat, K, N) update view
@@ -428,7 +485,7 @@ class AnalogTrainStep:
             "scale": P(lead0),
         }
 
-    def _local_block_update(self, p, tapes, scale, noise, seed, mode,
+    def _local_block_update(self, g_arr, tapes, scale, noise, seed, mode,
                             path, kind):
         """Rank-k write of one shard's tile block (inside shard_map):
         slice the (replicated) tapes and noise to the block this shard
@@ -446,7 +503,7 @@ class AnalogTrainStep:
         lead = len(gshape) - 2
         names_r = _spec_names(g_spec[-2])
         names_c = _spec_names(g_spec[-1])
-        g_loc = p["g"]
+        g_loc = g_arr  # the primary or, under periodic carry, the carry LSB
         k_loc, n_loc = g_loc.shape[-2:]
 
         def slice_dim(x, names, size_loc, axis):

@@ -1,0 +1,193 @@
+"""Hypothesis property harness for the device physics (paper §V) and the
+retention/drift arithmetic (paper §V.E).
+
+Every invariant the analog training and serving paths *rely on* is pinned
+here as a randomised property rather than a point check:
+
+* window containment — no write (aggregate or pulse-train) can push a
+  conductance outside [gmin, gmax] or produce a NaN, for any state,
+  request, nonlinearity, or noise level;
+* gain asymmetry — ``gain_set``/``gain_reset`` act with the documented
+  sign: at the window centre (where the centre-normalised state factors
+  are exactly 1) the realised SET and RESET steps expose the gains
+  directly;
+* write-noise scaling — sigma grows like sqrt(|dg_req|), the
+  random-walk law of pulse-count accumulation;
+* pulse quantisation — integer event counts reproduce the requested
+  net update to within one ``pulse_dg``;
+* drift — the power-law deviation decay is monotone non-increasing in
+  age and *exactly composable*: splitting a span at any interior point
+  multiplies to the single-span factor, the property the serving path's
+  incremental drift application depends on.
+
+The module skips cleanly when hypothesis is not installed (see
+requirements-dev.txt); the deterministic twins of these checks live in
+tests/test_device.py and tests/test_endurance.py.
+"""
+import pytest
+
+pytest.importorskip("hypothesis")
+
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis.extra import numpy as hnp
+
+from repro.core import TAOX, DeviceConfig, apply_pulse_train, apply_update
+from repro.core.device import pulse_train_counts, write_noise_sigma
+from repro.core.endurance import RetentionSpec, cell_nu, drift_factor
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ------------------------------------------------------- window containment
+
+@settings(deadline=None, max_examples=50)
+@given(
+    g=hnp.arrays(np.float32, (8,), elements=st.floats(0, 1, width=32)),
+    dg=hnp.arrays(np.float32, (8,),
+                  elements=st.floats(-2, 2, width=32)),
+    nu=st.floats(0.1, 10.0),
+    noise=st.floats(0.0, 2.0),
+)
+def test_aggregate_update_stays_in_window(g, dg, nu, noise):
+    cfg = DeviceConfig(kind="taox", nu_set=nu, nu_reset=nu,
+                       write_noise=noise)
+    out = apply_update(jnp.asarray(g), jnp.asarray(dg), cfg, key=KEY)
+    assert bool(jnp.all(out >= cfg.gmin) and jnp.all(out <= cfg.gmax))
+    assert not bool(jnp.any(jnp.isnan(out)))
+
+
+@settings(deadline=None, max_examples=50)
+@given(
+    g=hnp.arrays(np.float32, (8,), elements=st.floats(0, 1, width=32)),
+    s=hnp.arrays(np.float32, (8,), elements=st.floats(0, 1, width=32)),
+    r=hnp.arrays(np.float32, (8,), elements=st.floats(0, 1, width=32)),
+    nu=st.floats(0.1, 10.0),
+    noise=st.floats(0.0, 2.0),
+)
+def test_pulse_train_stays_in_window(g, s, r, nu, noise):
+    """The 4-phase pulse-train write obeys the same containment contract
+    as the aggregate write — including when both rails fire (S and R both
+    positive) and the noise random-walks over the full event count."""
+    cfg = DeviceConfig(kind="taox", nu_set=nu, nu_reset=nu,
+                       write_noise=noise)
+    out = apply_pulse_train(jnp.asarray(g), jnp.asarray(s), jnp.asarray(r),
+                            cfg, key=KEY)
+    assert bool(jnp.all(out >= cfg.gmin) and jnp.all(out <= cfg.gmax))
+    assert not bool(jnp.any(jnp.isnan(out)))
+
+
+# ----------------------------------------------------------- gain asymmetry
+
+@settings(deadline=None, max_examples=50)
+@given(gain_set=st.floats(0.2, 3.0), gain_reset=st.floats(0.2, 3.0),
+       nu=st.floats(0.5, 8.0))
+def test_gain_asymmetry_documented_sign(gain_set, gain_reset, nu):
+    """At the window centre the centre-normalised state factors are 1, so
+    a small +/- request realises gain_set * dg upward and gain_reset * dg
+    downward — the documented meaning of the two gains."""
+    cfg = DeviceConfig(kind="taox", nu_set=nu, nu_reset=nu,
+                       gain_set=gain_set, gain_reset=gain_reset,
+                       write_noise=0.0)
+    g = jnp.asarray([0.5], jnp.float32)
+    d = 0.01
+    up = float(apply_update(g, jnp.asarray([d]), cfg)[0]) - 0.5
+    dn = 0.5 - float(apply_update(g, jnp.asarray([-d]), cfg)[0])
+    assert up == pytest.approx(gain_set * d, rel=1e-4)
+    assert dn == pytest.approx(gain_reset * d, rel=1e-4)
+
+
+@settings(deadline=None, max_examples=50)
+@given(gain_set=st.floats(0.2, 3.0), gain_reset=st.floats(0.2, 3.0))
+def test_pulse_train_rails_use_their_own_gain(gain_set, gain_reset):
+    """A SET-only train moves by n * pulse_dg * gain_set and a RESET-only
+    train by n * pulse_dg * gain_reset (mid-window, noiseless)."""
+    cfg = DeviceConfig(kind="taox", nu_set=3.0, nu_reset=3.0,
+                       gain_set=gain_set, gain_reset=gain_reset,
+                       write_noise=0.0)
+    g = jnp.asarray([0.5], jnp.float32)
+    mag = jnp.asarray([8 * cfg.pulse_dg], jnp.float32)
+    zero = jnp.zeros_like(mag)
+    up = float(apply_pulse_train(g, mag, zero, cfg)[0]) - 0.5
+    dn = 0.5 - float(apply_pulse_train(g, zero, mag, cfg)[0])
+    assert up == pytest.approx(8 * cfg.pulse_dg * gain_set, rel=1e-4)
+    assert dn == pytest.approx(8 * cfg.pulse_dg * gain_reset, rel=1e-4)
+
+
+# ------------------------------------------------------- write-noise scaling
+
+@settings(deadline=None, max_examples=50)
+@given(dg=st.floats(1e-3, 0.5), k=st.floats(1.5, 16.0),
+       w=st.floats(0.01, 2.0))
+def test_write_noise_sigma_random_walk_law(dg, k, w):
+    """sigma(|dg|) is strictly increasing and scales as sqrt: multiplying
+    the request by k multiplies sigma by sqrt(k)."""
+    cfg = DeviceConfig(write_noise=w)
+    s1 = float(write_noise_sigma(jnp.float32(dg), cfg))
+    s2 = float(write_noise_sigma(jnp.float32(dg * k), cfg))
+    assert s2 > s1 > 0.0
+    assert s2 / s1 == pytest.approx(np.sqrt(k), rel=1e-3)
+
+
+# --------------------------------------------------------- pulse quantisation
+
+@settings(deadline=None, max_examples=100)
+@given(s=st.floats(0.0, 0.5), r=st.floats(0.0, 0.5))
+def test_pulse_counts_quantise_within_one_event(s, r):
+    """Integer event counts: each rail rounds to within half a pulse, so
+    the net ideal-device update lands within one pulse_dg of the request."""
+    n_s, n_r = pulse_train_counts(jnp.float32(s), jnp.float32(r), TAOX)
+    assert float(n_s) == round(float(n_s))
+    assert float(n_r) == round(float(n_r))
+    net = TAOX.pulse_dg * (float(n_s) - float(n_r))
+    assert abs(net - (s - r)) <= TAOX.pulse_dg + 1e-6
+
+
+# ------------------------------------------------------------------- drift
+
+@settings(deadline=None, max_examples=50)
+@given(a0=st.floats(0.0, 1e6), span=st.floats(1.0, 1e7),
+       frac=st.floats(0.0, 1.0), nu=st.floats(1e-3, 0.5))
+def test_drift_monotone_and_bounded(a0, span, frac, nu):
+    """drift_factor is in (0, 1] and non-increasing in the end age."""
+    spec = RetentionSpec(nu=nu)
+    a_mid = a0 + frac * span
+    f_mid = float(drift_factor(a0, a_mid, spec))
+    f_end = float(drift_factor(a0, a0 + span, spec))
+    assert 0.0 < f_end <= f_mid <= 1.0
+
+
+@settings(deadline=None, max_examples=50)
+@given(a0=st.floats(0.0, 1e6), span=st.floats(1.0, 1e7),
+       frac=st.floats(0.0, 1.0), nu=st.floats(1e-3, 0.5))
+def test_drift_composes_across_arbitrary_split(a0, span, frac, nu):
+    """Splitting [a0, a0+span] at ANY interior point multiplies back to
+    the single-span factor — each cell's exponent is fixed, so
+    ((a1+t0)/(a0+t0))^-nu * ((a2+t0)/(a1+t0))^-nu telescopes.  The
+    serving path applies drift incrementally at unpredictable ages and
+    leans on exactly this."""
+    spec = RetentionSpec(nu=nu)
+    a1 = a0 + frac * span
+    a2 = a0 + span
+    whole = float(drift_factor(a0, a2, spec))
+    split = float(drift_factor(a0, a1, spec)) \
+        * float(drift_factor(a1, a2, spec))
+    assert split == pytest.approx(whole, rel=1e-5)
+
+
+@settings(deadline=None, max_examples=25)
+@given(frac=st.floats(0.0, 1.0), seed=st.integers(0, 2**31 - 1))
+def test_drift_composes_with_per_cell_exponents(frac, seed):
+    """Composability survives device-to-device nu dispersion: the per-cell
+    exponent field is a fixed draw, so the telescoping holds cellwise."""
+    spec = RetentionSpec(nu=0.05, nu_sigma=0.5, seed=seed)
+    nu = cell_nu(spec, (4, 6), salt=3)
+    a0, a2 = 100.0, 1e5
+    a1 = a0 + frac * (a2 - a0)
+    whole = np.asarray(drift_factor(a0, a2, spec, nu=nu))
+    split = np.asarray(drift_factor(a0, a1, spec, nu=nu)) \
+        * np.asarray(drift_factor(a1, a2, spec, nu=nu))
+    np.testing.assert_allclose(split, whole, rtol=1e-5)

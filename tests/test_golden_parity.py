@@ -1,0 +1,146 @@
+"""Golden bit-parity regression fixtures (tests/golden/*.json).
+
+The analog training stack makes two bit-level promises that ordinary
+tolerance tests cannot pin across releases:
+
+* **twin == chain** — the fused jnp twin, the Pallas interpreter, and the
+  compiled kernel realise the same update from the same operands and the
+  same counter-PRNG seed (kernels/xbar_update.py docstring);
+* **sharded == unsharded** — one seed produces bit-identical conductances
+  on a 1-device and an N-device mesh (tests/test_sharded_analog.py
+  verifies the two sides against each other on a 2x4 mesh).
+
+Both contracts are *relative*: they compare two live code paths, so a
+change that breaks both sides identically slips through.  These fixtures
+pin the absolute bits: tiny same-seed conductance and greedy-token
+snapshots, checked in as sha256 + head-hex JSON.  If any refactor of the
+kernel epilogues, the carry sweep, the counter PRNG, or the model forward
+changes a single mantissa bit, the digest moves and the diff shows up in
+review.
+
+Regenerate intentionally with::
+
+    REPRO_REGEN_GOLDEN=1 PYTHONPATH=src python -m pytest tests/test_golden_parity.py
+
+(the run rewrites the JSON and skips; commit the diff with an explanation
+of *why* the bits moved).  Fixtures are generated on the CPU backend;
+other backends skip.
+"""
+import hashlib
+import json
+import os
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import AdcConfig, CrossbarConfig, TAOX, weights_to_conductance
+from repro.core.xbar_ops import quantize_update_operands
+from repro.kernels.xbar_update import xbar_outer_update
+from repro.models import model as M
+from repro.train.analog_lm import init_state, make_analog_sgd_step
+
+GOLDEN_DIR = Path(__file__).parent / "golden"
+
+pytestmark = pytest.mark.skipif(
+    jax.default_backend() != "cpu",
+    reason="golden bits are pinned on the CPU backend")
+
+
+def _digest(arr) -> dict:
+    """Checked-in form of an array: shape + sha256 of the raw float32
+    bits + the first 16 values as hex (a human-greppable head when a
+    digest moves)."""
+    a = np.ascontiguousarray(np.asarray(arr, np.float32))
+    return {"shape": list(a.shape),
+            "sha256": hashlib.sha256(a.tobytes()).hexdigest(),
+            "head": a.ravel()[:16].tobytes().hex()}
+
+
+def _check_or_regen(name: str, payload: dict) -> None:
+    path = GOLDEN_DIR / f"{name}.json"
+    if os.environ.get("REPRO_REGEN_GOLDEN"):
+        GOLDEN_DIR.mkdir(exist_ok=True)
+        meta = {"jax": jax.__version__, "backend": jax.default_backend()}
+        path.write_text(json.dumps({"meta": meta, **payload},
+                                   indent=1, sort_keys=True) + "\n")
+        pytest.skip(f"regenerated {path.name}")
+    want = json.loads(path.read_text())
+    for key, got in payload.items():
+        assert want[key] == got, (
+            f"golden mismatch in {path.name}[{key}]: the pinned bits "
+            f"moved (fixture generated under jax {want['meta']['jax']}).  "
+            f"If the change is intentional, regenerate with "
+            f"REPRO_REGEN_GOLDEN=1 and commit the diff.")
+
+
+# --------------------------------------------------------- kernel contract
+
+def _kernel_operands(device=TAOX, seed=0):
+    cfg = CrossbarConfig(rows=16, cols=16, device=device, adc=AdcConfig())
+    keys = jax.random.split(jax.random.PRNGKey(seed), 3)
+    w = jax.random.normal(keys[0], (3, 40, 24)) / np.sqrt(40)
+    g, ws = jax.vmap(lambda wl: weights_to_conductance(wl, cfg))(w)
+    x = jax.random.normal(keys[1], (3, 6, 40))
+    d = jax.random.normal(keys[2], (3, 6, 24)) * 0.2
+    x_q, d_q = jax.vmap(lambda xl, dl: quantize_update_operands(
+        xl, dl, cfg))(x, d)
+    return cfg, g, x_q, d_q, -0.05 * ws
+
+
+@pytest.mark.parametrize("mode", ["outer", "pulse_train"])
+def test_golden_update_kernel_bits(mode):
+    """Same-seed conductances out of the fused update path, both update
+    modes, kernel-PRNG noise — the absolute anchor of the twin==chain
+    contract (the interpret/pallas paths are compared to the fused twin
+    by tests/test_update_fusion.py)."""
+    cfg, g, x_q, d_q, scale = _kernel_operands()
+    out = xbar_outer_update(g, x_q, d_q, scale, cfg, seed=jnp.uint32(1234),
+                            noise_mode="kernel", impl="fused",
+                            update_mode=mode)
+    _check_or_regen(f"update_kernel_{mode}", {"g_new": _digest(out)})
+
+
+# ----------------------------------------------------- train-step contract
+
+def _train_cfg():
+    return get_config("lm100m", smoke=True).replace(
+        dtype="float32", analog=True, analog_mode="device",
+        analog_device="taox", analog_rows=16, analog_cols=16,
+        analog_in_bits=8, analog_out_bits=8,
+        analog_carry=True, carry_period=2, analog_carry_base=4.0,
+        analog_update_mode="pulse_train")
+
+
+def _train_batch(cfg):
+    rng = np.random.default_rng(7)
+    return {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (2, 16)),
+                                  jnp.int32),
+            "labels": jnp.asarray(rng.integers(0, cfg.vocab, (2, 16)),
+                                  jnp.int32)}
+
+
+@pytest.mark.slow
+def test_golden_train_step_conductances_and_tokens():
+    """Two same-seed noisy carry+pulse-train train steps (one carry sweep
+    fires), then the full conductance stack of one container plus the
+    greedy tokens of the trained model.  This is the unsharded side of
+    the sharded==unsharded contract, pinned to absolute bits — the 2x4
+    mesh run of tests/test_sharded_analog.py is bit-identical to this by
+    construction, so one fixture anchors both."""
+    cfg = _train_cfg()
+    state = init_state(jax.random.PRNGKey(0), cfg)
+    step = make_analog_sgd_step(cfg, lr=0.05, impl="fused")
+    batch = _train_batch(cfg)
+    state, _ = step(state, batch, jax.random.PRNGKey(1))
+    state, _ = step(state, batch, jax.random.PRNGKey(2))
+    cont = state["params"]["layers"]["ffn"]["w_upgate"]
+    payload = {k: _digest(cont[k])
+               for k in ("g", "g_carry", "ref", "w_scale")}
+    logits, _, _, _ = M.forward(state["params"], batch, cfg)
+    toks = np.asarray(jnp.argmax(logits, axis=-1), np.int64)
+    payload["greedy_tokens"] = toks.ravel().tolist()
+    _check_or_regen("train_step_carry_pulse", payload)

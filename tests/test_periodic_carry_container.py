@@ -1,0 +1,264 @@
+"""Container-level periodic carry (paper §VI.B) at transformer scale.
+
+Every registered crossbar container can carry an optional second leaf,
+``g_carry`` — a carry crossbar one significance level *below* its primary.
+Training writes land there (base× larger conductance moves, so the carry
+cell swings through the linear middle of its window), the effective read
+composes ``g + (g_carry - ref) / base``, and every ``carry_period`` steps
+``AnalogTrainStep._carry_sweep`` folds the accumulated LSB value into the
+primary by an exact closed-loop transfer whose readout half is the ADC
+transfer of the fused read kernel.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import effective_g
+from repro.core.adc import adc_quantize
+from repro.core.crossbar import make_reference, weights_to_conductance
+from repro.core.periodic_carry import carry_fold
+from repro.core.tiled_analog import (crossbar_from_model, program_linear,
+                                     readout)
+from repro.models import model as M
+from repro.train.analog_lm import init_state, make_analog_sgd_step
+
+
+def _cfg(**kw):
+    base = dict(dtype="float32", analog=True, analog_mode="device",
+                analog_device="taox-nonoise", analog_rows=16,
+                analog_cols=16, analog_in_bits=8, analog_out_bits=8,
+                analog_carry=True, carry_period=2, analog_carry_base=4.0)
+    base.update(kw)
+    return get_config("lm100m", smoke=True).replace(**base)
+
+
+def _batch(cfg, b=2, s=16, seed=0):
+    rng = np.random.default_rng(seed)
+    return {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (b, s)),
+                                  jnp.int32),
+            "labels": jnp.asarray(rng.integers(0, cfg.vocab, (b, s)),
+                                  jnp.int32)}
+
+
+# --------------------------------------------------------- container plumbing
+
+def test_program_linear_carry_leaf_and_effective_read():
+    """``program_linear`` under ``cfg.carry`` adds a midpoint-initialised
+    carry leaf (a fresh buffer, zero effective contribution) and the
+    effective read composes the carry deviation at 1/base significance."""
+    cfg = crossbar_from_model(_cfg())
+    assert cfg.carry and cfg.carry_base == 4.0
+    key = jax.random.PRNGKey(0)
+    w = 0.1 * jax.random.normal(key, (24, 12))
+    p = program_linear(w, cfg)
+    assert "g_carry" in p
+    # init: carry == ref elementwise, but never the same buffer (donation)
+    np.testing.assert_array_equal(p["g_carry"], p["ref"])
+    assert p["g_carry"] is not p["ref"]
+    np.testing.assert_array_equal(effective_g(p, cfg), p["g"])
+    delta = 0.01 * jnp.ones_like(p["ref"])
+    p2 = {**p, "g_carry": p["g_carry"] + delta}
+    np.testing.assert_allclose(np.asarray(effective_g(p2, cfg)),
+                               np.asarray(p["g"] + delta / cfg.carry_base),
+                               rtol=1e-6)
+    # readout (the serial calibration read) sees the carry residual too
+    np.testing.assert_allclose(
+        np.asarray(readout(p2, cfg) - readout(p, cfg)),
+        np.asarray(delta / cfg.carry_base / p["w_scale"]),
+        rtol=1e-4, atol=1e-6)
+    # carry off -> no leaf
+    off = crossbar_from_model(_cfg(analog_carry=False))
+    assert "g_carry" not in program_linear(w, off)
+
+
+def test_registry_and_specs_carry_leaf():
+    from jax.sharding import PartitionSpec as P
+    from repro.core.analog_registry import ANALOG_LEAVES, leaf_layout
+    from repro.launch.sharding import analog_update_specs
+    assert "g_carry" in ANALOG_LEAVES
+    for kind_ndim in ((3, "layers"),):
+        pass
+    # carry shards identically to its primary for every consumer kind
+    from repro.core import analog_registry as reg
+    for kind in (reg.COLUMN_PARALLEL, reg.ROW_PARALLEL,
+                 reg.EXPERT_BATCHED):
+        ndim = 4 if kind == reg.EXPERT_BATCHED else 3
+        assert leaf_layout(kind, ndim, "g_carry", 16, 16) \
+            == leaf_layout(kind, ndim, "g", 16, 16)
+
+    class FakeMesh:
+        shape = {"data": 2, "model": 4}
+        axis_names = ("data", "model")
+    specs = analog_update_specs(("layers", "attn", "wqkv"), (2, 64, 256),
+                                _cfg(), FakeMesh())
+    assert specs["g_carry"] == specs["g"] == P(None, "data", "model")
+
+
+def test_carry_fold_conserves_effective_value():
+    """The closed-loop transfer is conservative by construction: source
+    loses t, destination gains exactly t/base — the stack's effective
+    value is unchanged to rounding (one float add per array), whatever
+    the clamp or the readout quantisation does."""
+    cfg = crossbar_from_model(_cfg())
+    key = jax.random.PRNGKey(1)
+    ref = make_reference((32, 16), cfg, key=None)
+    gc = ref + 0.8 * cfg.w_swing * jax.random.normal(key, ref.shape)
+    gc = jnp.clip(gc, cfg.device.gmin, cfg.device.gmax)
+    g = ref + 0.2 * cfg.w_swing * jax.random.normal(
+        jax.random.PRNGKey(2), ref.shape)
+    quant = lambda v: adc_quantize(v, cfg.w_swing, cfg.adc)
+    for q in (None, quant):
+        t, inc = carry_fold(gc, g, ref, cfg.carry_base, cfg, quantize=q)
+        # base * inc == t exactly (base 4 scaling is float-exact)
+        np.testing.assert_array_equal(np.asarray(inc * cfg.carry_base),
+                                      np.asarray(t))
+        eff0 = (g - ref) + (gc - ref) / cfg.carry_base
+        eff1 = (g + inc - ref) + (gc - t - ref) / cfg.carry_base
+        np.testing.assert_allclose(np.asarray(eff0), np.asarray(eff1),
+                                   rtol=0, atol=1e-6)
+        # destination never overflows its window
+        assert float(jnp.abs(g + inc - ref).max()) <= cfg.w_swing + 1e-6
+
+
+def test_carry_readout_matches_fused_read_identity_drive():
+    """The sweep's elementwise ADC readout is the fused read kernel's
+    transfer driven with unit rows: both quantise the carry deviation to
+    the same LSB grid, agreeing within one ADC LSB (the two paths
+    calibrate saturation independently)."""
+    from repro.kernels.xbar_vmm import xbar_fused_read_inline
+    cfg = crossbar_from_model(_cfg())
+    K = cfg.rows  # one row tile: the serial readout scans tile by tile
+    ref = make_reference((K, 16), cfg, key=None)
+    v = 0.3 * cfg.w_swing * jax.random.normal(jax.random.PRNGKey(0),
+                                              ref.shape)
+    g_carry = ref + v
+    elem = adc_quantize(g_carry - ref, cfg.w_swing, cfg.adc)
+    ident = jnp.eye(K, dtype=jnp.float32)
+    fused = xbar_fused_read_inline(ident, g_carry, ref, jnp.float32(1.0),
+                                   cfg, impl="jnp")
+    lsb = cfg.w_swing / cfg.adc.out_levels
+    assert float(jnp.abs(elem - fused).max()) <= lsb * (1 + 1e-6)
+    # and both are faithful readouts of the true deviation
+    assert float(jnp.abs(elem - v).max()) <= lsb
+    assert float(jnp.abs(fused - v).max()) <= lsb
+
+
+# ------------------------------------------------------------- training path
+
+def test_updates_route_to_carry_lsb():
+    """Between sweeps only the carry arrays move; the primary is written
+    exclusively by the periodic serial carry pass."""
+    cfg = _cfg(carry_period=100)  # never sweeps in this test
+    state = init_state(jax.random.PRNGKey(0), cfg)
+    # numpy snapshot: the jitted step donates the state buffers
+    c0 = {k: np.asarray(v) for k, v in
+          state["params"]["layers"]["ffn"]["w_upgate"].items()}
+    step = make_analog_sgd_step(cfg, lr=0.05, impl="fused")
+    batch = _batch(cfg)
+    state, _ = step(state, batch, jax.random.PRNGKey(1))
+    c1 = state["params"]["layers"]["ffn"]["w_upgate"]
+    np.testing.assert_array_equal(np.asarray(c0["g"]), np.asarray(c1["g"]))
+    assert float(jnp.abs(c1["g_carry"] - c0["g_carry"]).max()) > 0.0
+
+
+def test_carry_routed_update_matches_direct_effective_update():
+    """With an ideal (linear, noiseless) device the carry detour is
+    invisible: the base× write followed by the /base effective read equals
+    the direct write (base 4 scalings are float-exact), so the first-step
+    effective weights of carry and no-carry runs coincide."""
+    cfg_c = _cfg(analog_device="ideal", carry_period=100)
+    cfg_n = _cfg(analog_device="ideal", analog_carry=False)
+    xcfg_c = crossbar_from_model(cfg_c)
+    batch = _batch(cfg_c)
+    st_c = init_state(jax.random.PRNGKey(0), cfg_c)
+    st_n = init_state(jax.random.PRNGKey(0), cfg_n)
+    step_c = make_analog_sgd_step(cfg_c, lr=0.05, impl="fused")
+    step_n = make_analog_sgd_step(cfg_n, lr=0.05, impl="fused")
+    st_c, mc = step_c(st_c, batch, jax.random.PRNGKey(1))
+    st_n, mn = step_n(st_n, batch, jax.random.PRNGKey(1))
+    assert float(mc["loss"]) == float(mn["loss"])  # same pre-update read
+    cc = st_c["params"]["layers"]["ffn"]["w_upgate"]
+    cn = st_n["params"]["layers"]["ffn"]["w_upgate"]
+    np.testing.assert_allclose(np.asarray(effective_g(cc, xcfg_c)),
+                               np.asarray(cn["g"]), rtol=0, atol=1e-7)
+
+
+@pytest.mark.slow
+def test_carry_sweep_schedule_and_bit_conservation():
+    """carry_period=2: step 1 leaves the primary untouched, step 2 fires
+    the in-jit sweep (primary moves, carry drains), the jit still
+    compiles exactly once, and the sweep conserves every container's
+    effective conductances bit for bit."""
+    cfg = _cfg(analog_device="taox")  # noisy device
+    xcfg = crossbar_from_model(cfg)
+    state = init_state(jax.random.PRNGKey(0), cfg)
+    step = make_analog_sgd_step(cfg, lr=0.05, impl="fused")
+    batch = _batch(cfg)
+    # numpy snapshots: the jitted step donates the state buffers
+    snap = lambda s: {k: np.asarray(v) for k, v in
+                      s["params"]["layers"]["ffn"]["w_upgate"].items()}
+    g_init = snap(state)["g"]
+    state, _ = step(state, batch, jax.random.PRNGKey(1))
+    pre = snap(state)
+    np.testing.assert_array_equal(pre["g"], g_init)
+    eff_pre = np.asarray(effective_g(
+        {k: jnp.asarray(v) for k, v in pre.items()}, xcfg))
+    state, _ = step(state, batch, jax.random.PRNGKey(2))
+    post = snap(state)
+    assert float(np.abs(post["g"] - g_init).max()) > 0.0  # sweep fired
+    carry_dev_post = float(np.abs(post["g_carry"] - post["ref"]).max())
+    # After the sweep the carry holds at most the ADC quantisation
+    # residual (half an LSB of the readout) plus whatever step 2 wrote
+    # before the fold; it must not keep accumulating across periods.
+    lsb = xcfg.w_swing / xcfg.adc.out_levels
+    write_mag = float(np.abs(pre["g_carry"] - pre["ref"]).max())
+    assert carry_dev_post <= lsb + write_mag
+    assert step.compiles == 1
+    # conservation: replay the sweep on the pre-sweep stack with the
+    # step's own sweep fn — the fold moves value between significance
+    # levels without changing the effective conductances (to rounding).
+    swept = step._carry_sweep(
+        {k: jnp.asarray(v) for k, v in pre.items()})
+    eff_swept = np.asarray(effective_g(swept, xcfg))
+    np.testing.assert_allclose(eff_swept, eff_pre, rtol=0, atol=1e-6)
+
+
+@pytest.mark.slow
+def test_carry_training_compiles_once_and_learns():
+    cfg = _cfg(analog_device="taox")
+    state = init_state(jax.random.PRNGKey(0), cfg)
+    step = make_analog_sgd_step(cfg, lr=0.1, impl="fused")
+    batch = _batch(cfg, b=4)
+    losses = []
+    for i in range(15):
+        state, out = step(state, batch, jax.random.PRNGKey(100 + i))
+        losses.append(float(out["loss"]))
+    assert step.compiles == 1
+    assert np.mean(losses[-5:]) < losses[0]
+
+
+@pytest.mark.slow
+def test_pulse_train_mode_trains_and_differs_from_outer():
+    """``analog_update_mode="pulse_train"`` threads through the config ->
+    CrossbarConfig -> kernel dispatch, trains (loss falls, one compile),
+    and produces genuinely different conductances from the aggregate
+    outer mode under the same seeds."""
+    runs = {}
+    for mode in ("outer", "pulse_train"):
+        cfg = _cfg(analog_carry=False, analog_device="taox",
+                   analog_update_mode=mode)
+        assert crossbar_from_model(cfg).update_mode == mode
+        state = init_state(jax.random.PRNGKey(0), cfg)
+        step = make_analog_sgd_step(cfg, lr=0.1, impl="fused")
+        batch = _batch(cfg, b=4)
+        losses = []
+        for i in range(15):
+            state, out = step(state, batch, jax.random.PRNGKey(200 + i))
+            losses.append(float(out["loss"]))
+        assert step.compiles == 1
+        assert np.mean(losses[-5:]) < losses[0]
+        runs[mode] = np.asarray(
+            state["params"]["layers"]["ffn"]["w_upgate"]["g"])
+    assert float(np.abs(runs["outer"] - runs["pulse_train"]).max()) > 0.0

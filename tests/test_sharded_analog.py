@@ -13,6 +13,7 @@ from pathlib import Path
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.configs import get_config
 from repro.core.tiled_analog import crossbar_from_model
@@ -164,7 +165,7 @@ _PARITY_SCRIPT = """
     cfg = get_config(%(arch)r, smoke=True).replace(
         dtype="float32", analog=True, analog_mode="device",
         analog_device="taox", analog_rows=%(rows)r, analog_cols=%(rows)r,
-        analog_in_bits=8, analog_out_bits=8)
+        analog_in_bits=8, analog_out_bits=8, **%(extra)r)
     rng = np.random.default_rng(0)
     batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (4, 16)),
                                    jnp.int32),
@@ -200,9 +201,10 @@ _PARITY_SCRIPT = """
 """
 
 
-def _parity(arch, shape, rows, leaf):
+def _parity(arch, shape, rows, leaf, extra=None):
     return textwrap.dedent(_PARITY_SCRIPT % {
-        "arch": arch, "shape": shape, "rows": rows, "leaf": leaf})
+        "arch": arch, "shape": shape, "rows": rows, "leaf": leaf,
+        "extra": dict(extra or {})})
 
 
 def test_sharded_step_bit_identical_2x4():
@@ -230,4 +232,30 @@ def test_sharded_step_bit_identical_moe_2x4():
     conductances to 1 device, probed on an expert container."""
     r = _run(_parity("llama4-scout-17b-a16e", (2, 4), 16,
                      '["layers"]["moe"]["experts"]["w_up"]'))
+    assert "PARITY_OK" in r.stdout, r.stdout + r.stderr
+
+
+@pytest.mark.slow
+def test_sharded_step_bit_identical_carry_2x4():
+    """Acceptance: the same-seed sharded==unsharded bit-parity contract
+    extends over periodic carry.  4 noisy steps with carry_period=2 fire
+    two serial carry sweeps inside the donated step on a 2x4 mesh; every
+    leaf — primary conductances AND the carry LSB arrays (sharded
+    identically, folded shard-locally) — stays bit-identical to the
+    single-device run, and the jit still compiles exactly once."""
+    r = _run(_parity("lm100m", (2, 4), 16,
+                     '["layers"]["ffn"]["w_upgate"]',
+                     extra=dict(analog_carry=True, carry_period=2,
+                                analog_carry_base=4.0)))
+    assert "PARITY_OK" in r.stdout, r.stdout + r.stderr
+
+
+@pytest.mark.slow
+def test_sharded_step_bit_identical_pulse_train_2x4():
+    """Pulse-train updates keep the contract too: the sign-decomposed
+    4-phase write uses the same shard-invariant counter-PRNG streams, so
+    integer event counts and write noise reproduce on any mesh."""
+    r = _run(_parity("lm100m", (2, 4), 16,
+                     '["layers"]["ffn"]["w_upgate"]',
+                     extra=dict(analog_update_mode="pulse_train")))
     assert "PARITY_OK" in r.stdout, r.stdout + r.stderr

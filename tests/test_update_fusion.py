@@ -137,6 +137,109 @@ def test_in_kernel_noise_statistics_match_device_model():
     assert abs(zed.std() - 1.0) < 0.02
 
 
+# ------------------------------------------------------- pulse-train writes
+
+def _pulse_np(g, x_q, d_q, scale, dev, noise=None):
+    """Pure-numpy twin of the pulse-train epilogue: sign-decomposed 4-phase
+    outer product -> integer SET/RESET event counts -> per-train device
+    response.  Kept deliberately independent of the jax implementation."""
+    g = np.asarray(g, np.float32)
+    x = np.asarray(x_q, np.float32)
+    d = np.asarray(d_q, np.float32)
+    m = np.asarray(scale, np.float32)[:, None, None]
+    acc = np.einsum("lbk,lbn->lkn", x, d)
+    a_abs = np.einsum("lbk,lbn->lkn", np.abs(x), np.abs(d))
+    s_mag = 0.5 * (a_abs * np.abs(m) + acc * m)
+    r_mag = 0.5 * (a_abs * np.abs(m) - acc * m)
+    n_set = np.round(np.maximum(s_mag, 0.0) / dev.pulse_dg)
+    n_reset = np.round(np.maximum(r_mag, 0.0) / dev.pulse_dg)
+    if dev.kind in ("ideal", "linearized"):
+        up = np.ones_like(g)
+        dn = np.ones_like(g)
+    else:
+        xn = (g - dev.gmin) / (dev.gmax - dev.gmin)
+
+        def factor(xx, nu):
+            if nu < 1e-6:
+                return 2.0 * (1.0 - xx)
+            e = np.exp(-nu)
+            mid = (np.exp(-0.5 * nu) - e) / (1.0 - e)
+            return (np.exp(-nu * xx) - e) / (1.0 - e) / mid
+
+        up = dev.gain_set * factor(xn, dev.nu_set)
+        dn = dev.gain_reset * factor(1.0 - xn, dev.nu_reset)
+    dg = dev.pulse_dg * (n_set * up - n_reset * dn)
+    if dev.write_noise > 0.0 and noise is not None:
+        sigma = dev.write_noise * dev.pulse_dg * np.sqrt(n_set + n_reset)
+        dg = dg + sigma * np.asarray(noise, np.float32)
+    return np.minimum(np.maximum(g + dg, dev.gmin), dev.gmax)
+
+
+@pytest.mark.parametrize("impl", ["fused", "interpret"])
+def test_pulse_train_matches_numpy_twin(impl):
+    """Noiseless nonlinear device: both execution paths of the pulse-train
+    mode must reproduce the independent numpy reference."""
+    cfg, g, x_q, d_q, scale = _stacked()
+    out = xbar_outer_update(g, x_q, d_q, scale, cfg, impl=impl,
+                            update_mode="pulse_train")
+    ref = _pulse_np(g, x_q, d_q, scale, TAOX_NN)
+    np.testing.assert_allclose(np.asarray(out), ref, rtol=1e-5, atol=1e-6)
+
+
+def test_pulse_train_host_noise_matches_numpy_twin():
+    """Host-field noise: sigma scales with the *total* fired event count
+    sqrt(n_set + n_reset), which the numpy twin recomputes from scratch."""
+    cfg, g, x_q, d_q, scale = _stacked(device=TAOX)
+    noise = jax.random.normal(jax.random.PRNGKey(11), g.shape,
+                              dtype=jnp.float32)
+    out = xbar_outer_update(g, x_q, d_q, scale, cfg, noise=noise,
+                            noise_mode="host", impl="fused",
+                            update_mode="pulse_train")
+    ref = _pulse_np(g, x_q, d_q, scale, TAOX, noise=np.asarray(noise))
+    np.testing.assert_allclose(np.asarray(out), ref, rtol=1e-5, atol=1e-6)
+
+
+def test_pulse_train_kernel_noise_fused_matches_interpret():
+    """The counter PRNG stays bit-identical across backends in pulse-train
+    mode too — the noise field depends only on (seed, layer, tile, cell)."""
+    cfg, g, x_q, d_q, scale = _stacked(device=TAOX)
+    seed = jnp.uint32(77)
+    a = xbar_outer_update(g, x_q, d_q, scale, cfg, seed=seed,
+                          noise_mode="kernel", impl="fused",
+                          update_mode="pulse_train")
+    b = xbar_outer_update(g, x_q, d_q, scale, cfg, seed=seed,
+                          noise_mode="kernel", impl="interpret",
+                          update_mode="pulse_train")
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_pulse_train_quantisation_bound_and_outer_equivalence():
+    """Ideal noiseless device, mid-window conductances: the pulse-train
+    write equals the requested update m*acc up to one pulse_dg of count
+    quantisation (each rail rounds to within half an event)."""
+    from repro.core.device import IDEAL
+    cfg, g, x_q, d_q, scale = _stacked(device=IDEAL)
+    g = 0.5 * jnp.ones_like(g)          # mid-window: no rail clipping
+    scale = 0.01 * jnp.ones_like(scale)  # small: stay inside the window
+    out = xbar_outer_update(g, x_q, d_q, scale, cfg, impl="fused",
+                            update_mode="pulse_train")
+    req = scale[:, None, None] * jnp.einsum("lbk,lbn->lkn", x_q, d_q)
+    err = np.abs(np.asarray(out - g - req))
+    assert float(err.max()) <= IDEAL.pulse_dg + 1e-6
+
+
+def test_pulse_train_differs_from_outer_on_nonlinear_device():
+    """On a nonlinear device the per-train response is not the aggregate
+    response: the two update modes must not coincide."""
+    cfg, g, x_q, d_q, scale = _stacked()
+    a = xbar_outer_update(g, x_q, d_q, scale, cfg, impl="fused",
+                          update_mode="outer")
+    b = xbar_outer_update(g, x_q, d_q, scale, cfg, impl="fused",
+                          update_mode="pulse_train")
+    assert float(jnp.max(jnp.abs(a - b))) > 1e-4
+
+
 # --------------------------------------------------- hoisted symbolic tapes
 
 def test_split_merge_roundtrip():
