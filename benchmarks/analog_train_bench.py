@@ -56,6 +56,8 @@ def _pre_init_mesh_flag(argv=None):
             mesh = argv[i + 1]
         elif a.startswith("--mesh="):
             mesh = a.split("=", 1)[1]
+        elif a == "--mesh-sweep":
+            mesh = "1x8"  # largest sweep shape; sets the device count
         if not mesh:
             continue
         n = 1
@@ -265,6 +267,145 @@ def run_nonideality_curve(args, mesh=None):
     }, rows
 
 
+def run_mesh_point(cfg, stream, args, mesh, read_mode, steps):
+    """One mesh-sweep point: AOT-compile the step once, read the compiled
+    module's collective byte volume, then time warm steps with the same
+    executable (so the HLO measured is exactly the HLO run)."""
+    from repro.launch.hlo_analysis import (collective_byte_volume,
+                                           count_collectives)
+    state = init_state(jax.random.PRNGKey(args.seed), cfg)
+    step = make_analog_sgd_step(cfg, lr=args.lr, mesh=mesh,
+                                read_mode=read_mode)
+    state = step.shard_state(state)
+    x, y = batch_tokens(stream, args.batch, args.seq, 0)
+    batch = {"tokens": jnp.asarray(x), "labels": jnp.asarray(y)}
+    key = jax.random.PRNGKey(args.seed + 1)
+    if mesh is not None and step._step is None:
+        step._build_sharded_step(state, batch)
+    compiled = step._step.lower(state, batch, key).compile()
+    vol = collective_byte_volume(compiled.as_text())
+    counts = count_collectives(compiled.as_text())
+    walls, loss = [], float("nan")
+    for i in range(steps):
+        x, y = batch_tokens(stream, args.batch, args.seq, i)
+        key, ks = jax.random.split(key)
+        b = {"tokens": jnp.asarray(x), "labels": jnp.asarray(y)}
+        t0 = time.perf_counter()
+        state, mets = compiled(state, b, ks)
+        loss = float(mets["loss"])  # sync point
+        walls.append(time.perf_counter() - t0)
+    warm = sorted(walls[1:]) or walls
+    return {
+        "median_step_us": warm[len(warm) // 2] * 1e6,
+        "final_loss": loss,
+        "gather_bytes_per_step": vol["total"],
+        "collective_bytes_by_kind": {k: v for k, v in vol.items()
+                                     if k != "total" and v},
+        "collectives_per_step": counts["total"],
+    }
+
+
+MESH_SWEEP_SHAPES = ((1, 1), (2, 2), (2, 4), (1, 8))
+
+
+def run_mesh_sweep(args):
+    """Per-mesh-shape scaling rows for the exact-mode sharded step.
+
+    For every shape in ``MESH_SWEEP_SHAPES`` the first arch trains a few
+    warm steps with the default shard-local (manual-collective) read and
+    records wall time plus ``gather_bytes_per_step`` — the compiled
+    module's loop-multiplied collective byte volume
+    (``launch.hlo_analysis.collective_byte_volume``).  Two A/B points
+    quantify what the shard-local read buys:
+
+      * the 2x4 point re-runs with the legacy gather-then-replay read
+        (``read_mode="gather"``); the recorded ``byte_drop`` is the
+        acceptance metric (parameter gathers vs activation partial sums,
+        expected well beyond 4x),
+      * the MoE arch repeats the pair at 2x4; its EP dispatch read must
+        cut the gather volume at least ``n_experts``-fold.
+
+    Emits one ``analog_train/mesh_DxM`` gate row per shape (pinned in CI
+    via ``check_bench --require analog_train/mesh``).
+
+    The sweep runs at its own small token batch
+    (``--mesh-sweep-batch/--mesh-sweep-seq``, default 1x4): shard-local
+    traffic is activation-sized (it scales with tokens) while gather-mode
+    traffic is parameter-sized (it does not), so a token batch comparable
+    to the smoke model's conductance blocks would blur exactly the scale
+    separation the byte-drop metric exists to measure — the same
+    reasoning behind the RA107 audit geometry.
+    """
+    from repro.launch.mesh import make_mesh
+    arch = (args.configs or args.arch).split(",")[0]
+    args = argparse.Namespace(**{**vars(args),
+                                 "batch": args.mesh_sweep_batch,
+                                 "seq": args.mesh_sweep_seq})
+    cfg = bench_config(args, arch)
+    if not args.tile:
+        # The sweep needs the projections to actually split: 16x16
+        # physical tiles, mirroring the CI mesh legs.
+        cfg = cfg.replace(analog_rows=16, analog_cols=16)
+    steps = args.mesh_sweep_steps
+    stream = make_token_stream(
+        max(200_000, steps * args.batch * (args.seq + 1) + 1),
+        cfg.vocab, seed=args.seed)
+    tok_step = args.batch * args.seq
+    gmacs = sim_gmacs_per_step(cfg, tok_step)
+    points, rows = [], []
+    for d, m in MESH_SWEEP_SHAPES:
+        mesh = make_mesh((d, m), ("data", "model")) if d * m > 1 else None
+        pt = run_mesh_point(cfg, stream, args, mesh, "local", steps)
+        pt = {"mesh": f"{d}x{m}", "devices": d * m, **pt}
+        points.append(pt)
+        rows.append({"name": f"analog_train/mesh_{d}x{m}",
+                     "us_per_call": pt["median_step_us"],
+                     "sim_gmacs": gmacs})
+        print(f"mesh {d}x{m}: {pt['median_step_us']:.0f}us/step, "
+              f"{pt['gather_bytes_per_step']} collective B/step")
+    ref = run_mesh_point(cfg, stream, args, make_mesh((2, 4),
+                                                      ("data", "model")),
+                         "gather", steps)
+    local_2x4 = next(p for p in points if p["mesh"] == "2x4")
+    drop = ref["gather_bytes_per_step"] \
+        / max(local_2x4["gather_bytes_per_step"], 1)
+    print(f"mesh 2x4 [{arch}] byte drop local vs gather: "
+          f"{ref['gather_bytes_per_step']} -> "
+          f"{local_2x4['gather_bytes_per_step']} B/step ({drop:.1f}x)")
+
+    # MoE EP: each shard reads only its own experts' tiles of the
+    # replicated dispatch buffer; volume must drop >= n_experts-fold.
+    moe_arch = "llama4-scout-17b-a16e"
+    moe_cfg = bench_config(args, moe_arch)
+    if not args.tile:
+        moe_cfg = moe_cfg.replace(analog_rows=16, analog_cols=16)
+    moe_stream = make_token_stream(
+        max(200_000, steps * args.batch * (args.seq + 1) + 1),
+        moe_cfg.vocab, seed=args.seed)
+    moe_mesh = make_mesh((2, 4), ("data", "model"))
+    moe = {mode: run_mesh_point(moe_cfg, moe_stream, args, moe_mesh,
+                                mode, steps)
+           for mode in ("local", "gather")}
+    moe_drop = moe["gather"]["gather_bytes_per_step"] \
+        / max(moe["local"]["gather_bytes_per_step"], 1)
+    print(f"mesh 2x4 [{moe_arch}] EP byte drop: "
+          f"{moe['gather']['gather_bytes_per_step']} -> "
+          f"{moe['local']['gather_bytes_per_step']} B/step "
+          f"({moe_drop:.1f}x, {moe_cfg.n_experts} experts)")
+    return {
+        "arch": cfg.name, "steps": steps,
+        "batch": args.batch, "seq": args.seq,
+        "tile": cfg.analog_rows,
+        "points": points,
+        "gather_mode_2x4": ref,
+        "byte_drop_2x4": drop,
+        "moe_ep": {"arch": moe_cfg.name,
+                   "n_experts": moe_cfg.n_experts,
+                   "local": moe["local"], "gather": moe["gather"],
+                   "byte_drop": moe_drop},
+    }, rows
+
+
 def thin_curve(curve, cap=100):
     """Subsample a per-step loss curve for the JSON artifact (first and
     last point always kept).  At trajectory step counts the full curve is
@@ -333,6 +474,22 @@ def main(argv=None):
     ap.add_argument("--carry-base", type=float, default=4.0,
                     help="significance ratio between the primary and "
                          "the carry LSB array for the --curve variants")
+    ap.add_argument("--mesh-sweep", action=argparse.BooleanOptionalAction,
+                    default=False,
+                    help="also run the per-mesh-shape scaling sweep "
+                         "(1x1/2x2/2x4/1x8 shard-local read + 2x4 "
+                         "gather-mode and MoE EP A/B byte-drop points); "
+                         "emits 'mesh_sweep' plus analog_train/mesh_DxM "
+                         "gate rows")
+    ap.add_argument("--mesh-sweep-steps", type=int, default=6,
+                    help="warm steps per --mesh-sweep point (kept small: "
+                         "the sweep compiles 10 step variants)")
+    ap.add_argument("--mesh-sweep-batch", type=int, default=1,
+                    help="batch for the --mesh-sweep points (small, so "
+                         "activation-sized partial sums stay well below "
+                         "the smoke model's conductance blocks)")
+    ap.add_argument("--mesh-sweep-seq", type=int, default=4,
+                    help="sequence length for the --mesh-sweep points")
     ap.add_argument("--configs", default=None,
                     help="comma-separated arch list to benchmark in one "
                          "run (overrides --arch); per-arch results land "
@@ -423,6 +580,15 @@ def main(argv=None):
               f"{closed if closed is not None else float('nan'):.0%} of "
               f"the {top['gap_vs_numeric']:+.4f} analog/numeric gap")
 
+    sweep = None
+    if args.mesh_sweep:
+        sweep, sweep_rows = run_mesh_sweep(args)
+        rows.extend(sweep_rows)
+        print(f"mesh sweep [{sweep['arch']}]: 2x4 collective bytes drop "
+              f"{sweep['byte_drop_2x4']:.1f}x vs gather mode; MoE EP "
+              f"{sweep['moe_ep']['byte_drop']:.1f}x "
+              f"({sweep['moe_ep']['n_experts']} experts)")
+
     # legacy single-run layout at the top level (first arch) + runs/rows
     result = {
         "smoke": args.smoke, "device": args.device,
@@ -434,6 +600,7 @@ def main(argv=None):
         "runs": runs,
         "rows": rows,
         **({"nonideality_curve": curve} if curve else {}),
+        **({"mesh_sweep": sweep} if sweep else {}),
         # Aggregate analog/numeric overhead across every benchmarked
         # family.  wall_ratio needs enough steps to amortise the compile
         # (~98% of a 10-step run is XLA, not training — see the CI

@@ -43,7 +43,7 @@ from repro.core.xbar_ops import (mvm, outer_update, quantize_update_operands,
                                  vmm)
 from repro.kernels import ops as kops
 from repro.kernels.xbar_update import xbar_outer_update
-from repro.launch.hlo_analysis import count_collectives
+from repro.launch.hlo_analysis import collective_byte_volume, count_collectives
 
 # benchmarks/ is not a package; when run as a script sys.path[0] is this
 # directory, so the sibling module imports flat.
@@ -81,6 +81,7 @@ def main(argv=None):
 
     rows = []
     collectives = {}
+    collective_bytes = {}
     print("name,us_per_call,derived")
     key = jax.random.PRNGKey(0)
     for k, n, b in shapes:
@@ -167,14 +168,17 @@ def main(argv=None):
                                   ("vmm_fused", f_vmm_f, (x,)),
                                   ("outer_update_batched", f_bat,
                                    (gl, xl, dl))):
-            counts = count_collectives(
-                cfn.lower(*cargs).compile().as_text())
-            collectives[f"micro/{cname}_{k}x{n}_b{b}"] = counts
+            hlo = cfn.lower(*cargs).compile().as_text()
+            collectives[f"micro/{cname}_{k}x{n}_b{b}"] = \
+                count_collectives(hlo)
+            collective_bytes[f"micro/{cname}_{k}x{n}_b{b}"] = \
+                collective_byte_volume(hlo)
 
     if args.out:
         with open(args.out, "w") as f:
             json.dump({"smoke": args.smoke, "rows": rows,
-                       "collectives": collectives}, f, indent=1)
+                       "collectives": collectives,
+                       "collective_bytes": collective_bytes}, f, indent=1)
         print(f"wrote {args.out}")
     return rows
 

@@ -32,8 +32,9 @@ RULES: Dict[str, str] = {
              "serve program (weak-type / x64 promotion leak)",
     "RA102": "tape leaves never share a differentiated subtree with "
              "g/ref/w_scale (the symbolic-zero hoist contract)",
-    "RA103": "no collective inside an exact-mode shard_map body except "
-             "the whitelisted conductance all-gather",
+    "RA103": "no collective inside an exact-mode shard_map body; ordered "
+             "partial-sum/output combines are admitted only via inline "
+             "justification (a full-conductance all-gather is a finding)",
     "RA104": "jitted step entrypoints actually donate their state "
              "buffers (input/output aliasing present in the lowering)",
     "RA105": "clip/round in the ADC sim chain stay primitive-level "
@@ -42,6 +43,10 @@ RULES: Dict[str, str] = {
     "RA106": "compiled sharded exact-mode modules contain no "
              "order-sensitive collective (all-to-all / reduce-scatter / "
              "collective-permute)",
+    "RA107": "the compiled exact-mode sharded step moves no "
+             "parameter-sized collective: every cross-shard payload stays "
+             "below the smallest sharded conductance block (partial sums "
+             "scale with activations, conductances never move)",
     # Layer 2 — Pallas grid safety (concrete index-map evaluation)
     "RA201": "output-block coverage over the full grid is complete and "
              "race-free (revisits of an output block are consecutive)",

@@ -15,12 +15,15 @@ RA102  ``split_tapes`` containment: the differentiated tree holds tape
        symbolic-zero contract — a conductance leaf in the diff tree
        re-enters autodiff and the grads tree silently grows rank-2
        gradients the update path would shadow).
-RA103  collectives: the exact-mode shard_map body may contain only the
-       whitelisted conductance ``all_gather`` (arithmetic-free); the
-       unsharded body and the rank-k write bodies may contain none.
-       Findings carry the repro source line, so legitimate exceptions
-       (e.g. the order-exact 0/1 rail-metric psum) are allowlisted
-       inline where they happen.
+RA103  collectives: the exact-mode shard_map body may contain no
+       collective at all by default — the manual-collective read keeps
+       conductances shard-local, so a bare ``all_gather`` in the body is
+       now a finding (the legacy gather-then-replay read moved whole
+       containers through exactly that shape).  Findings carry the repro
+       source line, so the legitimate exchanges — the ordered partial-sum
+       /output combine (``shardctx.combine_partials_exact``) and the
+       order-exact 0/1 rail-metric psum — are allowlisted inline where
+       they happen, each with its bit-exactness justification.
 RA104  donation: the lowered step/decode entrypoints must alias their
        state/cache buffers (``tf.aliasing_output`` / buffer-donor
        markers in the lowering) — otherwise peak memory doubles.
@@ -32,6 +35,13 @@ RA106  the *compiled* sharded module contains no order-sensitive
        counted via ``launch.hlo_analysis.count_collectives``; XLA is
        free to rewrite gathers, and a rewrite into a reduce-scatter
        pattern would reassociate the reduction order.
+RA107  the *compiled* exact-mode train step moves no parameter-sized
+       collective: every collective instance's operand must stay below
+       the smallest sharded conductance block
+       (``launch.hlo_analysis.collective_payloads``).  This is the
+       compiled-HLO teeth behind the shard-local read — RA103 polices
+       the traced program, but only the compiled module proves XLA did
+       not reintroduce a full-container gather.
 """
 from __future__ import annotations
 
@@ -47,8 +57,13 @@ COLLECTIVE_PRIMS = {
     "pgather", "psum_invariant",
 }
 
-#: The one collective the exact-mode step body is allowed to contain.
-EXACT_MODE_WHITELIST = {"all_gather"}
+#: Collectives the exact-mode step body may contain without an inline
+#: justification: none.  The shard-local read keeps conductances in
+#: place; every remaining exchange (the ordered partial-sum combine, the
+#: rail-metric psum) must carry an ``# audit: allow RA103 -- ...``
+#: comment at its source line, so each collective in the body is either
+#: a finding or an explicitly justified exception.
+EXACT_MODE_WHITELIST: set = set()
 
 #: RA105 budgets for the analog train step at the smoke geometry.
 #: Measured after the read fusion: 0 pjit-wrapped clip/round, ~1.53k
@@ -471,6 +486,66 @@ def _audit_compiled_update(fn, args, mesh, entry: str) -> List[Finding]:
     return check_compiled_collectives(text, entry)
 
 
+def check_parameter_sized_collectives(text: str, min_param_bytes: int,
+                                      entry: str) -> List[Finding]:
+    """RA107 on one compiled HLO module's text: no collective instance
+    may carry an operand at (or beyond) the smallest sharded conductance
+    block — that is the signature of a full-container gather.  Partial
+    sums and output combines scale with the token batch and sit well
+    below the threshold."""
+    from repro.launch.hlo_analysis import collective_payloads
+
+    findings: List[Finding] = []
+    for kind, nbytes in collective_payloads(text):
+        if nbytes >= min_param_bytes:
+            findings.append(Finding(
+                "RA107", f"compiled exact-mode step moves a "
+                f"parameter-sized collective: {kind} with {nbytes}-byte "
+                f"operand (smallest sharded conductance block: "
+                f"{min_param_bytes} bytes)", entry=entry))
+    return findings
+
+
+def _audit_compiled_sharded_step(arch: str) -> List[Finding]:
+    """RA107: compile the exact-mode sharded step on a 2x2 mesh and
+    threshold every collective instance against the smallest sharded
+    conductance block.  A tiny token batch (1x4) keeps the compile cheap
+    AND separates the scales: activation-sized combines land orders of
+    magnitude under the parameter blocks, so the threshold has real
+    margin instead of riding the smoke-shape coincidence."""
+    import numpy as np
+    from repro.train.analog_lm import AnalogTrainStep
+
+    mesh = _mesh_or_none()
+    if mesh is None:
+        return []
+    entry = f"train_step[{arch},exact,2x2,compiled]"
+    cfg = _analog_cfg(arch)
+    step = AnalogTrainStep(cfg, lr=1e-3, mesh=mesh)
+    state = _abstract_state(cfg)
+    batch = _train_batch(cfg, batch=1, seq=4)
+    step._build_sharded_step(state, batch)
+    text = step._step.lower(state, batch,
+                            _key_struct()).compile().as_text()
+
+    def _names(e):
+        return () if e is None else (e if isinstance(e, tuple) else (e,))
+
+    min_block = None
+    for _path, (specs, gshape) in step._cspecs.items():
+        shards = 1
+        for e in specs["g"]:
+            for a in _names(e):
+                shards *= int(mesh.shape[a])
+        if shards == 1:
+            continue  # fully replicated: reads exactly as on one device
+        blk = int(np.prod(gshape)) * 4 // shards
+        min_block = blk if min_block is None else min(min_block, blk)
+    if min_block is None:
+        return []  # nothing sharded at this geometry: nothing to move
+    return check_parameter_sized_collectives(text, min_block, entry)
+
+
 def compiled_step_collectives(arch: str = _SMOKE_ARCH
                               ) -> Optional[Dict[str, int]]:
     """Collective counts of the compiled exact-mode train step — surfaced
@@ -512,4 +587,10 @@ def audit_jaxpr(arch: str = _SMOKE_ARCH) -> List[Finding]:
         findings.append(Finding(
             "RA106", f"tracing failed: {type(e).__name__}: {e}",
             entry="xbar_sharded_update"))
+    try:
+        findings += _audit_compiled_sharded_step(arch)
+    except Exception as e:
+        findings.append(Finding(
+            "RA107", f"compile failed: {type(e).__name__}: {e}",
+            entry=f"train_step[{arch},exact,2x2,compiled]"))
     return findings

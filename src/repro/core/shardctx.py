@@ -14,18 +14,23 @@ The sharded analog step is required to produce *bit-identical* conductances
 to the single-device step.  Every floating-point reduction therefore either
 (a) runs over unsharded dims only (the within-tile analog integration, the
 batch/token outer-product contraction, all loss/metric math over replicated
-activations), or (b) is preceded by :func:`replicate_for_exact_reduce`,
-which all-gathers the per-tile partial sums — an exact, arithmetic-free
-collective — so the reduction itself executes replicated, over the full
-axis, in the same order as on one device.  No partial-sum + all-reduce
+activations), or (b) gathers its operands into single-device order before
+reducing: the exact-mode manual-collective read uses
+:func:`combine_partials_exact` (an ordered ``all_gather`` of the small
+per-tile digital ADC accumulators), and the GSPMD (``exact=False``) path
+uses :func:`replicate_for_exact_reduce`.  Either way the only cross-device
+traffic is an arithmetic-free gather; the reduction then executes over the
+full axis, in the same order as on one device.  No partial-sum + all-reduce
 (whose association depends on the mesh) is ever emitted on the analog path.
 """
 from __future__ import annotations
 
+import dataclasses
 from contextlib import contextmanager as _contextmanager
 from typing import Optional, Tuple
 
 import jax
+import jax.numpy as jnp
 
 _CTX: dict = {"mesh": None, "dp": None, "tp": None}
 
@@ -69,6 +74,19 @@ def suspended_shard_context():
 def replicate_for_exact_reduce(x: jax.Array) -> jax.Array:
     """Constrain ``x`` to full replication before a cross-shard reduction.
 
+    .. deprecated::
+        This GSPMD sharding *hint* is superseded on the exact-mode path by
+        the manual-collective read (:class:`ShardMeta` +
+        :func:`combine_partials_exact`), which expresses the same ordered
+        partial-sum exchange as explicit ``shard_map`` collectives — so the
+        compiler can never trade it for a mesh-shape-dependent all-reduce,
+        and the moved bytes are the small digital accumulators instead of
+        whatever layout GSPMD materialises.  It remains the pin for the
+        ``exact=False`` GSPMD read path, whose callers accept ulp drift;
+        new exact-mode code should thread a ``ShardMeta`` and call
+        :func:`combine_partials_exact` instead.  Migration: see
+        ``docs/sharding.md`` ("The bit-exact contract").
+
     A reduction over a sharded axis lowers to partial sums + an all-reduce
     whose association depends on the mesh shape, so its float result can
     differ from the single-device reduction in the last bits.  Forcing the
@@ -81,3 +99,81 @@ def replicate_for_exact_reduce(x: jax.Array) -> jax.Array:
         return x
     from jax.sharding import NamedSharding, PartitionSpec as P
     return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P()))
+
+
+# --------------------------------------------------------------------------
+# Manual-collective exact mode: static shard metadata + ordered combinators
+# --------------------------------------------------------------------------
+
+@jax.tree_util.register_static
+@dataclasses.dataclass(frozen=True)
+class ShardMeta:
+    """Static description of how one analog container is tiled over a mesh.
+
+    Stored under the ``"tp_meta"`` key of a container dict by the exact-mode
+    train step (``train/analog_lm._annotate_containers``).  Registered
+    static, so it lives in the *treedef*: it survives ``lax.scan`` slicing
+    of the parameter stack and ``custom_vjp`` nondiff argument hashing, and
+    a scan-sliced container still reports the container's global geometry.
+
+    All fields are resolved against the *trailing* dims of whatever ``g``
+    view reaches the read: the scan strips leading (never-sharded) layer
+    dims, so ``shape[-g.ndim:]`` is the global shape of the current view,
+    ``row``/``col`` name the mesh axes sharding dims ``-2``/``-1``, and
+    ``lead`` (aligned right) names the axes sharding any remaining lead
+    dims (the MoE expert dim).  ``axis_sizes`` carries the mesh axis sizes
+    so shard coordinates can be computed inside ``shard_map`` without a
+    mesh object (which would not be hashable treedef metadata).
+    """
+
+    shape: Tuple[int, ...]                      # global g shape
+    row: Tuple[str, ...] = ()                   # mesh axes on dim -2
+    col: Tuple[str, ...] = ()                   # mesh axes on dim -1
+    lead: Tuple[Tuple[str, ...], ...] = ()      # mesh axes on lead dims
+    axis_sizes: Tuple[Tuple[str, int], ...] = ()
+
+    @property
+    def sharded(self) -> bool:
+        return bool(self.row or self.col or any(self.lead))
+
+    def view(self, ndim: int) -> Tuple[int, ...]:
+        """Global shape of a (possibly scan-sliced) ``ndim``-dim view."""
+        return self.shape[len(self.shape) - ndim:]
+
+    def lead_names(self, n_lead: int) -> Tuple[Tuple[str, ...], ...]:
+        """Mesh axes of the trailing ``n_lead`` lead dims of the view."""
+        pad = n_lead - len(self.lead)
+        if pad > 0:
+            return ((),) * pad + self.lead
+        return self.lead[len(self.lead) - n_lead:]
+
+
+def shard_index(meta: ShardMeta, names: Tuple[str, ...]) -> jax.Array:
+    """Row-major flat shard coordinate along ``names``, from inside the
+    ``shard_map`` body.  Matches the at-rest tile layout produced by
+    ``jax.device_put`` of a ``P(names...)``-sharded dim (major axis first),
+    i.e. the same convention as ``kernels.xbar_update._flat_axis_index``."""
+    sizes = dict(meta.axis_sizes)
+    idx = jnp.zeros((), jnp.int32)
+    for a in names:
+        idx = idx * sizes[a] + jax.lax.axis_index(a).astype(jnp.int32)
+    return idx
+
+
+def combine_partials_exact(q: jax.Array, names: Tuple[str, ...],
+                           axis: int) -> jax.Array:
+    """Ordered partial-sum combinator: reassemble a dim sharded over
+    ``names`` into pinned global order.
+
+    The manual-collective read keeps conductances shard-local and moves
+    only the small per-tile digital ADC accumulators.  This gathers those
+    accumulators along ``axis`` minor-mesh-axis-first (``tiled=True``), so
+    shard blocks concatenate in exactly the at-rest tile order — the
+    caller's subsequent single ``q.sum`` then reduces over the full axis
+    in single-device order, and the collective itself is arithmetic-free
+    (bitwise exact on any mesh shape).  Identity when ``names`` is empty.
+    """
+    for a in reversed(names):
+        # audit: allow RA103 -- ordered partial-sum/output combine: arithmetic-free tiled gather of activation-sized digital accumulators in pinned minor-axis-first order (bit-exact; conductances never transit)
+        q = jax.lax.all_gather(q, a, axis=axis, tiled=True)
+    return q

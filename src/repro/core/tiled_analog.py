@@ -187,12 +187,17 @@ def _symbolic_zero(x: Array) -> SymbolicZero:
                                              jnp.result_type(x)))
 
 
-def _vmm_any(x: Array, g: Array, ref: Array, w_scale, cfg) -> Array:
+def _vmm_any(x: Array, g: Array, ref: Array, w_scale, cfg,
+             meta=None) -> Array:
     """VMM for a plain (K, N) container or an expert-batched (E, K, N)
     stack (x then carries a matching leading dim: one activation batch per
-    expert's array).  The batched read runs with the shard context
-    suspended — each expert's array is read whole on its owner; the
-    GSPMD-exact-reduce pins only apply to tile-sharded single arrays."""
+    expert's array).  With a ``meta`` (exact-mode manual-collective read)
+    the read is shard-local and handles lead dims itself; otherwise the
+    batched read runs with the shard context suspended — each expert's
+    array is read whole on its owner; the GSPMD-exact-reduce pins only
+    apply to tile-sharded single arrays."""
+    if meta is not None:
+        return vmm(x, g, ref, w_scale, cfg, meta=meta)
     if g.ndim == 2:
         return vmm(x, g, ref, w_scale, cfg)
     with suspended_shard_context():
@@ -202,7 +207,10 @@ def _vmm_any(x: Array, g: Array, ref: Array, w_scale, cfg) -> Array:
         return vmm(x, g, ref, w_scale, cfg)
 
 
-def _mvm_any(d: Array, g: Array, ref: Array, w_scale, cfg) -> Array:
+def _mvm_any(d: Array, g: Array, ref: Array, w_scale, cfg,
+             meta=None) -> Array:
+    if meta is not None:
+        return mvm(d, g, ref, w_scale, cfg, meta=meta)
     if g.ndim == 2:
         return mvm(d, g, ref, w_scale, cfg)
     with suspended_shard_context():
@@ -219,31 +227,31 @@ def _quantize_operands_any(x: Array, d: Array, cfg):
                     )(x, d)
 
 
-@partial(jax.custom_vjp, nondiff_argnums=(6,))
+@partial(jax.custom_vjp, nondiff_argnums=(6, 7))
 def _taped_matmul(g: Array, ref: Array, w_scale: Array,
                   x_tape: Array, d_tape: Array, x: Array,
-                  cfg: CrossbarConfig) -> Array:
+                  cfg: CrossbarConfig, meta=None) -> Array:
     del x_tape, d_tape
-    return _vmm_any(x, g, ref, w_scale, cfg)
+    return _vmm_any(x, g, ref, w_scale, cfg, meta)
 
 
-def _taped_fwd(g, ref, w_scale, x_tape, d_tape, x, cfg):
+def _taped_fwd(g, ref, w_scale, x_tape, d_tape, x, cfg, meta):
     # defvjp(..., symbolic_zeros=True) wraps every differentiable primal as
     # CustomVJPPrimal(value, perturbed); the tapes' values are never read.
     del x_tape, d_tape
     g, ref, w_scale, x = g.value, ref.value, w_scale.value, x.value
-    y = _vmm_any(x, g, ref, w_scale, cfg)
+    y = _vmm_any(x, g, ref, w_scale, cfg, meta)
     return y, (g, ref, w_scale, x)
 
 
-def _taped_bwd(cfg, res, dy):
+def _taped_bwd(cfg, meta, res, dy):
     g, ref, w_scale, x = res
     if isinstance(dy, SymbolicZero):  # y unused downstream: nothing flows
         dy = jnp.zeros(dy.aval.shape, dy.aval.dtype)
     dy32 = dy.astype(jnp.float32)
     # Error backprop: transpose read of the SAME (quantised, saturated,
     # ADC'd) conductances the forward pass saw.
-    dx = _mvm_any(dy32, g, ref, w_scale, cfg)
+    dx = _mvm_any(dy32, g, ref, w_scale, cfg, meta)
     # The write drivers' operands, quantised exactly as the hardware does
     # (rows: temporal code, columns: voltage code).  They flow out through
     # the tape leaves; g/ref/w_scale get *symbolic* zero cotangents — the
@@ -270,7 +278,10 @@ def analog_project(p: dict, x: Array, cfg: CrossbarConfig) -> Array:
     apply each projection exactly once per token batch.
     """
     lead = x.shape[:-1]
-    k, n = p["g"].shape
+    meta = p.get("tp_meta")
+    # Exact-mode sharded containers hold local tile blocks; activations and
+    # tapes are globally shaped, so geometry comes from the static meta.
+    k, n = meta.view(2) if meta is not None else p["g"].shape
     xb = x.reshape(-1, k)
     x_tape = p.get("x_tape")
     d_tape = p.get("d_tape")
@@ -278,8 +289,9 @@ def analog_project(p: dict, x: Array, cfg: CrossbarConfig) -> Array:
         x_tape = jnp.zeros((xb.shape[0], k), jnp.float32)
     if d_tape is None:
         d_tape = jnp.zeros((xb.shape[0], n), jnp.float32)
+    # audit: allow RA103 -- ordered partial-sum/output combines of the shard-local read (shardctx.combine_partials_exact, anchored here by the custom_vjp call site): arithmetic-free activation-sized gathers in pinned order; RA107 bounds their compiled byte size
     y = _taped_matmul(effective_g(p, cfg), p["ref"], p["w_scale"], x_tape,
-                      d_tape, xb.astype(jnp.float32), cfg)
+                      d_tape, xb.astype(jnp.float32), cfg, meta)
     return y.reshape(*lead, n).astype(x.dtype)
 
 
@@ -293,7 +305,8 @@ def analog_project_batched(p: dict, x: Array, cfg: CrossbarConfig) -> Array:
     operands and the stack updates as extra layers of the layer-batched
     rank-k write (``core.analog_registry.flatten_lead``).
     """
-    e, k, n = p["g"].shape
+    meta = p.get("tp_meta")
+    e, k, n = meta.view(3) if meta is not None else p["g"].shape
     if x.shape[0] != e or x.shape[-1] != k:
         raise ValueError(f"expert-batched x {x.shape} does not match "
                          f"container {p['g'].shape}")
@@ -303,8 +316,9 @@ def analog_project_batched(p: dict, x: Array, cfg: CrossbarConfig) -> Array:
         x_tape = jnp.zeros(x.shape, jnp.float32)
     if d_tape is None:
         d_tape = jnp.zeros((e, x.shape[1], n), jnp.float32)
+    # audit: allow RA103 -- ordered EP-dispatch/partial-sum combines of the shard-local expert read (shardctx.combine_partials_exact, anchored here by the custom_vjp call site): arithmetic-free capacity-buffer gathers in pinned order; RA107 bounds their compiled byte size
     y = _taped_matmul(effective_g(p, cfg), p["ref"], p["w_scale"], x_tape,
-                      d_tape, x.astype(jnp.float32), cfg)
+                      d_tape, x.astype(jnp.float32), cfg, meta)
     return y.astype(x.dtype)
 
 
@@ -361,8 +375,12 @@ def make_tapes(p: dict, n_tokens) -> dict:
     per-expert ``(capacity,)`` of an expert-batched container (see
     ``core.analog_registry.tape_lead``).
     """
-    k, n = p["g"].shape[-2:]
-    lead = p["g"].shape[:-2]  # scan-stacked containers carry (L, K, N)
+    meta = p.get("tp_meta")
+    # Tapes are replicated operand buffers: size them from the container's
+    # *global* geometry when the container holds local shard blocks.
+    gshape = meta.shape if meta is not None else p["g"].shape
+    k, n = gshape[-2:]
+    lead = gshape[:-2]  # scan-stacked containers carry (L, K, N)
     rows = n_tokens if isinstance(n_tokens, tuple) else (n_tokens,)
     return {"x_tape": jnp.zeros((*lead, *rows, k), jnp.float32),
             "d_tape": jnp.zeros((*lead, *rows, n), jnp.float32)}
@@ -411,7 +429,8 @@ def split_tapes(params, n_tokens: int, tokens_for=None, path=()):
         rows = tokens_for(path, params["g"].shape) if tokens_for \
             else n_tokens
         return (make_tapes(params, rows),
-                {k: params[k] for k in ("g", "ref", "w_scale", "g_carry")
+                {k: params[k]
+                 for k in ("g", "ref", "w_scale", "g_carry", "tp_meta")
                  if k in params})
     if isinstance(params, dict):
         split = {k: split_tapes(v, n_tokens, tokens_for, path + (k,))

@@ -147,9 +147,17 @@ def _chain_read(x: Array, g: Array, g_ref: Array, w_scale: Array,
 
 def _read(x: Array, g: Array, g_ref: Array, w_scale: Array,
           cfg: CrossbarConfig, key: Optional[Array], impl: Optional[str],
-          transpose: bool) -> Array:
-    impl = _resolve_read_impl(cfg, impl)
+          transpose: bool, meta=None) -> Array:
     g = _read_conductance(g, cfg, key)
+    if meta is not None and meta.sharded:
+        # Exact-mode manual-collective path: ``g``/``g_ref`` are this
+        # shard's local tile blocks (we are inside the step's shard_map
+        # body); the shard-local read exchanges only the small digital
+        # accumulators in pinned order — see kernels/xbar_vmm.py.
+        from repro.kernels.xbar_vmm import manual_collective_read
+        return manual_collective_read(x, g, g_ref, w_scale, cfg, meta,
+                                      transpose=transpose)
+    impl = _resolve_read_impl(cfg, impl)
     if impl == "chain":
         return _chain_read(x, g, g_ref, w_scale, cfg, transpose)
     from repro.kernels.xbar_vmm import xbar_fused_read_inline
@@ -160,21 +168,25 @@ def _read(x: Array, g: Array, g_ref: Array, w_scale: Array,
 
 def vmm(x: Array, g: Array, g_ref: Array, w_scale: Array,
         cfg: CrossbarConfig, key: Optional[Array] = None,
-        impl: Optional[str] = None) -> Array:
+        impl: Optional[str] = None, meta=None) -> Array:
     """Analog vector-matrix multiply: y ≈ x @ W for W=(g-g_ref)/w_scale.
 
     ``x``: (..., B, K) float activations; ``g``/``g_ref``: (..., K, N)
     conductances (lead dims for scan-stacked / expert-batched containers).
     ``impl`` overrides ``cfg.read_impl`` (see the module docstring).
+    ``meta`` (a ``shardctx.ShardMeta``) routes to the shard-local
+    manual-collective read when the container is tile-sharded.
     """
-    return _read(x, g, g_ref, w_scale, cfg, key, impl, transpose=False)
+    return _read(x, g, g_ref, w_scale, cfg, key, impl, transpose=False,
+                 meta=meta)
 
 
 def mvm(d: Array, g: Array, g_ref: Array, w_scale: Array,
         cfg: CrossbarConfig, key: Optional[Array] = None,
-        impl: Optional[str] = None) -> Array:
+        impl: Optional[str] = None, meta=None) -> Array:
     """Analog transpose read: y ≈ d @ W.T  (same array, columns driven)."""
-    return _read(d, g, g_ref, w_scale, cfg, key, impl, transpose=True)
+    return _read(d, g, g_ref, w_scale, cfg, key, impl, transpose=True,
+                 meta=meta)
 
 
 def quantize_update_operands(

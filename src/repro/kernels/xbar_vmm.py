@@ -103,7 +103,9 @@ from jax.experimental import pallas as pl
 from repro.core.adc import (_clip, _round, adc_quantize,
                             integrator_saturation, quantize_input)
 from repro.core.crossbar import CrossbarConfig, pad_to_tiles
-from repro.core.shardctx import current_mesh, replicate_for_exact_reduce
+from repro.core.shardctx import (ShardMeta, combine_partials_exact,
+                                 current_mesh, replicate_for_exact_reduce,
+                                 shard_index)
 
 Array = jax.Array
 
@@ -427,6 +429,151 @@ def xbar_fused_read_inline(x: Array, g: Array, ref: Array, w_scale,
     y = _pallas_read(xf, gf, rf, sc, cfg, transpose, block_b,
                      interpret=(impl == "interpret"))
     y = y.reshape(*lead, *y.shape[1:]) if lead else y[0]
+    return y.astype(in_dtype)
+
+
+# --------------------------------------------------------------------------
+# Manual-collective shard-local read (exact mode)
+# --------------------------------------------------------------------------
+
+def manual_collective_read(x: Array, g: Array, ref: Array, w_scale,
+                           cfg: CrossbarConfig, meta: ShardMeta, *,
+                           transpose: bool = False) -> Array:
+    """Shard-local tiled read with ordered partial-sum exchange.
+
+    The exact-mode replacement for gather-then-replay: called from inside
+    the train step's ``shard_map`` body, where ``g``/``ref``/``w_scale``
+    are this shard's *local* tile blocks (``meta`` carries the global
+    geometry and mesh axes) and ``x`` is the full replicated activation.
+    Each shard runs the fused tile pipeline on only the blocks it owns;
+    the only cross-shard traffic is ordered ``all_gather``s of the small
+    digital accumulators — never the conductances — so per-step collective
+    bytes scale with activations instead of parameters.
+
+    Bit-parity with the single-device :func:`_tiled_read_twin` program
+    holds stage by stage:
+
+      * DAC — input quantisation runs on the full replicated ``x`` per
+        matrix (the ``max |x|`` full scale is a global-population
+        statistic), then the integer drive lines are *sliced* to the local
+        reduction range: identical values to the single-device program's
+        corresponding rows.
+      * tiles — each ``rows x cols`` tile is wholly owned by one shard
+        (``_tile_fit`` divisibility), and the per-tile einsum + dynamic
+        integrator range (reduced over batch and in-tile columns only) +
+        ADC see exactly the single-device operands.  The flat-dot fast
+        path is keyed on the *global* reduction-tile count so both
+        programs pick the same structure.
+      * combine — per-tile ADC outputs are integers scaled by the tile's
+        lsb; :func:`core.shardctx.combine_partials_exact` reassembles the
+        reduction-tile axis in at-rest order (arithmetic-free), and the
+        single ``q.sum`` then reduces the full axis in single-device
+        order.  Output columns / expert blocks gather the same way.
+
+    For expert-batched stacks the expert dim of ``x`` is the capacity
+    dispatch buffer: slicing it to the local experts *is* the EP dispatch
+    (each shard reads only its own experts' tiles), and the trailing
+    expert gather is the combine — gather volume drops by the expert
+    count vs gathering every expert's conductances.
+    """
+    in_dtype = x.dtype
+    nlead = g.ndim - 2
+    lead_loc = g.shape[:-2]
+    gview = meta.view(g.ndim)
+    lead_names = meta.lead_names(nlead)
+    red_names = meta.col if transpose else meta.row
+    out_names = meta.row if transpose else meta.col
+    if x.ndim != nlead + 2:
+        raise ValueError(f"x {x.shape} does not match lead dims of local "
+                         f"g {g.shape} (global {gview})")
+    x = x.astype(jnp.float32)
+    g = g.astype(jnp.float32)
+    ref = ref.astype(jnp.float32)
+    w_scale = jnp.broadcast_to(jnp.asarray(w_scale, jnp.float32), lead_loc)
+
+    # DAC: quantise the full replicated activations per matrix.  The
+    # per-matrix full scale stays in its *global* lead shape — it feeds
+    # the trailing rescale, which runs after the output gathers.
+    qfn = lambda xx: quantize_input(xx, cfg.adc)
+    for _ in range(nlead):
+        qfn = jax.vmap(qfn)
+    x_int, x_scale = qfn(x)
+
+    # EP dispatch: slice lead (expert) dims to this shard's block, and
+    # gather the (tiny) per-expert write scales to global lead shape for
+    # the trailing rescale.
+    for d in range(nlead):
+        if not lead_names[d]:
+            continue
+        start = shard_index(meta, lead_names[d]) * lead_loc[d]
+        x_int = jax.lax.dynamic_slice_in_dim(x_int, start, lead_loc[d],
+                                             axis=d)
+        w_scale = combine_partials_exact(w_scale, lead_names[d], axis=d)
+
+    # Slice drive lines to the local reduction range.
+    red_loc = g.shape[-1] if transpose else g.shape[-2]
+    if red_names:
+        start = shard_index(meta, red_names) * red_loc
+        x_int = jax.lax.dynamic_slice_in_dim(x_int, start, red_loc,
+                                             axis=x_int.ndim - 1)
+
+    rows, cols = (cfg.cols, cfg.rows) if transpose else (cfg.rows, cfg.cols)
+    # Global reduction-tile count: pins the twin's fast-path choice so the
+    # local program mirrors the single-device structure.  (A sharded
+    # reduction dim implies multiple global tiles, so the fast path only
+    # ever fires with the reduction unsharded — where local == global.)
+    red_glob = gview[-1] if transpose else gview[-2]
+    gtk = -(-red_glob // rows)
+
+    def _tiles_one(x_i: Array, g2: Array, r2: Array) -> Array:
+        diff = pad_to_tiles(g2 - r2, cfg.rows, cfg.cols)
+        if transpose:
+            diff = diff.T
+        kp, np_ = diff.shape
+        b = x_i.shape[0]
+        if x_i.shape[1] != kp:
+            x_i = jnp.pad(x_i, ((0, 0), (0, kp - x_i.shape[1])))
+        tk, tn = kp // rows, np_ // cols
+        if gtk == 1:
+            q = jnp.dot(x_i.astype(jnp.float32), diff.astype(jnp.float32))
+            q = q.reshape(b, 1, tn, cols)
+        else:
+            xt = x_i.reshape(b, tk, rows)
+            dt = diff.reshape(tk, rows, tn, cols)
+            q = jnp.einsum("btr,trnc->btnc", xt.astype(jnp.float32),
+                           dt.astype(jnp.float32))
+        q, sat = integrator_saturation(q, cfg.adc, n_rows=rows,
+                                       g_max=cfg.device.gmax,
+                                       reduce_axes=(0, 3))
+        return adc_quantize(q, sat, cfg.adc)
+
+    fn = _tiles_one
+    for _ in range(nlead):
+        fn = jax.vmap(fn)
+    q = fn(x_int, g, ref)  # (lead_loc..., B, tk_loc, tn_loc, cols)
+
+    # Ordered combine of the per-tile digital accumulators, then a single
+    # reduce over the full tile axis in single-device order (an unrolled
+    # add chain would FMA-fuse per-compilation; see _tiled_read_twin).
+    tile_axis = nlead + 1
+    q = combine_partials_exact(q, red_names, axis=tile_axis)
+    y = q.sum(axis=tile_axis)
+    y = y.reshape(*y.shape[:-2], y.shape[-2] * cols)
+    # Crop tile padding on an unsharded out dim (a sharded out dim is
+    # tile-divisible, so its local block carries no padding).
+    out_loc = g.shape[-2] if transpose else g.shape[-1]
+    y = y[..., :out_loc]
+    # Combine: gather output columns, then expert blocks, into global order.
+    y = combine_partials_exact(y, out_names, axis=y.ndim - 1)
+    for d in range(nlead - 1, -1, -1):
+        y = combine_partials_exact(y, lead_names[d], axis=d)
+    # Trailing digital rescale, AFTER the gathers: elementwise, so it
+    # commutes with the (arithmetic-free) combines — and placing it here
+    # keeps the multiply adjacent to its downstream consumer exactly as
+    # in the single-device program, so XLA's per-fusion FMA contraction
+    # of ``y * scale + <consumer add>`` makes the same choice in both
+    # lowerings (the bit-parity boundary the module docstring describes).
+    y = y * (x_scale / w_scale)[..., None, None]
     return y.astype(in_dtype)
 
 

@@ -24,7 +24,7 @@ from __future__ import annotations
 
 import dataclasses
 import re
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 _DTYPE_BYTES = {
     "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
@@ -380,3 +380,104 @@ def count_collectives(text: str) -> Dict[str, int]:
     counts = {k: int(v) for k, v in walk("__entry__").items()}
     counts["total"] = sum(counts.values())
     return counts
+
+
+def collective_byte_volume(text: str) -> Dict[str, int]:
+    """Per-collective *operand* byte volume per compiled module.
+
+    Companion to :func:`count_collectives` (same loop multipliers, same
+    async start/done dedup) but accounting what each collective actually
+    moves: the sum of its operand buffer sizes (shape x dtype from the
+    computation's symbol table).  Operand bytes — not result bytes — is
+    the honest measure for a gather: an ``all-gather`` over n shards has
+    a result n times larger than what any device contributes, and the
+    manual-collective exact read is judged precisely on how many bytes
+    each shard must ship.  No ring factors are applied; this is raw
+    payload volume, which is what the mesh-sweep bench and the byte-drop
+    acceptance gate compare across mesh shapes.
+
+    Returns ``{kind: bytes for kind in COLLECTIVES} + {"total": bytes}``.
+    """
+    comps = parse_hlo(text)
+    memo: Dict[str, Dict[str, float]] = {}
+
+    def walk(name: str) -> Dict[str, float]:
+        if name in memo:
+            return memo[name]
+        tot = {k: 0.0 for k in COLLECTIVES}
+        comp = comps.get(name)
+        if comp is None:
+            return tot
+        memo[name] = tot  # guards cycles
+        symtab = {i.name: i.result_type for i in comp.instrs}
+        for ins in comp.instrs:
+            op = ins.opcode
+            if op.endswith("-done"):
+                continue  # payload counted at the matching -start
+            for base in COLLECTIVES:
+                if op == base or op.startswith(base + "-"):
+                    nbytes = sum(_shape_bytes(symtab[o])
+                                 for o in _operand_names(ins.rhs)
+                                 if o in symtab)
+                    if nbytes == 0:
+                        # operands not in this computation's symbol
+                        # table (cross-computation references): fall
+                        # back to the result buffer size.
+                        nbytes = _shape_bytes(ins.result_type)
+                    tot[base] += nbytes
+                    break
+            mult, sub = 1.0, None
+            if op == "while":
+                mb = _BODY_RE.search(ins.rhs)
+                mc = _COND_RE.search(ins.rhs)
+                mt = _TRIP_COUNT_RE.search(ins.rhs)
+                if mb:
+                    sub = mb.group(1)
+                if mt:
+                    mult = float(mt.group(1))
+                elif mc and mc.group(1) in comps:
+                    mult = float(_trip_count(comps[mc.group(1)]))
+            elif op in ("fusion", "call", "conditional", "map"):
+                m = _CALLS_RE.search(ins.rhs)
+                if m:
+                    sub = m.group(1)
+            if sub is not None and sub in comps and sub != name:
+                for k, v in walk(sub).items():
+                    tot[k] += mult * v
+        memo[name] = tot
+        return tot
+
+    volumes = {k: int(v) for k, v in walk("__entry__").items()}
+    volumes["total"] = sum(volumes.values())
+    return volumes
+
+
+def collective_payloads(text: str) -> List[Tuple[str, int]]:
+    """(kind, operand_bytes) of every collective *instance* in the module.
+
+    Flat walk over every computation (no loop multipliers — a while body
+    is visited once), async start/done pairs deduped at the ``-start``.
+    This is the per-instruction view the static auditor's RA107 rule
+    thresholds against: one parameter-sized gather is a finding whether
+    it runs once or inside a scanned layer stack.
+    """
+    comps = parse_hlo(text)
+    out: List[Tuple[str, int]] = []
+    for cname, comp in comps.items():
+        if cname == "__entry__":
+            continue  # alias of the entry computation's real name
+        symtab = {i.name: i.result_type for i in comp.instrs}
+        for ins in comp.instrs:
+            op = ins.opcode
+            if op.endswith("-done"):
+                continue
+            for base in COLLECTIVES:
+                if op == base or op.startswith(base + "-"):
+                    nbytes = sum(_shape_bytes(symtab[o])
+                                 for o in _operand_names(ins.rhs)
+                                 if o in symtab)
+                    if nbytes == 0:
+                        nbytes = _shape_bytes(ins.result_type)
+                    out.append((base, nbytes))
+                    break
+    return out

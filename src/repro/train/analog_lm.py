@@ -44,14 +44,21 @@ Pass ``mesh=`` to run the step sharded (docs/analog_pipeline.md
 §Sharding).  The parallel axis is the container *tile grid*, not the
 batch: conductances/reference arrays shard at whole-tile granularity —
 column-tiles over ``model``, row-tiles over the FSDP axes, flipped for
-row-parallel consumers (``launch/sharding.analog_container_pspec``) — the
-rank-k write runs under ``shard_map`` with shard-invariant counter-PRNG
-seeds (``kernels/xbar_update.xbar_sharded_update``), and activations stay
-replicated so no floating-point reduction ever crosses a shard boundary
-(``core/shardctx.py`` spells out the determinism contract).  A 1-device
-and an N-device run of the same seed therefore produce *bit-identical*
-conductances (tests/test_sharded_analog.py).  Use :meth:`shard_state` to
-lay an initial state out on the mesh.
+row-parallel consumers (``launch/sharding.analog_container_pspec``).
+The whole step body runs under ``shard_map``: the read is shard-local
+(each shard drives only the tile blocks it owns and exchanges ordered
+per-tile ADC partial sums — ``kernels/xbar_vmm.manual_collective_read``;
+conductances never cross a shard boundary), the expert dim of an MoE
+container is an EP dispatch (each shard reads only its own experts'
+rows of the replicated capacity buffer and the combine gathers the
+small output buffers), and the rank-k write updates only the local tile
+block with shard-invariant counter-PRNG seeds.  Activations stay
+replicated, and every cross-shard exchange is an arithmetic-free gather
+in pinned order (``core/shardctx.py`` spells out the determinism
+contract), so a 1-device and an N-device run of the same seed produce
+*bit-identical* conductances (tests/test_sharded_analog.py) while the
+per-step collective bytes scale with activations instead of parameters.
+Use :meth:`shard_state` to lay an initial state out on the mesh.
 """
 from __future__ import annotations
 
@@ -125,8 +132,10 @@ class AnalogTrainStep:
 
     ``mesh`` (optional) runs the step sharded over a device mesh with
     ``data``/``model`` axes: containers split at tile granularity, the
-    rank-k write runs under shard_map, and the result is bit-identical to
-    the single-device step for the same seed (see the module docstring).
+    whole step runs under shard_map with shard-local reads and writes
+    (``read_mode="local"``; ``"gather"`` keeps the legacy
+    gather-then-replay read), and the result is bit-identical to the
+    single-device step for the same seed (see the module docstring).
     The state should be laid out with :meth:`shard_state` first; the batch
     and key are replicated automatically.
     """
@@ -135,7 +144,8 @@ class AnalogTrainStep:
                  interpret: Optional[bool] = None, bits: int = 8,
                  impl: Optional[str] = None, noise_mode: str = "kernel",
                  mesh=None, exact: bool = True,
-                 read_impl: Optional[str] = None):
+                 read_impl: Optional[str] = None,
+                 read_mode: str = "local"):
         if read_impl is not None:
             # Forward/backward read path (kernels/xbar_vmm.READ_IMPLS);
             # rides the config so every jitted consumer routes through it.
@@ -147,6 +157,8 @@ class AnalogTrainStep:
                 f"analog=True, analog_mode={AnalogMode.DEVICE.value!r}")
         if noise_mode not in ("kernel", "host"):
             raise ValueError("noise_mode must be 'kernel' or 'host'")
+        if read_mode not in ("local", "gather"):
+            raise ValueError("read_mode must be 'local' or 'gather'")
         self.cfg = cfg
         self.lr = lr
         self.bits = bits
@@ -157,6 +169,12 @@ class AnalogTrainStep:
         self.noise_mode = noise_mode
         self.mesh = mesh
         self.exact = exact
+        # Exact-mode read dataflow: "local" (default) is the
+        # manual-collective shard-local read — conductances never move,
+        # the shards exchange only ordered partial-sum accumulators;
+        # "gather" is the legacy gather-then-replay path, kept as the A/B
+        # reference for parity tests and collective-byte accounting.
+        self.read_mode = read_mode
         self.cost: Optional[dict] = None
         # With a mesh the jit carries explicit in/out shardings (built at
         # first call, when the state structure is known) so the parameter
@@ -275,23 +293,34 @@ class AnalogTrainStep:
 
         # Sharded + exact (the default contract): this body runs INSIDE
         # shard_map — each device holds its local tile blocks of every
-        # container and executes, after an arithmetic-free all-gather of
-        # the conductances for the read path, literally the single-device
-        # program: same shapes, same ops, no partitioner choices anywhere.
-        # That structural identity — not sharding annotations — is what
-        # makes the sharded step bit-identical to the 1-device step; GSPMD
-        # layout decisions are graph-global and reassociate reductions at
-        # the ulp level even over fully replicated operands.  The rank-k
-        # write below then updates only the local tile block (tapes
-        # sliced, PRNG counters globally offset).  ``exact=False`` skips
-        # the shard_map wrapper and keeps the containers sharded through a
+        # container.  read_mode="local" (default) annotates each container
+        # with a static ShardMeta and the read itself goes shard-local
+        # (kernels/xbar_vmm.manual_collective_read): every shard runs the
+        # fused tile pipeline on only the blocks it owns and the shards
+        # exchange ordered per-tile ADC partial sums — never conductances
+        # — so per-step collective bytes scale with activations instead
+        # of parameters.  Bit-identity to the 1-device step holds because
+        # every cross-shard float reduction is an ordered gather + a
+        # single full-axis reduce in single-device order, and every
+        # tile-local stage sees exactly the single-device operands (the
+        # per-stage argument lives on manual_collective_read's docstring).
+        # read_mode="gather" keeps the legacy gather-then-replay path:
+        # all-gather every container, replay the single-device program,
+        # write the local block (bit-identity by structural identity, at
+        # parameter-sized collective cost).  ``exact=False`` skips the
+        # shard_map wrapper and keeps the containers sharded through a
         # GSPMD read path instead: true tensor-parallel VMM/MVM
         # (activations pinned replicated at every container boundary,
         # cross-tile ADC sums pinned to global order — core/xbar_ops) at
-        # the cost of that ulp-level drift.
+        # the cost of ulp-level drift.  The rank-k write below always
+        # updates only the local tile block (tapes sliced, PRNG counters
+        # globally offset).
         read_params = params
         if self.mesh is not None and self.exact:
-            read_params = self._gather_containers(params, ())
+            if self.read_mode == "local":
+                read_params = self._annotate_containers(params, ())
+            else:
+                read_params = self._gather_containers(params, ())
 
         # Hoist g/ref/w_scale out of the differentiated arguments: the grads
         # tree holds exactly the tape cotangents + digital gradients.  The
@@ -337,11 +366,38 @@ class AnalogTrainStep:
         out["g_rail_frac"] = sum(rail) / len(rail)
         return {"params": new_params, "step": state["step"] + 1}, out
 
+    def _annotate_containers(self, p, path):
+        """Attach a static ``shardctx.ShardMeta`` to each tile-sharded
+        container (read_mode="local").  The meta rides the ``"tp_meta"``
+        key — hashable treedef metadata, so it survives the loss scan's
+        xs slicing and keys the custom-VJP nondiff cache — and routes
+        ``core.tiled_analog`` to the manual-collective shard-local read.
+        Containers the policy left fully replicated are returned
+        untouched and read exactly as on one device."""
+        if is_analog_container(p):
+            specs, gshape = self._cspecs[path]
+            g_spec = specs["g"]
+            lead = tuple(_spec_names(e) for e in g_spec[:-2])
+            row = _spec_names(g_spec[-2])
+            col = _spec_names(g_spec[-1])
+            if not (row or col or any(lead)):
+                return p
+            sizes = tuple((a, int(self.mesh.shape[a]))
+                          for a in self.mesh.axis_names)
+            meta = shardctx.ShardMeta(shape=gshape, row=row, col=col,
+                                      lead=lead, axis_sizes=sizes)
+            return {**p, "tp_meta": meta}
+        if isinstance(p, dict):
+            return {k: self._annotate_containers(v, path + (k,))
+                    for k, v in p.items()}
+        return p
+
     def _gather_containers(self, p, path):
         """Reassemble full conductance/reference/scale arrays from local
-        tile blocks for the read path (inside shard_map).  all_gather
-        moves bits, never adds floats — the gathered array is exactly the
-        single-device array."""
+        tile blocks for the read path (inside shard_map) — the legacy
+        ``read_mode="gather"`` dataflow, kept as the A/B reference for
+        the manual-collective read.  all_gather moves bits, never adds
+        floats — the gathered array is exactly the single-device array."""
         if is_analog_container(p):
             specs = self._cspecs[path][0]
             out = dict(p)
@@ -569,7 +625,8 @@ def make_analog_sgd_step(cfg: ModelConfig, lr: float,
                          bits: int = 8, impl: Optional[str] = None,
                          noise_mode: str = "kernel",
                          mesh=None, exact: bool = True,
-                         read_impl: Optional[str] = None
+                         read_impl: Optional[str] = None,
+                         read_mode: str = "local"
                          ) -> AnalogTrainStep:
     """The analog-SGD training step for a device-mode transformer config.
 
@@ -577,7 +634,11 @@ def make_analog_sgd_step(cfg: ModelConfig, lr: float,
     step sharded over the container tile grid (bit-identical to the
     single-device step when ``exact=True``, the default; see
     :class:`AnalogTrainStep`).  ``read_impl`` overrides the forward /
-    backward read execution path (``cfg.analog_read_impl``)."""
+    backward read execution path (``cfg.analog_read_impl``);
+    ``read_mode`` selects the exact-mode read dataflow ("local" =
+    manual-collective shard-local read, "gather" = legacy
+    gather-then-replay)."""
     return AnalogTrainStep(cfg, lr, interpret=interpret, bits=bits,
                            impl=impl, noise_mode=noise_mode, mesh=mesh,
-                           exact=exact, read_impl=read_impl)
+                           exact=exact, read_impl=read_impl,
+                           read_mode=read_mode)

@@ -174,6 +174,58 @@ def test_ra103_collective_in_shard_map_body():
     assert check_collectives(closed, "fx", whitelist={"psum"}) == []
 
 
+def test_ra103_default_whitelist_flags_conductance_gather():
+    """The known-bad shape the rework exists for: a full-conductance
+    ``all_gather`` inside an exact-mode shard_map body.  The default
+    whitelist is empty now, so the gather is a finding unless its source
+    line carries an inline justification — which this fixture's does
+    not."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from jax.sharding import Mesh, PartitionSpec as P
+    from repro.analysis.jaxpr_lint import (EXACT_MODE_WHITELIST,
+                                           check_collectives)
+    from repro.kernels.xbar_update import _wrap_shard_map
+
+    assert EXACT_MODE_WHITELIST == set()
+    mesh = Mesh(np.array(jax.devices()[:1]), ("model",))
+
+    def gather_then_replay(g_block):  # the legacy read's first move
+        return jax.lax.all_gather(g_block, "model", axis=0, tiled=True)
+
+    fn = _wrap_shard_map(gather_then_replay, mesh, (P("model"),), P())
+    closed = jax.make_jaxpr(fn)(
+        jax.ShapeDtypeStruct((64, 64), jnp.float32))
+    hits = _rules_hit(check_collectives(closed, "fx"), "RA103")
+    assert hits and "all_gather" in hits[0].message
+    # the finding anchors to THIS file (no justification here), so the
+    # repo allowlist must not suppress it
+    active, suppressed = Allowlist(root=str(REPO)).split(hits)
+    assert active and not suppressed
+
+
+def test_ra107_parameter_sized_collective_in_compiled_module():
+    from repro.analysis.jaxpr_lint import check_parameter_sized_collectives
+
+    # 64x256 f32 operand = 65536 bytes: a conductance-block-scale gather.
+    bad = textwrap.dedent("""\
+        HloModule m
+
+        ENTRY %main (p: f32[64,256]) -> f32[128,256] {
+          %p = f32[64,256]{1,0} parameter(0)
+          ROOT %ag = f32[128,256]{1,0} all-gather(%p), channel_id=1, replica_groups=[2,1]<=[2], dimensions={0}
+        }
+        """)
+    hits = _rules_hit(
+        check_parameter_sized_collectives(bad, 65536, "fx"), "RA107")
+    assert hits and "parameter-sized" in hits[0].message
+    # an activation-sized combine (4x256 f32 = 4096 B) stays clean
+    ok = bad.replace("f32[64,256]", "f32[4,256]") \
+            .replace("f32[128,256]", "f32[8,256]")
+    assert check_parameter_sized_collectives(ok, 65536, "fx") == []
+
+
 def test_ra104_missing_donation():
     import jax
     import jax.numpy as jnp
@@ -352,7 +404,7 @@ def test_unanchored_findings_are_never_suppressible():
 
 def test_rule_catalog_is_stable():
     assert set(RULES) >= {
-        "RA101", "RA102", "RA103", "RA104", "RA105", "RA106",
+        "RA101", "RA102", "RA103", "RA104", "RA105", "RA106", "RA107",
         "RA201", "RA202", "RA203", "RA204",
         "RA301", "RA302", "RA303", "RA304",
     }
